@@ -1,0 +1,148 @@
+"""Roofline analysis from dry-run records (§Roofline deliverable).
+
+Per (arch x shape x mesh):
+    compute term    = corrected_FLOPs_per_device / peak_FLOPs
+    memory term     = corrected_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Corrections (measured on this container, DESIGN.md §6):
+  * cost_analysis() is PER-DEVICE;
+  * scan bodies count ONCE -> add (L-1) x single-layer cost (the dry-run
+    compiles the layer program separately and stores it under
+    `layer_cost_per_device`), for FLOPs, bytes and collectives alike.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline --records results/dryrun \
+        --mesh pod1 --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link
+
+
+def corrected_costs(rec: dict) -> dict:
+    flops = rec["cost_per_device"]["flops"]
+    bytes_ = rec["cost_per_device"]["bytes_accessed"]
+    coll = {k: dict(v) for k, v in rec["collectives"].items()}
+    lc = rec.get("layer_cost_per_device")
+    if lc:
+        m = lc["multiplier"]
+        flops += m * lc["flops"]
+        bytes_ += m * lc["bytes_accessed"]
+        for k, v in lc["collectives"].items():
+            coll.setdefault(k, {"count": 0, "bytes": 0})
+            coll[k]["count"] += m * v["count"]
+            coll[k]["bytes"] += m * v["bytes"]
+    return {"flops": flops, "bytes": bytes_, "collectives": coll}
+
+
+AR_TRAFFIC_FACTOR = 2.0  # ring all-reduce moves 2(P-1)/P ~ 2x its output bytes
+
+# The CPU backend rewrites bf16 compute to f32 (verified: every collective
+# and temp tensor in bf16 models lowers as f32, regardless of
+# --xla_allow_excess_precision).  On TPU these run in bf16, so byte-counted
+# terms for bf16 cells are ~2x pessimistic; we apply x0.5 to memory traffic,
+# collective bytes and temp memory of bf16 cells and report it as the
+# calibrated number (raw values stay in the JSON records).
+BF16_CPU_INFLATION = 0.5
+
+
+def roofline_terms(rec: dict) -> dict:
+    c = corrected_costs(rec)
+    dt_factor = BF16_CPU_INFLATION if rec.get("dtype") == "bfloat16" else 1.0
+    coll_bytes = dt_factor * sum(
+        v["bytes"] * (AR_TRAFFIC_FACTOR if k == "all-reduce" else 1.0)
+        for k, v in c["collectives"].items()
+    )
+    t_compute = c["flops"] / PEAK_FLOPS
+    t_memory = dt_factor * c["bytes"] / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    n_dev = 1
+    for v in rec["mesh"].values():
+        n_dev *= v
+    model_flops_dev = rec["model_flops"] / n_dev
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "useful_flops_ratio": model_flops_dev / max(c["flops"], 1.0),
+        # fraction of roofline: useful work per achievable second vs peak
+        "roofline_fraction": (model_flops_dev / PEAK_FLOPS) / max(bound, 1e-12),
+        "peak_gib": (
+            rec["bytes_per_device"]["peak_estimate"]
+            - (1 - dt_factor) * rec["bytes_per_device"]["temps"]
+        ) / 2**30,
+        "coll_bytes_per_dev": coll_bytes,
+        "flops_per_dev": c["flops"],
+        "bytes_per_dev": c["bytes"],
+    }
+
+
+def load_records(records_dir: str, mesh_tag: str) -> list[dict]:
+    out = []
+    for fp in sorted(Path(records_dir).glob(f"*__{mesh_tag}.json")):
+        out.append(json.loads(fp.read_text()))
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| cell | dominant | compute s | memory s | collective s | "
+        "useful/HLO | roofline frac | peak GiB |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['dominant']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.2%} | "
+            f"{r['peak_gib']:.1f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    recs = load_records(args.records, args.mesh)
+    rows = [roofline_terms(r) for r in recs]
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    if args.markdown:
+        print(markdown_table(rows))
+    else:
+        for r in rows:
+            print(
+                f"{r['cell']:44s} {r['dominant']:10s} "
+                f"comp {r['t_compute_s']:.2e} mem {r['t_memory_s']:.2e} "
+                f"coll {r['t_collective_s']:.2e} useful {r['useful_flops_ratio']:.2f} "
+                f"roofline {r['roofline_fraction']:.1%} peak {r['peak_gib']:.1f}GiB"
+            )
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

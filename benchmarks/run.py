@@ -1,0 +1,126 @@
+"""Benchmark entrypoint: one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  1. paper-tables   — §7 l x T error grids (Figures 3/4 reduced-rep)
+  2. cv-bounds      — empirical CV vs Thm 5.1/5.4 bounds across disparity
+  3. multiobjective — Lemma 6.1 union sizes + combined-estimator accuracy
+  4. throughput     — sampler elements/s (oracle vs vectorized vs kernel stage)
+  5. roofline       — summary of the dry-run roofline records (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def section(title):
+    print(f"\n{'='*74}\n== {title}\n{'='*74}")
+
+
+def cv_bounds_bench(rep=60, k=150):
+    from repro.core import continuous as C
+    from repro.core import estimators as E
+    from repro.core import freqfns as F
+    from repro.core import vectorized as V
+
+    rng = np.random.default_rng(11)
+    keys = (rng.zipf(1.3, size=60000) % 20000).astype(np.int64)
+    _, cnts = np.unique(keys, return_counts=True)
+    print(f"{'l':>8} {'T':>7} {'empirical CV':>13} {'Thm5.4 bound':>13} ok")
+    ok_all = True
+    for l, T in [(20.0, 20), (20.0, 5), (20.0, 100), (5.0, 50), (100.0, 10)]:
+        truth = F.exact_statistic(F.cap(T), cnts)
+        es = [
+            E.estimate(V.sample_fixed_k(keys, None, k=k, l=l, salt=900 + r), F.cap(T))
+            for r in range(rep)
+        ]
+        cv = float(np.std(es) / truth)
+        bound = C.cv_bound_one_pass(T, l, 1.0, k)
+        ok = cv <= bound
+        ok_all &= ok
+        print(f"{l:>8g} {T:>7d} {cv:>13.4f} {bound:>13.4f} {'OK' if ok else 'VIOLATION'}")
+    return ok_all
+
+
+def multiobjective_bench():
+    from repro.core import multiobjective as M
+
+    rng = np.random.default_rng(5)
+    keys = (rng.zipf(1.3, size=50000) % 20000).astype(np.int64)
+    n = len(np.unique(keys))
+    k = 64
+    sizes = []
+    for salt in range(6):
+        uk, hx, y, _ = M.per_key_randomness(keys, None, salt=salt)
+        sizes.append(len(M.union_sample_all_l(uk, hx, y, k)))
+    bound = k * math.log(n)
+    print(f"union |S_L| over L=(0,inf): mean {np.mean(sizes):.0f} "
+          f"(k ln n bound = {bound:.0f}, k = {k}, n = {n})  "
+          f"{'OK' if np.mean(sizes) <= bound else 'VIOLATION'}")
+    return np.mean(sizes) <= bound
+
+
+def roofline_summary():
+    from benchmarks.roofline import load_records, roofline_terms
+
+    recs_dir = "results/dryrun_opt" if Path("results/dryrun_opt").exists() else "results/dryrun"
+    if not Path(recs_dir).exists():
+        print("(no dry-run records; run repro.launch.dryrun first)")
+        return True
+    for mesh in ("pod1", "pod2"):
+        rows = [roofline_terms(r) for r in load_records(recs_dir, mesh)]
+        if not rows:
+            continue
+        rows.sort(key=lambda r: -r["roofline_fraction"])
+        print(f"\n-- mesh {mesh} ({len(rows)} cells, from {recs_dir}) — top/bottom by roofline fraction:")
+        for r in rows[:5] + rows[-3:]:
+            print(f"  {r['cell']:44s} {r['dominant']:10s} roofline {r['roofline_fraction']:7.2%} "
+                  f"peak {r['peak_gib']:6.1f} GiB")
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale reps (slow)")
+    ap.add_argument("--skip-tables", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ok = True
+
+    if not args.skip_tables:
+        section("1. Paper §7 tables: l x T error grids (reduced rep)")
+        from benchmarks.paper_tables import main as tables_main
+
+        res = tables_main(alphas=(1.2, 1.5), rep=(200 if args.full else 25), k=100,
+                          full=args.full)
+        ok &= all(v["diag"] and v["bound"] for v in res.values())
+
+    section("2. CV bounds (Thm 5.4) across (l, T) disparity")
+    ok &= cv_bounds_bench(rep=(200 if args.full else 40))
+
+    section("3. Multi-objective samples (Lemma 6.1)")
+    ok &= multiobjective_bench()
+
+    section("4. Sampler throughput")
+    from benchmarks.sampler_throughput import main as tp_main
+
+    tp_main(n=200_000 if not args.full else 2_000_000)
+
+    section("5. Roofline summary (from dry-run records)")
+    roofline_summary()
+
+    print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "
+          f"{'ALL VALIDATIONS PASS' if ok else 'SOME VALIDATIONS FAILED'}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

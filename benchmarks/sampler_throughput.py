@@ -1,0 +1,61 @@
+"""Sampler throughput: sequential oracle vs TPU-native chunked vs kernel path.
+
+The paper's own evaluation skips runtime ("similar to widely applied distinct
+counting algorithms"); for a framework the element-rate IS the product, so we
+measure it: elements/second for the oracle (Algorithm 5), the vectorized
+fixed-k sampler at several chunk sizes, and the capscore elementwise stage
+alone (XLA vs Pallas-interpret is correctness-only on CPU; on TPU the Pallas
+path replaces the XLA scoring inside the chunk step).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import samplers as S
+from repro.core import vectorized as V
+from repro.kernels.capscore.ops import capscore
+
+
+def bench(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warm/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+    return (time.time() - t0) / reps
+
+
+def main(n=200_000, k=256, l=20.0):
+    rng = np.random.default_rng(0)
+    keys = (rng.zipf(1.3, size=n) % 50000).astype(np.int64)
+    rows = []
+
+    t = bench(lambda: S.alg5_fixed_k_continuous(keys[:20000], None, k, l=l, salt=1), reps=1)
+    rows.append(("alg5_sequential_oracle", 20000 / t, t * 1e6 / 20000))
+
+    for chunk in (1024, 4096, 16384):
+        t = bench(V.sample_fixed_k, keys, None, k=k, l=l, salt=1, chunk=chunk)
+        rows.append((f"vectorized_fixed_k_chunk{chunk}", n / t, t * 1e6 / n))
+
+    t = bench(V.sample_two_pass, keys, None, k=k, l=l, salt=1, chunk=4096)
+    rows.append(("vectorized_two_pass", n / t, t * 1e6 / n))
+
+    import jax.numpy as jnp
+
+    kk = jnp.asarray(keys[:131072], jnp.int32)
+    ee = jnp.arange(131072, dtype=jnp.int32)
+    ww = jnp.ones(131072, jnp.float32)
+    t = bench(lambda: capscore(kk, ee, ww, l, 0.01, 3, backend="xla"))
+    rows.append(("capscore_stage_xla", 131072 / t, t * 1e6 / 131072))
+
+    print(f"{'path':36s} {'elements/s':>14s} {'us/element':>12s}")
+    for name, eps, us in rows:
+        print(f"{name:36s} {eps:14.0f} {us:12.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+CPU, with checkpoint/restart and stream statistics — the same launcher that
+lowers the production cells at 512 chips.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import run  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="lm100m")
+    args = ap.parse_args()
+
+    # a ~100M-parameter dense config (registered ad hoc — the assigned archs
+    # are multi-billion scale; this one actually trains on this CPU)
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.models.transformer import TransformerConfig
+
+    cfg100 = TransformerConfig(
+        name="lm100m", n_layers=8, d_model=512, n_heads=8, n_kv=4,
+        d_ff=2048, vocab=32000, dtype=jnp.float32, attention_chunk=128,
+    )
+    registry._MODULES["lm100m"] = type(
+        "M", (), {"ARCH_ID": "lm100m", "FAMILY": "lm",
+                  "full_config": staticmethod(lambda: cfg100),
+                  "smoke_config": staticmethod(lambda: cfg100)},
+    )
+
+    with tempfile.TemporaryDirectory() as d:
+        losses = run(
+            "lm100m", smoke=True, steps=args.steps, batch=8, seq=256,
+            ckpt_dir=d, ckpt_every=100, lr=6e-4, log_every=20,
+        )
+    drop = losses[0] - sum(losses[-10:]) / 10
+    print(f"[example] loss drop over {args.steps} steps: {drop:.3f} "
+          f"({'LEARNING' if drop > 0.3 else 'check hyperparameters'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,418 @@
+"""Cell builders: (architecture x input-shape) -> a lowerable program.
+
+A *cell* packages everything the dry-run and roofline need:
+  * ``fn``          — the jit-able step (train_step / serve_step)
+  * ``in_shapes``   — ShapeDtypeStruct stand-ins (no allocation)
+  * ``in_specs``    — PartitionSpecs for every input
+  * ``out_specs``   — PartitionSpecs for every output
+  * ``model_flops`` — analytic useful FLOPs (6*N*D / 2*N*D convention)
+  * ``scan_correction`` — a single-layer program compiled separately to fix
+    XLA's scan-counts-once FLOP accounting (DESIGN.md §6), as
+    (fn, in_shapes, in_specs, multiplier).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models import recsys as R
+from ..models import schnet as G
+from ..models import transformer as T
+from ..optim import adamw
+
+DP = ("pod", "data")  # batch axes (pod collapses out on the single-pod mesh)
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    kind: str
+    fn: Callable
+    in_shapes: tuple
+    in_specs: tuple
+    out_specs: Any
+    model_flops: float
+    scan_correction: tuple | None = None
+    donate: tuple = ()
+    dtype: str = "float32"
+    notes: str = ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(init_fn):
+    """Shape-evaluate an init function (no allocation)."""
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# LM transformer cells
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_model_flops(cfg: T.TransformerConfig, kind: str, batch: int, seq: int) -> float:
+    # 6*N*D with N = active params participating in matmuls: the embedding
+    # table is a gather (0 flops), so it is excluded; the output head counts.
+    n = cfg.n_active_params - cfg.vocab * cfg.d_model
+    tokens = batch * seq
+    if kind == "train":
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one token per sequence + attention over the cache
+    attn = 4.0 * cfg.n_layers * seq * cfg.n_kv * cfg.head_dim * batch
+    return 2.0 * n * batch + attn
+
+
+def build_lm_cell(cfg: T.TransformerConfig, shape_name: str, opt_cfg=None) -> CellProgram:
+    sh = LM_SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    pspecs = T.param_specs(cfg)
+    params_sh = abstract_params(lambda k: T.init_params(k, cfg))
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    if sh["kind"] == "train":
+        opt_sh = jax.eval_shape(adamw.init_state, params_sh)
+        opt_specs = adamw.zero1_specs(params_sh, pspecs, data_axes=("data",), data_size=16)
+
+        def train_step(params, opt_state, tokens, labels):
+            loss, grads = jax.value_and_grad(T.loss_fn)(params, cfg, tokens, labels)
+            params, opt_state, gnorm = adamw.update(opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss, gnorm
+
+        # single-layer fwd+bwd for the scan correction
+        def layer_step(lp, x):
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.float32), (x.shape[0], S)
+            )
+
+            def lf(lp_, x_):
+                y, aux = T._layer_fwd(cfg, lp_, x_, positions)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            return jax.grad(lf, argnums=(0, 1))(lp, x)
+
+        layer_sh = jax.tree.map(lambda a: sds(a.shape[1:], a.dtype), params_sh["layers"])
+        layer_sp = jax.tree.map(lambda s: P(*s[1:]), pspecs["layers"])
+        x_sh = sds((B, S, cfg.d_model), cfg.dtype)
+        x_sp = P(DP, None, None)
+
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}", kind="train",
+            fn=functools.partial(train_step),
+            in_shapes=(params_sh, opt_sh, sds((B, S), jnp.int32), sds((B, S), jnp.int32)),
+            in_specs=(pspecs, opt_specs, P(DP, None), P(DP, None)),
+            out_specs=(pspecs, opt_specs, P(), P()),
+            donate=(0, 1),
+            dtype=str(jnp.dtype(cfg.dtype)),
+            model_flops=lm_model_flops(cfg, "train", B, S),
+            scan_correction=(
+                layer_step, (layer_sh, x_sh), (layer_sp, x_sp), cfg.n_layers - 1,
+            ),
+        )
+
+    if sh["kind"] == "prefill":
+        cache_spec = (P(None, "data", "model", None, None),) * 2
+
+        def prefill_step(params, tokens):
+            return T.prefill(params, cfg, tokens)
+
+        def layer_prefill(lp, x):
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.float32), (x.shape[0], S))
+            return T._layer_fwd(cfg, lp, x, positions)[0]
+
+        params_lsh = jax.tree.map(lambda a: sds(a.shape[1:], a.dtype), params_sh["layers"])
+        layer_sp = jax.tree.map(lambda s: P(*s[1:]), pspecs["layers"])
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}", kind="serve",
+            fn=prefill_step,
+            in_shapes=(params_sh, sds((B, S), jnp.int32)),
+            in_specs=(pspecs, P(DP, None)),
+            out_specs=(P(DP, "model"), cache_spec),
+            dtype=str(jnp.dtype(cfg.dtype)),
+            model_flops=lm_model_flops(cfg, "prefill", B, S),
+            scan_correction=(
+                layer_prefill,
+                (params_lsh, sds((B, S, cfg.d_model), cfg.dtype)),
+                (layer_sp, P(DP, None, None)),
+                cfg.n_layers - 1,
+            ),
+        )
+
+    # decode
+    C = S
+    cache_sh = tuple(
+        sds((cfg.n_layers, B, C, cfg.n_kv, cfg.head_dim), cfg.dtype) for _ in range(2)
+    )
+    if B == 1:
+        cache_sp = (P(None, None, DP + ("model",), None, None),) * 2
+        tok_sp = P(None)
+    else:
+        cache_sp = (P(None, DP, "model", None, None),) * 2
+        tok_sp = P(DP)
+
+    def decode(params, ck, cv, token, pos):
+        logits, (ck2, cv2) = T.decode_step(params, cfg, token, (ck, cv), pos)
+        return logits, ck2, cv2
+
+    def layer_decode(lp, ck, cv, x, pos):
+        from ..layers.attention import attention_decode
+        from ..layers.common import rms_norm, swiglu
+        from ..layers.moe import moe_apply_dense
+
+        h, (ck2, cv2) = attention_decode(
+            lp["attn"], cfg.attn_cfg(), rms_norm(x, lp["ln1"]), (ck, cv), pos, None
+        )
+        x = x + h
+        z = rms_norm(x, lp["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_apply_dense(lp["moe"], cfg.moe, z)
+        else:
+            y = swiglu(z, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        return x + y, ck2, cv2
+
+    params_lsh = jax.tree.map(lambda a: sds(a.shape[1:], a.dtype), params_sh["layers"])
+    layer_sp = jax.tree.map(lambda s: P(*s[1:]), pspecs["layers"])
+    lcache_sh = sds((B, C, cfg.n_kv, cfg.head_dim), cfg.dtype)
+    lcache_sp = P(*cache_sp[0][1:])
+    return CellProgram(
+        name=f"{cfg.name}:{shape_name}", kind="serve",
+        fn=decode,
+        in_shapes=(params_sh, *cache_sh, sds((B,), jnp.int32), sds((B,), jnp.int32)),
+        in_specs=(pspecs, *cache_sp, tok_sp, tok_sp),
+        out_specs=(P(tok_sp[0] if B > 1 else None, "model"), *cache_sp),
+        donate=(1, 2),
+        dtype=str(jnp.dtype(cfg.dtype)),
+        model_flops=lm_model_flops(cfg, "decode", B, S),
+        scan_correction=(
+            layer_decode,
+            (params_lsh, lcache_sh, lcache_sh,
+             sds((B, 1, cfg.d_model), cfg.dtype), sds((B,), jnp.int32)),
+            (layer_sp, lcache_sp, lcache_sp, P(tok_sp[0], None, None), tok_sp),
+            cfg.n_layers - 1,
+        ),
+        notes="long-context decode is O(seq) per token (sub-quadratic); "
+        "prefill at this length is out of scope for full-attention archs"
+        if shape_name == "long_500k" else "",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN (SchNet) cells
+# ---------------------------------------------------------------------------
+
+# sizes are the assigned shapes padded up to multiples of 512 (device count)
+# so every axis shards cleanly; the data pipeline pads identically.
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=3072, n_edges=10752, d_feat=1433, task="node", n_graphs=1,
+                          true=(2708, 10556)),
+    "minibatch_lg": dict(n_nodes=176128, n_edges=169984, d_feat=602, task="node", n_graphs=1,
+                         true=(176128, 169984)),
+    "ogb_products": dict(n_nodes=2449408, n_edges=61865984, d_feat=100, task="node", n_graphs=1,
+                         true=(2449029, 61859140)),
+    "molecule": dict(n_nodes=4096, n_edges=8192, d_feat=None, task="graph", n_graphs=128,
+                     true=(3840, 8192)),
+}
+
+
+def gnn_model_flops(cfg: G.SchNetConfig, sh) -> float:
+    d, r = cfg.d_hidden, cfg.n_rbf
+    E, N = sh["n_edges"], sh["n_nodes"]
+    per_iter = 2.0 * E * r * d + 2.0 * E * d * d + 2.0 * E * d + 2.0 * N * d * d * 2
+    inp = 2.0 * N * (sh["d_feat"] or 1) * d
+    fwd = inp + cfg.n_interactions * per_iter + 2.0 * N * d * (d // 2)
+    return 3.0 * fwd  # train: fwd + ~2x bwd
+
+
+def build_gnn_cell(cfg: G.SchNetConfig, shape_name: str, opt_cfg=None) -> CellProgram:
+    sh = GNN_SHAPES[shape_name]
+    cfg = dataclasses.replace(cfg, d_node_feat=sh["d_feat"])
+    params_sh = abstract_params(lambda k: G.init_params(k, cfg))
+    pspecs = G.param_specs(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    opt_sh = jax.eval_shape(adamw.init_state, params_sh)
+    opt_specs = adamw.zero1_specs(params_sh, pspecs, data_size=1)
+    N, E = sh["n_nodes"], sh["n_edges"]
+    n_graphs = sh["n_graphs"]
+
+    node_in = sds((N, sh["d_feat"]), jnp.float32) if sh["d_feat"] else sds((N,), jnp.int32)
+    batch_sh = dict(
+        node_input=node_in,
+        edge_src=sds((E,), jnp.int32),
+        edge_dst=sds((E,), jnp.int32),
+        edge_dist=sds((E,), jnp.float32),
+        graph_ids=sds((N,), jnp.int32),
+        targets=sds((n_graphs if sh["task"] == "graph" else N,), jnp.float32),
+    )
+    edge_sp = P(DP + ("model",)) if cfg.edge_shard_model else P(DP)
+    batch_sp = dict(
+        node_input=P(DP, None) if sh["d_feat"] else P(DP),
+        edge_src=edge_sp, edge_dst=edge_sp, edge_dist=edge_sp,
+        graph_ids=P(DP),
+        targets=P() if sh["task"] == "graph" else P(DP),
+    )
+
+    def loss_fn(params, batch):
+        n_out = n_graphs if sh["task"] == "graph" else None
+        pred = G.forward(params, cfg, batch, n_out)
+        return jnp.mean((pred.astype(jnp.float32) - batch["targets"].astype(jnp.float32)) ** 2)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = adamw.update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss, gnorm
+
+    return CellProgram(
+        name=f"schnet:{shape_name}", kind="train",
+        fn=train_step,
+        in_shapes=(params_sh, opt_sh, batch_sh),
+        in_specs=(pspecs, opt_specs, batch_sp),
+        out_specs=(pspecs, opt_specs, P(), P()),
+        donate=(0, 1),
+        model_flops=gnn_model_flops(cfg, sh),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    # 1M candidates padded to 2^20 so the candidate axis shards over 512
+    # devices (the data pipeline pads with repeated ids; scores of pads are
+    # discarded host-side)
+    "retrieval_cand": dict(kind="retrieve", batch=1, n_candidates=1_048_576),
+}
+
+
+def _recsys_batch(model_cfg, B, with_label=True):
+    S = model_cfg.seq_len
+    b = {
+        "hist": sds((B, S), jnp.int32),
+        "target": sds((B,), jnp.int32),
+        "user_id": sds((B,), jnp.int32),
+    }
+    sp = {"hist": P(DP, None), "target": P(DP), "user_id": P(DP)}
+    if with_label:
+        b["label"] = sds((B,), jnp.float32)
+        sp["label"] = P(DP)
+    return b, sp
+
+
+def build_recsys_cell(arch: str, model_cfg, shape_name: str, opt_cfg=None) -> CellProgram:
+    sh = RECSYS_SHAPES[shape_name]
+    B = sh["batch"]
+    init, specs, loss, serve = {
+        "din": (R.din_init, R.din_specs, R.din_loss, R.din_forward),
+        "bst": (R.bst_init, R.bst_specs, R.bst_loss, R.bst_forward),
+        "mind": (R.mind_init, R.mind_specs, R.mind_loss, None),
+        "two-tower-retrieval": (R.twotower_init, R.twotower_specs, R.twotower_loss, R.twotower_serve),
+    }[arch]
+    params_sh = abstract_params(lambda k: init(k, model_cfg))
+    pspecs = specs(model_cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    d = model_cfg.embed_dim
+    S = model_cfg.seq_len
+    mlp_flops = {
+        "din": 2.0 * (S * 4 * d * 80 + S * 80 * 40 + 3 * d * 200 + 200 * 80),
+        "bst": 2.0 * (S * 4 * d * d + 2 * S * S * d + 2 * S * d * 128 + S * d * 1024 + 1024 * 512 + 512 * 256),
+        "mind": 2.0 * (S * d * d + 3 * (S * 4 * d + 4 * d)) ,
+        "two-tower-retrieval": 2.0 * (2 * d * 1024 + 1024 * 512 + 512 * 256 + d * 1024),
+    }[arch]
+
+    if sh["kind"] == "train":
+        opt_sh = jax.eval_shape(adamw.init_state, params_sh)
+        opt_specs = adamw.zero1_specs(params_sh, pspecs, data_size=1)
+        batch_sh, batch_sp = _recsys_batch(model_cfg, B)
+
+        def train_step(params, opt_state, batch):
+            lv, grads = jax.value_and_grad(loss)(params, model_cfg, batch)
+            params, opt_state, gnorm = adamw.update(opt_cfg, params, grads, opt_state)
+            return params, opt_state, lv, gnorm
+
+        extra = 2.0 * B * B * 256 if arch in ("two-tower-retrieval", "mind") else 0.0
+        return CellProgram(
+            name=f"{arch}:{shape_name}", kind="train",
+            fn=train_step,
+            in_shapes=(params_sh, opt_sh, batch_sh),
+            in_specs=(pspecs, opt_specs, batch_sp),
+            out_specs=(pspecs, opt_specs, P(), P()),
+            donate=(0, 1),
+            model_flops=3.0 * B * mlp_flops + 3.0 * extra,
+        )
+
+    if sh["kind"] == "serve":
+        batch_sh, batch_sp = _recsys_batch(model_cfg, B, with_label=False)
+        serve_fn = serve if serve is not None else R.mind_point_serve
+
+        def serve_step(params, batch):
+            return serve_fn(params, model_cfg, batch)
+
+        out_sp = P(DP)
+        return CellProgram(
+            name=f"{arch}:{shape_name}", kind="serve",
+            fn=serve_step,
+            in_shapes=(params_sh, batch_sh),
+            in_specs=(pspecs, batch_sp),
+            out_specs=out_sp,
+            model_flops=B * mlp_flops,
+        )
+
+    # retrieval: one query against n_candidates
+    NC = sh["n_candidates"]
+    batch_sh = {
+        "hist": sds((1, S), jnp.int32),
+        "user_id": sds((1,), jnp.int32),
+        "candidates": sds((NC,), jnp.int32),
+    }
+    batch_sp = {"hist": P(None, None), "user_id": P(None), "candidates": P(DP + ("model",))}
+
+    if arch == "two-tower-retrieval":
+        def retrieve(params, batch):
+            return R.twotower_retrieve(params, model_cfg, batch)
+        flops = NC * (2.0 * d * 1024 + 1024 * 512 + 512 * 256) + 2.0 * NC * 256
+        out_sp = (P(None), P(None))
+    elif arch == "mind":
+        def retrieve(params, batch):
+            return R.mind_serve(params, model_cfg, batch)
+        flops = 2.0 * NC * model_cfg.n_interests * d
+        out_sp = P(None, DP + ("model",))
+    else:
+        # DIN/BST score each candidate with the full interaction tower
+        def retrieve(params, batch):
+            bb = {
+                "hist": jnp.broadcast_to(batch["hist"], (NC, S)),
+                "target": batch["candidates"],
+                "user_id": jnp.broadcast_to(batch["user_id"], (NC,)),
+            }
+            return serve(params, model_cfg, bb)
+        flops = NC * mlp_flops
+        out_sp = P(DP + ("model",))
+
+    return CellProgram(
+        name=f"{arch}:{shape_name}", kind="serve",
+        fn=retrieve,
+        in_shapes=(params_sh, batch_sh),
+        in_specs=(pspecs, batch_sp),
+        out_specs=out_sp,
+        model_flops=flops,
+    )

@@ -1,0 +1,29 @@
+"""moonshot-v1-16b-a3b [hf:moonshotai/Moonlight-16B-A3B]:
+48L d_model=2048 16H (kv=16) d_ff=1408 vocab=163840, MoE 64e top-6."""
+import jax.numpy as jnp
+
+from ..layers.moe import MoEConfig
+from ..models.transformer import TransformerConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+FAMILY = "lm"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=48, d_model=2048, n_heads=16, n_kv=16,
+        d_ff=1408, vocab=163840, d_head=128,
+        moe=MoEConfig(d_model=2048, d_ff=1408, n_experts=64, top_k=6,
+                      capacity_factor=1.25, group_size=1024),
+        dtype=jnp.bfloat16,
+        sequence_parallel=True,  # §Perf (save_collectives refuted: A3)
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=4,
+        d_ff=48, vocab=512, d_head=16,
+        moe=MoEConfig(d_model=64, d_ff=48, n_experts=8, top_k=3, group_size=64),
+        dtype=jnp.float32, attention_chunk=64,
+    )

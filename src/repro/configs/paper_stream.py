@@ -1,0 +1,22 @@
+"""The paper's own workload: SH_l sampling over Zipf streams (§7 setup)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperStreamConfig:
+    name: str = "paper-stream"
+    n_elements: int = 100_000
+    zipf_alpha: float = 1.2
+    n_keys: int = 50_000
+    k: int = 100
+    ls: tuple = (1.0, 5.0, 20.0, 50.0, 100.0, 1000.0, 10000.0)
+    chunk: int = 2048
+
+
+def full_config() -> PaperStreamConfig:
+    return PaperStreamConfig()
+
+
+def smoke_config() -> PaperStreamConfig:
+    return PaperStreamConfig(name="paper-stream-smoke", n_elements=5000, n_keys=1000,
+                             k=32, ls=(1.0, 20.0), chunk=256)

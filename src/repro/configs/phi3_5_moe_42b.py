@@ -1,0 +1,29 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct]:
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16e top-2."""
+import jax.numpy as jnp
+
+from ..layers.moe import MoEConfig
+from ..models.transformer import TransformerConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+FAMILY = "lm"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+        d_ff=6400, vocab=32064,
+        moe=MoEConfig(d_model=4096, d_ff=6400, n_experts=16, top_k=2,
+                      capacity_factor=1.25, group_size=2048),
+        dtype=jnp.bfloat16,
+        sequence_parallel=True,  # §Perf (save_collectives refuted: A3)
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        d_ff=96, vocab=512,
+        moe=MoEConfig(d_model=64, d_ff=96, n_experts=4, top_k=2, group_size=64),
+        dtype=jnp.float32, attention_chunk=64,
+    )

@@ -1,0 +1,86 @@
+"""Architecture registry: --arch <id> -> configs, shapes, cell programs."""
+from __future__ import annotations
+
+from typing import Any
+
+from . import (
+    bst,
+    codeqwen1_5_7b,
+    din,
+    mind,
+    moonshot_v1_16b,
+    phi3_5_moe_42b,
+    qwen3_8b,
+    schnet,
+    two_tower_retrieval,
+    yi_6b,
+)
+from .builders import (
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    CellProgram,
+    build_gnn_cell,
+    build_lm_cell,
+    build_recsys_cell,
+)
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (
+        phi3_5_moe_42b, moonshot_v1_16b, yi_6b, codeqwen1_5_7b, qwen3_8b,
+        schnet, mind, bst, din, two_tower_retrieval,
+    )
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+_FAMILY_SHAPES = {
+    "lm": tuple(LM_SHAPES),
+    "gnn": tuple(GNN_SHAPES),
+    "recsys": tuple(RECSYS_SHAPES),
+}
+
+
+def family(arch_id: str) -> str:
+    return _MODULES[arch_id].FAMILY
+
+
+def shapes_for(arch_id: str) -> tuple[str, ...]:
+    return _FAMILY_SHAPES[family(arch_id)]
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> Any:
+    m = _MODULES[arch_id]
+    return m.smoke_config() if smoke else m.full_config()
+
+
+def build_cell(arch_id: str, shape_name: str, *, smoke: bool = False,
+               overrides: dict | None = None) -> CellProgram:
+    """overrides: dataclasses.replace kwargs applied to the model config
+    (supports nested "moe.<field>" keys) — used by the §Perf hillclimb to
+    lower A/B variants of a cell."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch_id, smoke=smoke)
+    if overrides:
+        plain = {k: v for k, v in overrides.items() if "." not in k}
+        moe_kw = {k.split(".", 1)[1]: v for k, v in overrides.items() if k.startswith("moe.")}
+        if moe_kw and getattr(cfg, "moe", None) is not None:
+            plain["moe"] = _dc.replace(cfg.moe, **moe_kw)
+        cfg = _dc.replace(cfg, **plain)
+    fam = family(arch_id)
+    if fam == "lm":
+        return build_lm_cell(cfg, shape_name)
+    if fam == "gnn":
+        return build_gnn_cell(cfg, shape_name)
+    return build_recsys_cell(arch_id, cfg, shape_name)
+
+
+def all_cells():
+    """All 40 (arch x shape) cell ids."""
+    out = []
+    for a in ARCH_IDS:
+        for s in shapes_for(a):
+            out.append((a, s))
+    return out

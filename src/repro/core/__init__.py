@@ -1,0 +1,15 @@
+"""capstream core: the paper's sampling framework.
+
+Public API:
+    freqfns      — f(w) statistics (cap_T, distinct, sum, moments)
+    samplers     — sequential oracles (Algorithms 1-5, paper-faithful)
+    vectorized   — TPU-native chunked samplers (jit/scan/shard-ready)
+    discrete     — SH_l discrete-spectrum estimator machinery (§4)
+    continuous   — SH_l continuous-spectrum machinery (§5)
+    estimators   — unified Qhat(f, H) over any SampleResult
+    multiobjective — coordinated multi-l samples (§6)
+    distributed  — shard_map samplers + mergeable-state collectives
+"""
+from . import continuous, discrete, estimators, freqfns, hashing, multiobjective, samplers, segments, vectorized  # noqa: F401
+from .freqfns import cap, distinct, exact_statistic, moment, total  # noqa: F401
+from .samplers import SampleResult  # noqa: F401

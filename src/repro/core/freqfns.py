@@ -1,0 +1,94 @@
+"""Frequency statistics functions f(w) — the query side of Q(f, H) (eq. 1).
+
+Each ``FreqFn`` carries the function and its a.e.-derivative (needed by the
+continuous-spectrum estimator, Thm 5.3: beta(c) = f(c)/min(1, l*tau) + f'(c)/tau).
+
+All standard statistics from the paper are provided:
+  * ``cap(T)``      cap_T(w) = min(w, T)        (frequency cap — the headline)
+  * ``distinct()``  cap_1 under unit weights    (L0)
+  * ``total()``     f(w) = w                    (Sum / L1)
+  * ``moment(p)``   f(w) = w**p                 (frequency moments)
+  * ``log1p()``     f(w) = log(1+w)             (a smooth concave example)
+  * ``threshold(T)``f(w) = 1[w >= T]            (monotone but discontinuous —
+                       supported by the discrete estimator; the continuous
+                       estimator requires a.e.-differentiability and treats it
+                       as a step, exercised in tests for bias behaviour)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqFn:
+    name: str
+    f: Callable[[np.ndarray], np.ndarray]
+    fprime: Callable[[np.ndarray], np.ndarray]
+
+    def __call__(self, w):
+        return self.f(w)
+
+    def table(self, n: int) -> np.ndarray:
+        """f_i = f(i) for i = 0..n (discrete-spectrum coefficient form)."""
+        return self.f(np.arange(n + 1, dtype=np.float64))
+
+
+def cap(T: float) -> FreqFn:
+    return FreqFn(
+        name=f"cap_{T:g}",
+        f=lambda w: np.minimum(np.asarray(w, dtype=np.float64), T),
+        fprime=lambda w: (np.asarray(w, dtype=np.float64) < T).astype(np.float64),
+    )
+
+
+def distinct() -> FreqFn:
+    # For unit weights, distinct == cap_1.  Defined directly as 1[w > 0].
+    return FreqFn(
+        name="distinct",
+        f=lambda w: (np.asarray(w, dtype=np.float64) > 0).astype(np.float64),
+        fprime=lambda w: np.zeros_like(np.asarray(w, dtype=np.float64)),
+    )
+
+
+def total() -> FreqFn:
+    return FreqFn(
+        name="sum",
+        f=lambda w: np.asarray(w, dtype=np.float64),
+        fprime=lambda w: np.ones_like(np.asarray(w, dtype=np.float64)),
+    )
+
+
+def moment(p: float) -> FreqFn:
+    return FreqFn(
+        name=f"moment_{p:g}",
+        f=lambda w: np.asarray(w, dtype=np.float64) ** p,
+        fprime=lambda w: p * np.asarray(w, dtype=np.float64) ** (p - 1),
+    )
+
+
+def log1p() -> FreqFn:
+    return FreqFn(
+        name="log1p",
+        f=lambda w: np.log1p(np.asarray(w, dtype=np.float64)),
+        fprime=lambda w: 1.0 / (1.0 + np.asarray(w, dtype=np.float64)),
+    )
+
+
+def threshold(T: float) -> FreqFn:
+    return FreqFn(
+        name=f"thresh_{T:g}",
+        f=lambda w: (np.asarray(w, dtype=np.float64) >= T).astype(np.float64),
+        fprime=lambda w: np.zeros_like(np.asarray(w, dtype=np.float64)),
+    )
+
+
+def exact_statistic(fn: FreqFn, weights: np.ndarray, segment: np.ndarray | None = None) -> float:
+    """Ground-truth Q(f, H) from the aggregated view (for tests/benchmarks)."""
+    w = np.asarray(weights, dtype=np.float64)
+    vals = fn(w)
+    if segment is not None:
+        vals = vals[np.asarray(segment)]
+    return float(np.sum(vals))

@@ -1,0 +1,92 @@
+"""Counter-based stateless hashing: the randomness substrate of every sampler.
+
+The paper assumes "perfectly random numbers and hash functions" (§3.4).  We
+realize that with splittable integer hashing so that
+
+* the score of an element is a pure function of ``(salt, key, element_id)`` —
+  reproducible across stream shards, restarts and the sequential/vectorized
+  implementations (this is what makes the fixed-threshold equivalence tests
+  *exact*, not statistical);
+* per-key randomness (``Hash(x)`` / ``KeyBase(x)``) is a pure function of
+  ``(salt, key)``.
+
+Both numpy (host oracle) and jax.numpy (device) variants are provided and are
+bit-identical: they share the same uint32 mixing constants (Murmur3-style
+avalanche finalizer, strengthened per splitmix32).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+_C1 = np.uint32(0x7FEB352D)
+_C2 = np.uint32(0x846CA68B)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+# ---------------------------------------------------------------------------
+# numpy variants (host / oracle)
+# ---------------------------------------------------------------------------
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """Avalanche-mix a uint32 array (splitmix32 finalizer)."""
+    x = np.array(x, dtype=np.uint32, copy=True)  # never mutate the caller
+    x ^= x >> np.uint32(16)
+    x = (x * _C1).astype(np.uint32)
+    x ^= x >> np.uint32(15)
+    x = (x * _C2).astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def hash_combine_np(*parts) -> np.ndarray:
+    """Hash a tuple of int arrays into uint32 (order-sensitive)."""
+    h = np.uint32(0x243F6A88)  # pi fractional bits
+    for p in parts:
+        p32 = np.asarray(p).astype(np.uint32)
+        h = mix32_np(h ^ (p32 + _GOLDEN + (h << np.uint32(6)) + (h >> np.uint32(2))))
+    return h
+
+
+def uniform01_np(h: np.ndarray) -> np.ndarray:
+    """uint32 -> float64 in (0, 1): (h + 0.5) / 2^32."""
+    return (np.asarray(h, dtype=np.uint64).astype(np.float64) + 0.5) / 4294967296.0
+
+
+# ---------------------------------------------------------------------------
+# jax variants (device) — bit-identical mixing
+# ---------------------------------------------------------------------------
+
+
+def mix32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 15)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_combine(*parts):
+    h = jnp.uint32(0x243F6A88)
+    for p in parts:
+        p32 = jnp.asarray(p).astype(jnp.uint32)
+        h = mix32(h ^ (p32 + _GOLDEN + (h << 6) + (h >> 2)))
+    return h
+
+
+def uniform01(h):
+    """uint32 -> float32 in (0,1).  Uses the top 24 bits for an exact float."""
+    return ((h >> 8).astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 16777216.0)
+
+
+def uniform01_f64_like(h):
+    """Match uniform01_np semantics in float32 (for cross-checks)."""
+    return (h.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 4294967296.0)
+
+
+def exp_from_u(u, rate):
+    """Exp[rate] sample from a uniform: -log(1-u)/rate (numpy or jnp)."""
+    xp = jnp if isinstance(u, jnp.ndarray) else np
+    return -xp.log1p(-u) / rate

@@ -1,0 +1,174 @@
+"""Multi-objective samples (paper §6): one coordinated sample for all cap_T.
+
+Coordination (§6.1): each key's randomness is the pair (Hash(x), y_x) with
+y_x ~ Exp[w_x] the min over its elements of the Exp[w] score components.  The
+SH_l seed for ANY l is then
+
+    seed_l(x) = Hash(x)/l   if y_x <= 1/l   else   y_x .
+
+S_l = bottom-k keys by seed_l; tau_l = (k+1)-smallest seed_l.  The union
+S_L = U_l S_l over ALL l in (0, inf) has E|S_L| <= k ln n (Lemma 6.1): a key
+is in some S_l iff its Hash rank within the y_x-order prefix is <= k.
+
+Estimation (§6.2, Lemma 6.2): with fixed per-key inclusion thresholds
+{tau_l^{-x}}, the combined inclusion probability is
+
+    Phi(w_x) = P_{y~Exp[w_x], h~U[0,1]} [ exists l: y < max(tau_l^{-x}, 1/l)
+                                           and  h < l * tau_l^{-x} ]
+
+i.e. the (Exp x Uniform)-measure of a union of axis-aligned rectangles — we
+integrate the upper staircase envelope exactly.
+
+This module implements the finite-grid variant (l in a geometric grid, the
+deployment recommendation at the top of §6) on top of the 2-pass machinery;
+`union_sample_all_l` also realizes the full L = (0, inf) union for the
+Lemma 6.1 size experiments.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from . import hashing as H
+from .freqfns import FreqFn
+from .samplers import SALT_ELEM, SALT_KEYBASE, SampleResult
+
+
+def per_key_randomness(keys_stream, weights_stream, salt: int = 0):
+    """Aggregate the coordinated per-key randomness (Hash(x), y_x) and exact
+    weights from an unaggregated stream (vectorized host implementation;
+    the device path reuses core.vectorized pass-1 with kind='continuous')."""
+    keys_stream = np.asarray(keys_stream)
+    n = len(keys_stream)
+    w = np.ones(n) if weights_stream is None else np.asarray(weights_stream, dtype=np.float64)
+    eids = np.arange(n, dtype=np.int64)
+    u = H.uniform01_np(H.hash_combine_np(eids, np.uint32(SALT_ELEM), np.uint32(salt)))
+    v = -np.log1p(-u) / w
+    ukeys, inv = np.unique(keys_stream, return_inverse=True)
+    y = np.full(len(ukeys), np.inf)
+    np.minimum.at(y, inv, v)
+    wx = np.zeros(len(ukeys))
+    np.add.at(wx, inv, w)
+    hx = H.uniform01_np(H.hash_combine_np(ukeys, np.uint32(SALT_KEYBASE), np.uint32(salt)))
+    return ukeys, hx, y, wx
+
+
+def seed_for_l(hx, y, l: float):
+    return np.where(y <= 1.0 / l, hx / l, y)
+
+
+def sample_for_l(ukeys, hx, y, k: int, l: float):
+    """S_l and tau_l from coordinated randomness."""
+    s = seed_for_l(hx, y, l)
+    order = np.argsort(s)
+    if len(ukeys) <= k:
+        return ukeys[order], math.inf
+    return ukeys[order[:k]], float(s[order[k]])
+
+
+def union_sample_grid(ukeys, hx, y, k: int, ls) -> dict:
+    """Coordinated union over a finite l-grid; returns {l: (S_l, tau_l)}."""
+    return {l: sample_for_l(ukeys, hx, y, k, l) for l in ls}
+
+
+def union_sample_all_l(ukeys, hx, y, k: int):
+    """S_L for L = (0, inf) (Lemma 6.1 construction): x in S_L iff Hash(x)
+    ranks <= k within the prefix of keys ordered by increasing y."""
+    order = np.argsort(y)
+    hs = hx[order]
+    member = np.zeros(len(ukeys), dtype=bool)
+    import heapq
+
+    heap: list = []  # max-heap of -h of current top-k
+    for i in range(len(order)):
+        h = hs[i]
+        if len(heap) < k:
+            heapq.heappush(heap, -h)
+            member[order[i]] = True
+        elif h < -heap[0]:
+            heapq.heapreplace(heap, -h)
+            member[order[i]] = True
+    return ukeys[member]
+
+
+def combined_inclusion_prob(w: float, taus: dict[float, float]) -> float:
+    """Lemma 6.2 for a finite grid: P[exists l: y < max(tau_l, 1/l) and
+    h < l*tau_l] with y ~ Exp[w], h ~ U[0,1].
+
+    Union of rectangles [0, a_l) x [0, b_l), a_l = max(tau_l, 1/l),
+    b_l = min(l*tau_l, 1).  Exact integration of the staircase envelope.
+    """
+    rects = []
+    for l, tau in taus.items():
+        if math.isinf(tau):
+            return 1.0
+        rects.append((max(tau, 1.0 / l), min(l * tau, 1.0)))
+    # envelope: sort by a ascending; the maximal b among rects with a >= y
+    rects.sort()
+    a_vals = [r[0] for r in rects]
+    # suffix max of b
+    b_suffix = [0.0] * (len(rects) + 1)
+    for i in range(len(rects) - 1, -1, -1):
+        b_suffix[i] = max(b_suffix[i + 1], rects[i][1])
+    prob = 0.0
+    prev_a = 0.0
+    for i in range(len(rects)):
+        a = a_vals[i]
+        if a > prev_a:
+            # y in [prev_a, a): covered rectangles are those with a_l >= a
+            seg = (math.exp(-w * prev_a) - math.exp(-w * a)) * b_suffix[i]
+            prob += seg
+            prev_a = a
+    return prob
+
+
+def estimate_multi(fn: FreqFn, ukeys_sampled, wx_sampled, taus_per_key) -> float:
+    """Inverse-probability estimate using the combined Phi (§6.2)."""
+    total = 0.0
+    for key, w, taus in zip(ukeys_sampled, wx_sampled, taus_per_key):
+        p = combined_inclusion_prob(w, taus)
+        total += fn(np.array([w]))[0] / p
+    return float(total)
+
+
+def multiobjective_sample(keys_stream, weights_stream, k: int, ls, salt: int = 0):
+    """End-to-end: coordinated 2-pass multi-objective sample over an l-grid.
+
+    Returns (union_keys, union_weights, taus_per_key, per_l_samples).
+    tau_l^{-x} handling: for x in S_l, the paper's tau_l^{-x} is the k-th
+    smallest seed among other keys == tau_l computed with x removed; we use
+    the standard bottom-k convention tau_l (the (k+1)-smallest overall) for
+    keys not in S_l and the k-th-smallest-of-others for members.
+    """
+    ukeys, hx, y, wx = per_key_randomness(keys_stream, weights_stream, salt)
+    per_l = union_sample_grid(ukeys, hx, y, k, ls)
+    union_keys = sorted(set().union(*[set(s.tolist()) for s, _ in per_l.values()]))
+    union_keys = np.asarray(union_keys, dtype=ukeys.dtype)
+    key_to_idx = {x: i for i, x in enumerate(ukeys.tolist())}
+
+    # per-l seeds for exclusion-adjusted thresholds
+    seeds = {l: seed_for_l(hx, y, l) for l in ls}
+    sorted_seeds = {l: np.sort(s) for l, s in seeds.items()}
+
+    taus_per_key = []
+    w_sampled = []
+    for x in union_keys.tolist():
+        i = key_to_idx[x]
+        w_sampled.append(wx[i])
+        taus = {}
+        for l in ls:
+            s_sorted = sorted_seeds[l]
+            own = seeds[l][i]
+            k_eff = min(k, len(s_sorted) - 1)
+            if len(s_sorted) <= k:
+                taus[l] = math.inf
+            else:
+                kth = s_sorted[k_eff - 1] if k_eff >= 1 else math.inf
+                # k-th smallest among OTHERS: drop own seed if it is below kth
+                if own <= kth:
+                    taus[l] = float(s_sorted[k_eff])
+                else:
+                    taus[l] = float(kth)
+        taus_per_key.append(taus)
+    return union_keys, np.asarray(w_sampled), taus_per_key, per_l

@@ -1,0 +1,444 @@
+"""TPU-native chunked stream samplers (the hardware adaptation of Algs 1-5).
+
+The paper's cache machines are recast as dataflow (see DESIGN.md §3):
+
+    score elements  ->  per-chunk segment reduce  ->  merge with carried
+    fixed-size state  ->  (fixed-k only) batched eviction.
+
+The whole sampler is a ``jax.lax.scan`` over stream chunks with O(k + chunk)
+state, so it jit-compiles, shards (each device samples its shard; states
+merge — see core/distributed.py), and checkpoints.
+
+Faithfulness contract, verified in tests/test_equivalence.py:
+
+* fixed-threshold samplers are *element-exact* reimplementations of
+  Algorithms 2/4: identical per-element randomness (same hashes) => identical
+  samples and counts (up to float32-vs-float64 rounding of the oracle).
+* the fixed-k continuous sampler implements Algorithm 5 with the paper's own
+  batched-eviction variant (§5.2); equality is distributional (Thm 5.2 count
+  law + unbiased estimates), not per-run.
+* the 2-pass sampler is exact bottom-k by seed (merging bottom-k summaries is
+  lossless, §3.1) + exact pass-2 weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing as H
+from .samplers import (
+    SALT_BUCKET,
+    SALT_ELEM,
+    SALT_EVICT_R,
+    SALT_EVICT_U,
+    SALT_KEYBASE,
+    SampleResult,
+)
+from .segments import EMPTY, bottom_k_by, compact_valid, scatter_unique, segment_ids, sort_by_key
+
+INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Element scoring (jnp; mirrors samplers.*_np)
+# ---------------------------------------------------------------------------
+
+
+def keybase(keys, l, salt):
+    u = H.uniform01(H.hash_combine(keys, jnp.uint32(SALT_KEYBASE), jnp.uint32(salt)))
+    return u / jnp.float32(l)
+
+
+def elem_uniform(eids, salt):
+    return H.uniform01(H.hash_combine(eids, jnp.uint32(SALT_ELEM), jnp.uint32(salt)))
+
+
+def element_scores(kind: str, keys, eids, weights, l, salt):
+    """ElementScore(h) for each scheme; EMPTY-keyed elements get +inf."""
+    if kind == "distinct":
+        s = H.uniform01(H.hash_combine(keys, jnp.uint32(salt)))
+    elif kind == "sh":
+        s = elem_uniform(eids, salt)
+    elif kind == "discrete":
+        u = H.uniform01(H.hash_combine(eids, jnp.uint32(SALT_BUCKET), jnp.uint32(salt)))
+        bucket = jnp.minimum((u * l).astype(jnp.int32), (jnp.float32(l) - 1).astype(jnp.int32))
+        s = H.uniform01(H.hash_combine(keys, bucket, jnp.uint32(salt)))
+    elif kind == "continuous":
+        u = elem_uniform(eids, salt)
+        v = -jnp.log1p(-u) / weights
+        kb = keybase(keys, l, salt)
+        s = jnp.where(v <= 1.0 / l, kb, v)
+    else:
+        raise ValueError(kind)
+    return jnp.where(keys == EMPTY, INF, s.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk aggregation
+# ---------------------------------------------------------------------------
+
+
+class ChunkAgg(NamedTuple):
+    ukeys: jax.Array      # [C] unique keys (EMPTY padded)
+    w_total: jax.Array    # [C] total chunk weight per key
+    entered: jax.Array    # [C] bool: an entry event occurred in this chunk
+    contrib: jax.Array    # [C] count contribution from entry onward
+    kb: jax.Array         # [C] KeyBase(x) (continuous) or min score (others)
+    min_score: jax.Array  # [C] min element score (for seed/bottom-k schemes)
+
+
+def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem):
+    """Shared segment machinery: group a chunk by key and reduce.
+
+    ``entry``: per-element entry-event flag; ``at_entry_count``: count value
+    contributed by the entry element itself (w - Delta for continuous, 1 for
+    discrete); elements after the first entry contribute their full weight.
+    """
+    C = keys.shape[0]
+    ks, (ws, es, aec, sc, kbe, pos) = sort_by_key(
+        keys, weights, entry, at_entry_count, scores, kb_elem, jnp.arange(C)
+    )
+    seg, _ = segment_ids(ks)
+    idx = jnp.arange(C)
+    entry_idx = jnp.where(es, idx, C)
+    first_entry = jax.ops.segment_min(entry_idx, seg, num_segments=C)
+    fe = first_entry[seg]
+    after = idx > fe
+    at = (idx == fe) & es
+    contrib_elem = jnp.where(after, ws, 0.0) + jnp.where(at, aec, 0.0)
+    live = ks != EMPTY
+    w_live = jnp.where(live, ws, 0.0)
+    contrib = jax.ops.segment_sum(jnp.where(live, contrib_elem, 0.0), seg, num_segments=C)
+    w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)
+    entered = jax.ops.segment_max(jnp.where(live, es, False).astype(jnp.int32), seg, num_segments=C) > 0
+    min_score = jax.ops.segment_min(jnp.where(live, sc, INF), seg, num_segments=C)
+    kb_min = jax.ops.segment_min(jnp.where(live, kbe, INF), seg, num_segments=C)
+    ukeys, _ = scatter_unique(ks, seg, 0.0)
+    return ChunkAgg(
+        ukeys=ukeys,
+        w_total=w_total,
+        entered=entered,
+        contrib=contrib,
+        kb=kb_min,
+        min_score=min_score,
+    )
+
+
+def aggregate_continuous(keys, weights, eids, tau, l, salt) -> ChunkAgg:
+    """Entry semantics of Algorithm 4 under the *current* threshold tau."""
+    u = elem_uniform(eids, salt)
+    rate = jnp.maximum(jnp.float32(1.0 / l), tau)
+    delta = -jnp.log1p(-u) / rate  # rate=inf (tau=inf) -> delta=0
+    kb = keybase(keys, l, salt)
+    ok_regime = jnp.where(tau * l > 1.0, True, kb < tau)
+    entry = (delta < weights) & ok_regime & (keys != EMPTY)
+    v = -jnp.log1p(-u) / weights
+    scores = jnp.where(v <= 1.0 / l, kb, v)
+    scores = jnp.where(keys == EMPTY, INF, scores)
+    return _aggregate(keys, weights, entry, weights - delta, scores, kb)
+
+
+def aggregate_discrete(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
+    """Entry semantics of Algorithm 2: first element whose score < tau."""
+    scores = element_scores(kind, keys, eids, weights, l, salt)
+    entry = (scores < tau) & (keys != EMPTY)
+    return _aggregate(keys, weights, entry, weights, scores, scores)
+
+
+# ---------------------------------------------------------------------------
+# State merge (state table + chunk aggregates -> combined table)
+# ---------------------------------------------------------------------------
+
+
+class TableState(NamedTuple):
+    keys: jax.Array    # [cap]
+    counts: jax.Array  # [cap] float32
+    kb: jax.Array      # [cap] KeyBase / seed payload
+    tau: jax.Array     # scalar float32
+    step: jax.Array    # scalar int32 (eviction round counter)
+    overflow: jax.Array  # scalar int32 (fixed-tau capacity overflow count)
+
+
+def _merge_table(state: TableState, agg: ChunkAgg):
+    """Combine the cached table with chunk aggregates.
+
+    cached key:   count += chunk total weight (Alg 2/4/5 cached branch)
+    new key:      insert iff an entry event happened, count = contrib
+    """
+    cap = state.keys.shape[0]
+    C = agg.ukeys.shape[0]
+    N = cap + C
+    keys2 = jnp.concatenate([state.keys, agg.ukeys])
+    is_state = jnp.concatenate([state.keys != EMPTY, jnp.zeros((C,), bool)])
+    cnt2 = jnp.concatenate([state.counts, jnp.zeros((C,), state.counts.dtype)])
+    wtot2 = jnp.concatenate([jnp.zeros((cap,)), agg.w_total])
+    ent2 = jnp.concatenate([jnp.zeros((cap,), bool), agg.entered])
+    ctr2 = jnp.concatenate([jnp.zeros((cap,)), agg.contrib])
+    kb2 = jnp.concatenate([state.kb, agg.kb])
+
+    ks, (st, cn, wt, en, ct, kb) = sort_by_key(keys2, is_state, cnt2, wtot2, ent2, ctr2, kb2)
+    seg, _ = segment_ids(ks)
+    present = jax.ops.segment_max(st.astype(jnp.int32), seg, num_segments=N) > 0
+    s_count = jax.ops.segment_sum(cn, seg, num_segments=N)
+    c_w = jax.ops.segment_sum(wt, seg, num_segments=N)
+    c_ent = jax.ops.segment_max(en.astype(jnp.int32), seg, num_segments=N) > 0
+    c_ctr = jax.ops.segment_sum(ct, seg, num_segments=N)
+    kb_m = jax.ops.segment_min(kb, seg, num_segments=N)
+    ukeys, _ = scatter_unique(ks, seg, 0.0)
+
+    new_count = jnp.where(present, s_count + c_w, jnp.where(c_ent, c_ctr, 0.0))
+    valid = (ukeys != EMPTY) & (present | c_ent)
+    keys_c, counts_c, kb_c = compact_valid(
+        valid, ukeys, new_count, kb_m, fills=(EMPTY, 0.0, jnp.float32(jnp.inf))
+    )
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    return keys_c, counts_c, kb_c, n_valid
+
+
+# ---------------------------------------------------------------------------
+# Fixed-threshold samplers (exact Algorithm 2 / 4)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "capacity", "chunk"))
+def _run_fixed_tau(keys, weights, l, salt, tau, *, kind, capacity, chunk):
+    n = keys.shape[0]
+    n_chunks = n // chunk
+    keys = keys.reshape(n_chunks, chunk)
+    weights = weights.reshape(n_chunks, chunk)
+    eids = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
+
+    init = TableState(
+        keys=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.float32),
+        kb=jnp.full((capacity,), jnp.inf, jnp.float32),
+        tau=jnp.float32(tau),
+        step=jnp.int32(0),
+        overflow=jnp.int32(0),
+    )
+
+    def body(state: TableState, xs):
+        ck, cw, ce = xs
+        if kind == "continuous":
+            agg = aggregate_continuous(ck, cw, ce, state.tau, l, salt)
+        else:
+            agg = aggregate_discrete(ck, cw, ce, state.tau, kind, l, salt)
+        keys_c, counts_c, kb_c, n_valid = _merge_table(state, agg)
+        over = state.overflow + jnp.maximum(n_valid - capacity, 0)
+        return (
+            TableState(keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
+                       state.tau, state.step + 1, over),
+            None,
+        )
+
+    state, _ = jax.lax.scan(body, init, (keys, weights, eids))
+    return state
+
+
+def sample_fixed_tau(keys, weights=None, *, tau, l, kind="continuous", salt=0,
+                     chunk=2048, capacity=8192) -> SampleResult:
+    keys, weights = _prep(keys, weights, chunk)
+    st = _run_fixed_tau(keys, weights, jnp.float32(l), jnp.uint32(salt), jnp.float32(tau),
+                        kind=kind, capacity=capacity, chunk=chunk)
+    if int(st.overflow) > 0:
+        raise RuntimeError(f"fixed-tau capacity overflow ({int(st.overflow)}); raise capacity")
+    return _to_result(st, l=l, kind=kind, tau=float(tau))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-k continuous sampler (Algorithm 5, batched evictions)
+# ---------------------------------------------------------------------------
+
+
+def _evict_to_k(state_keys, counts, kb, tau, k, l, salt, round_no):
+    """Batched eviction (§5.2): tau* = delta-th largest z; drop z >= tau*."""
+    valid = state_keys != EMPTY
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    delta = jnp.maximum(n_valid - k, 0)
+
+    ux = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_U),
+                                    round_no.astype(jnp.uint32), jnp.uint32(salt)))
+    rx = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_R),
+                                    round_no.astype(jnp.uint32), jnp.uint32(salt)))
+    ex = -jnp.log1p(-rx)
+    inv_l = jnp.float32(1.0 / l)
+    safe_counts = jnp.maximum(counts, 1e-30)
+    race = jnp.where(ex / safe_counts >= inv_l, ex / safe_counts, kb)
+    seed_part = tau * ux  # tau=inf -> inf
+    # Score-collapse correction (see samplers.py): entry branch threshold
+    # becomes KeyBase(x) when the resampled entry score drops below 1/l.
+    entry_thresh = jnp.where(seed_part >= inv_l, seed_part, kb)
+    z_hi = jnp.minimum(entry_thresh, race)     # tau*l > 1 regime
+    z_lo = kb                                  # tau*l <= 1 regime (distinct-like)
+    z = jnp.where(tau * l > 1.0, z_hi, z_lo)
+    z = jnp.where(valid, z, -INF)
+
+    z_desc = -jnp.sort(-z)
+    tau_star = jnp.where(delta > 0, z_desc[jnp.maximum(delta - 1, 0)], tau)
+    evict = valid & (z >= tau_star) & (delta > 0)
+
+    # survivor count adjustment (tau*l>1 regime only; see samplers.py notes)
+    new_rate = jnp.maximum(inv_l, tau_star)
+    guard = (entry_thresh >= tau_star) & (tau * l > 1.0)
+    adj = counts - ex / new_rate
+    counts = jnp.where(valid & ~evict & guard & (delta > 0), adj, counts)
+
+    keys_o = jnp.where(evict, EMPTY, state_keys)
+    counts_o = jnp.where(evict, 0.0, counts)
+    kb_o = jnp.where(evict, INF, kb)
+    tau_o = jnp.where(delta > 0, tau_star, tau)
+    return keys_o, counts_o, kb_o, tau_o
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def _run_fixed_k_continuous(keys, weights, l, salt, *, k, chunk):
+    n = keys.shape[0]
+    n_chunks = n // chunk
+    capacity = k + chunk  # merge never overflows: <=k valid + <=chunk new
+    keys = keys.reshape(n_chunks, chunk)
+    weights = weights.reshape(n_chunks, chunk)
+    eids = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
+
+    init = TableState(
+        keys=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.float32),
+        kb=jnp.full((capacity,), jnp.inf, jnp.float32),
+        tau=jnp.float32(jnp.inf),
+        step=jnp.int32(0),
+        overflow=jnp.int32(0),
+    )
+
+    def body(state: TableState, xs):
+        ck, cw, ce = xs
+        agg = aggregate_continuous(ck, cw, ce, state.tau, l, salt)
+        keys_c, counts_c, kb_c, _ = _merge_table(state, agg)
+        keys_e, counts_e, kb_e, tau_e = _evict_to_k(
+            keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
+            state.tau, k, l, salt, state.step + 1,
+        )
+        return TableState(keys_e, counts_e, kb_e, tau_e, state.step + 1, state.overflow), None
+
+    state, _ = jax.lax.scan(body, init, (keys, weights, eids))
+    return state
+
+
+def sample_fixed_k(keys, weights=None, *, k, l, salt=0, chunk=2048) -> SampleResult:
+    """1-pass fixed-size continuous SH_l sample (the paper's recommended scheme)."""
+    keys, weights = _prep(keys, weights, chunk)
+    st = _run_fixed_k_continuous(keys, weights, jnp.float32(l), jnp.uint32(salt), k=k, chunk=chunk)
+    return _to_result(st, l=l, kind="continuous", tau=float(st.tau))
+
+
+# ---------------------------------------------------------------------------
+# 2-pass sampler (Algorithm 1): exact bottom-k by seed + exact weights
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "k", "chunk"))
+def _run_pass1(keys, weights, l, salt, *, kind, k, chunk):
+    n = keys.shape[0]
+    n_chunks = n // chunk
+    keys = keys.reshape(n_chunks, chunk)
+    weights = weights.reshape(n_chunks, chunk)
+    eids = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
+    cap = k + 1  # bottom-(k+1) is mergeable and yields tau exactly
+
+    init_keys = jnp.full((cap,), EMPTY, dtype=jnp.int32)
+    init_seeds = jnp.full((cap,), jnp.inf, jnp.float32)
+
+    def body(carry, xs):
+        skeys, sseeds = carry
+        ck, cw, ce = xs
+        scores = element_scores(kind, ck, ce, cw, l, salt)
+        ks, (sc,) = sort_by_key(ck, scores)
+        seg, _ = segment_ids(ks)
+        mins = jax.ops.segment_min(jnp.where(ks != EMPTY, sc, INF), seg, num_segments=chunk)
+        ukeys, _ = scatter_unique(ks, seg, 0.0)
+        # merge with state: combine duplicates by min-seed, keep bottom-(k+1)
+        keys2 = jnp.concatenate([skeys, ukeys])
+        seeds2 = jnp.concatenate([sseeds, jnp.where(ukeys != EMPTY, mins, INF)])
+        ks2, (sd2,) = sort_by_key(keys2, seeds2)
+        seg2, _ = segment_ids(ks2)
+        N = ks2.shape[0]
+        sd_m = jax.ops.segment_min(sd2, seg2, num_segments=N)
+        uk2, _ = scatter_unique(ks2, seg2, 0.0)
+        sd_m = jnp.where(uk2 != EMPTY, sd_m, INF)
+        sd_k, uk_k = bottom_k_by(sd_m, cap, uk2, fills=(EMPTY,))
+        return (uk_k, sd_k), None
+
+    (skeys, sseeds), _ = jax.lax.scan(body, (init_keys, init_seeds), (keys, weights, eids))
+    return skeys, sseeds
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _run_pass2(keys, weights, sampled_sorted, *, chunk):
+    n = keys.shape[0]
+    n_chunks = n // chunk
+    keys = keys.reshape(n_chunks, chunk)
+    weights = weights.reshape(n_chunks, chunk)
+    k = sampled_sorted.shape[0]
+
+    def body(acc, xs):
+        ck, cw = xs
+        loc = jnp.searchsorted(sampled_sorted, ck)
+        loc = jnp.clip(loc, 0, k - 1)
+        match = (sampled_sorted[loc] == ck) & (ck != EMPTY)
+        return acc.at[loc].add(jnp.where(match, cw, 0.0)), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((k,), jnp.float64 if weights.dtype == jnp.float64 else jnp.float32), (keys, weights))
+    return acc
+
+
+def sample_two_pass(keys, weights=None, *, k, l, kind="continuous", salt=0, chunk=2048) -> SampleResult:
+    keys, weights = _prep(keys, weights, chunk)
+    skeys, sseeds = _run_pass1(keys, weights, jnp.float32(l), jnp.uint32(salt), kind=kind, k=k, chunk=chunk)
+    skeys = np.asarray(skeys)
+    sseeds = np.asarray(sseeds)
+    valid = skeys != int(EMPTY)
+    order = np.argsort(sseeds[valid])
+    kk = skeys[valid][order]
+    if len(kk) > k:
+        tau = float(sseeds[valid][order][k])
+        kk = kk[:k]
+    else:
+        tau = math.inf
+    sampled_sorted = np.sort(kk)
+    wts = _run_pass2(keys, weights, jnp.asarray(sampled_sorted), chunk=chunk)
+    return SampleResult(
+        keys=sampled_sorted, counts=np.asarray(wts, dtype=np.float64), tau=tau,
+        l=l, kind=kind, exact_weights=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+
+def _prep(keys, weights, chunk):
+    keys = np.asarray(keys, dtype=np.int32)
+    n = len(keys)
+    if weights is None:
+        weights = np.ones(n, dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32)
+    pad = (-n) % chunk
+    if pad:
+        keys = np.concatenate([keys, np.full(pad, int(EMPTY), dtype=np.int32)])
+        weights = np.concatenate([weights, np.zeros(pad, dtype=np.float32)])
+    return jnp.asarray(keys), jnp.asarray(weights)
+
+
+def _to_result(st: TableState, *, l, kind, tau) -> SampleResult:
+    keys = np.asarray(st.keys)
+    counts = np.asarray(st.counts, dtype=np.float64)
+    valid = keys != int(EMPTY)
+    order = np.argsort(keys[valid])
+    return SampleResult(
+        keys=keys[valid][order], counts=counts[valid][order], tau=tau, l=l, kind=kind,
+    )

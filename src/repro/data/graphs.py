@@ -1,0 +1,126 @@
+"""Graph data: synthetic generators, CSR, and the neighbor sampler.
+
+The fanout neighbor sampler (minibatch_lg) is REAL: CSR adjacency +
+per-frontier bottom-k-by-seed selection — i.e. the paper's own sampling
+primitive (ppswor with unit weights == uniform without replacement via
+random seeds, §2) reused as the GNN sampler, with deterministic counter-based
+seeds so distributed workers resample identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import hashing as H
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray   # [N+1]
+    indices: np.ndarray  # [E]
+    n_nodes: int
+
+    @staticmethod
+    def random(rng: np.random.Generator, n_nodes: int, n_edges: int) -> "CSRGraph":
+        # power-law-ish degree distribution
+        dst = (rng.zipf(1.3, size=n_edges) % n_nodes).astype(np.int64)
+        src = rng.integers(0, n_nodes, size=n_edges)
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSRGraph(indptr=indptr, indices=dst, n_nodes=n_nodes)
+
+
+def neighbor_sample(graph: CSRGraph, seeds: np.ndarray, fanouts, salt: int = 0):
+    """Layered fanout sampling (GraphSAGE-style).
+
+    Per frontier node, pick bottom-k neighbors by hash seed (uniform without
+    replacement — exactly a k-sample in the paper's framework with
+    ElementScore = Hash(edge)).  Returns (node_ids, edge_src, edge_dst) with
+    edges in LOCAL indices; node_ids[0:len(seeds)] are the seeds.
+    """
+    nodes = list(seeds.tolist())
+    local = {int(n): i for i, n in enumerate(nodes)}
+    e_src, e_dst = [], []
+    frontier = seeds
+    for layer, k in enumerate(fanouts):
+        nxt = []
+        for u in frontier.tolist():
+            lo, hi = graph.indptr[u], graph.indptr[u + 1]
+            nbrs = graph.indices[lo:hi]
+            if len(nbrs) == 0:
+                continue
+            if len(nbrs) > k:
+                # bottom-k by counter-based seed (deterministic)
+                sc = H.uniform01_np(
+                    H.hash_combine_np(np.arange(lo, hi), np.uint32(salt), np.uint32(layer))
+                )
+                nbrs = nbrs[np.argsort(sc)[:k]]
+            for v in nbrs.tolist():
+                if v not in local:
+                    local[v] = len(nodes)
+                    nodes.append(v)
+                    nxt.append(v)
+                e_src.append(local[v])
+                e_dst.append(local[u])
+        frontier = np.asarray(nxt, dtype=np.int64)
+        if len(frontier) == 0:
+            break
+    return (
+        np.asarray(nodes, dtype=np.int64),
+        np.asarray(e_src, dtype=np.int32),
+        np.asarray(e_dst, dtype=np.int32),
+    )
+
+
+def pad_graph_batch(node_input, e_src, e_dst, edge_dist, graph_ids, *, n_nodes, n_edges):
+    """Pad a sampled subgraph to static shapes (padding edges get dist=inf,
+    padding nodes belong to graph 0 with zero features)."""
+    def pad_to(a, n, fill):
+        if len(a) >= n:
+            return a[:n]
+        return np.concatenate([a, np.full(n - len(a), fill, dtype=a.dtype)])
+
+    if node_input.ndim == 1:
+        node_input = pad_to(node_input, n_nodes, 0)
+    else:
+        out = np.zeros((n_nodes, node_input.shape[1]), dtype=node_input.dtype)
+        out[: min(len(node_input), n_nodes)] = node_input[:n_nodes]
+        node_input = out
+    return dict(
+        node_input=node_input,
+        edge_src=pad_to(e_src.astype(np.int32), n_edges, 0),
+        edge_dst=pad_to(e_dst.astype(np.int32), n_edges, 0),
+        edge_dist=pad_to(edge_dist.astype(np.float32), n_edges, np.float32(1e9)),
+        graph_ids=pad_to(graph_ids.astype(np.int32), n_nodes, 0),
+    )
+
+
+def random_molecules(rng: np.random.Generator, batch: int, n_atoms: int, n_edges_per: int):
+    """Batched small molecules with 3D positions -> true distances."""
+    node_z, e_src, e_dst, dist, gid = [], [], [], [], []
+    for g in range(batch):
+        z = rng.integers(1, 20, size=n_atoms)
+        pos = rng.normal(size=(n_atoms, 3)) * 2.0
+        # k-nearest edges
+        d2 = np.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
+        np.fill_diagonal(d2, np.inf)
+        k = max(1, n_edges_per // n_atoms)
+        nn = np.argsort(d2, axis=1)[:, :k]
+        for i in range(n_atoms):
+            for j in nn[i]:
+                e_src.append(g * n_atoms + j)
+                e_dst.append(g * n_atoms + i)
+                dist.append(np.sqrt(d2[i, j]))
+        node_z.append(z)
+        gid.append(np.full(n_atoms, g))
+    return (
+        np.concatenate(node_z).astype(np.int32),
+        np.asarray(e_src, np.int32),
+        np.asarray(e_dst, np.int32),
+        np.asarray(dist, np.float32),
+        np.concatenate(gid).astype(np.int32),
+    )

@@ -1,0 +1,85 @@
+"""Synthetic data sources + the sharded, checkpointable stream iterator.
+
+Production shape: every host pulls its shard of the element stream; the
+iterator exposes a cursor (element offset) that is saved in checkpoints so a
+restarted/re-sharded job resumes mid-epoch without replaying or skipping
+data.  Straggler mitigation: `BoundedSkewPrefetcher` lets fast hosts run
+ahead a bounded number of batches so one slow host doesn't stall the step
+clock; because the paper's sketches are mergeable and order-independent
+(§3.1), statistics stay exact under skew.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def zipf_keys(rng: np.random.Generator, n: int, alpha: float, n_keys: int) -> np.ndarray:
+    """Zipf(alpha) keys truncated to [0, n_keys) — the paper's §7 generator."""
+    z = rng.zipf(alpha, size=n)
+    return (z % n_keys).astype(np.int64)
+
+
+@dataclasses.dataclass
+class StreamCursor:
+    shard: int
+    n_shards: int
+    offset: int = 0
+    epoch: int = 0
+
+
+class ShardedStream:
+    """Deterministic, seekable stream shard of (key, weight) elements."""
+
+    def __init__(self, *, n_total: int, alpha: float, n_keys: int, seed: int,
+                 cursor: StreamCursor):
+        self.n_total = n_total
+        self.alpha = alpha
+        self.n_keys = n_keys
+        self.seed = seed
+        self.cursor = cursor
+
+    def _shard_bounds(self):
+        per = self.n_total // self.cursor.n_shards
+        lo = self.cursor.shard * per
+        return lo, lo + per
+
+    def next_batch(self, batch: int):
+        lo, hi = self._shard_bounds()
+        start = lo + self.cursor.offset
+        if start + batch > hi:
+            self.cursor.epoch += 1
+            self.cursor.offset = 0
+            start = lo
+        # counter-based generation: reproducible random access
+        rng = np.random.default_rng([self.seed, self.cursor.epoch, start])
+        keys = zipf_keys(rng, batch, self.alpha, self.n_keys)
+        self.cursor.offset += batch
+        return keys
+
+    def state_dict(self):
+        return dataclasses.asdict(self.cursor)
+
+    def load_state_dict(self, d):
+        self.cursor = StreamCursor(**d)
+
+
+class BoundedSkewPrefetcher:
+    """Allows up to `max_skew` batches of run-ahead per shard (host-side)."""
+
+    def __init__(self, stream: ShardedStream, batch: int, max_skew: int = 4):
+        self.stream = stream
+        self.batch = batch
+        self.max_skew = max_skew
+        self._buf: list = []
+
+    def fill(self):
+        while len(self._buf) < self.max_skew:
+            self._buf.append(self.stream.next_batch(self.batch))
+
+    def get(self):
+        if not self._buf:
+            self.fill()
+        out = self._buf.pop(0)
+        return out

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: fused element scoring for continuous SH_l (eq. 10).
+
+The sampler hot loop is a pure elementwise pipeline
+
+    eid --hash--> u --exp--> v ;  key --hash--> KeyBase ;
+    score = v <= 1/l ? KeyBase : v ;
+    Delta = -log1p(-u)/max(1/l,tau) ;  entry = Delta < w  &  regime-gate
+
+i.e. two integer avalanche hashes + two transcendentals per element, fully
+memory-bound.  Fusing it into one VMEM-resident kernel removes five HBM
+round-trips (u, v, kb, score, Delta materializations) that the XLA path pays
+when it can't fuse across the int->float boundary.
+
+Layout: the element stream is viewed as (rows, 128) with (8, 128)-aligned
+blocks (float32 native TPU tile); the grid walks row-blocks.  Scalars
+(l, tau, salt) arrive in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# salts must match core.samplers
+from ...core.samplers import SALT_ELEM, SALT_KEYBASE
+
+BLOCK_ROWS = 8
+LANES = 128
+
+import numpy as np
+
+_C1 = np.uint32(0x7FEB352D)
+_C2 = np.uint32(0x846CA68B)
+_GOLDEN = np.uint32(0x9E3779B9)
+_SEED0 = np.uint32(0x243F6A88)
+
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 15)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def _combine(h, p):
+    return _mix32(h ^ (p + _GOLDEN + (h << 6) + (h >> 2)))
+
+
+def _u01(h):
+    return ((h >> 8).astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 16777216.0)
+
+
+def _capscore_kernel(scalar_ref, keys_ref, eids_ref, w_ref, score_ref, delta_ref, entry_ref):
+    # scalars arrive as int32 bit patterns (exact for both floats and salts)
+    l = jax.lax.bitcast_convert_type(scalar_ref[0], jnp.float32)
+    tau = jax.lax.bitcast_convert_type(scalar_ref[1], jnp.float32)
+    salt = scalar_ref[2].astype(jnp.uint32)
+
+    keys = keys_ref[...].astype(jnp.uint32)
+    eids = eids_ref[...].astype(jnp.uint32)
+    w = w_ref[...]
+
+    # element uniform: hash(eid, SALT_ELEM, salt)
+    h = _combine(jnp.full_like(eids, _SEED0), eids)
+    h = _combine(h, np.uint32(SALT_ELEM))
+    h = _combine(h, salt)
+    u = _u01(h)
+
+    # KeyBase(x) = hash(key, SALT_KEYBASE, salt)/l
+    hk = _combine(jnp.full_like(keys, _SEED0), keys)
+    hk = _combine(hk, np.uint32(SALT_KEYBASE))
+    hk = _combine(hk, salt)
+    kb = _u01(hk) / l
+
+    e = -jnp.log1p(-u)
+    v = e / w
+    inv_l = 1.0 / l
+    score = jnp.where(v <= inv_l, kb, v)
+
+    rate = jnp.maximum(inv_l, tau)
+    delta = e / rate
+    gate = jnp.where(tau * l > 1.0, True, kb < tau)
+    entry = ((delta < w) & gate).astype(jnp.int32)
+
+    score_ref[...] = score
+    delta_ref[...] = delta
+    entry_ref[...] = entry
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool = True):
+    """Fused scoring over a stream chunk.
+
+    Args:
+      keys, eids: int32 [N] with N % 1024 == 0 (use ops.capscore for padding).
+      weights: float32 [N].
+      l, tau, salt: scalars (traced ok).
+    Returns:
+      (score f32[N], delta f32[N], entry int32[N]).
+    """
+    n = keys.shape[0]
+    assert n % (BLOCK_ROWS * LANES) == 0, n
+    rows = n // LANES
+    shape2d = (rows, LANES)
+    keys2 = keys.reshape(shape2d)
+    eids2 = eids.reshape(shape2d)
+    w2 = weights.reshape(shape2d)
+    scalars = jnp.concatenate(
+        [
+            jax.lax.bitcast_convert_type(jnp.float32(l), jnp.int32).reshape(1),
+            jax.lax.bitcast_convert_type(jnp.float32(tau), jnp.int32).reshape(1),
+            jnp.asarray(salt, jnp.uint32).astype(jnp.int32).reshape(1),
+        ]
+    )
+
+    grid = (rows // BLOCK_ROWS,)
+    # index maps receive (grid_idx, scalar_prefetch_ref)
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        jax.ShapeDtypeStruct(shape2d, jnp.int32),
+    ]
+    score, delta, entry = pl.pallas_call(
+        _capscore_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[blk(), blk(), blk()],
+            out_specs=[blk(), blk(), blk()],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, keys2, eids2, w2)
+    return score.reshape(n), delta.reshape(n), entry.reshape(n)

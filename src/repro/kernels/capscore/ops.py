@@ -1,0 +1,37 @@
+"""Public op: padding + backend dispatch for the capscore kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .capscore import BLOCK_ROWS, LANES, capscore as _kernel
+from .ref import capscore_ref
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def capscore(keys, eids, weights, l, tau, salt, *, backend: str | None = None):
+    """Fused element scoring.  backend: 'pallas' | 'xla' | None (auto).
+
+    On CPU the Pallas path runs in interpret mode (correctness only); 'xla'
+    is the fast CPU path and the differentiation-friendly fallback.
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return capscore_ref(keys, eids, weights, l, tau, salt)
+    n = keys.shape[0]
+    pad = (-n) % _TILE
+    if pad:
+        keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
+        eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
+        weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
+    s, d, e = _kernel(keys, eids, weights, l, tau, salt, interpret=not _on_tpu())
+    if pad:
+        s, d, e = s[:n], d[:n], e[:n]
+    return s, d, e

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the capscore kernel (mirrors core.vectorized scoring)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import hashing as H
+from ...core.samplers import SALT_ELEM, SALT_KEYBASE
+
+
+def capscore_ref(keys, eids, weights, l, tau, salt):
+    l = jnp.float32(l)
+    tau = jnp.float32(tau)
+    u = H.uniform01(H.hash_combine(eids, jnp.uint32(SALT_ELEM), jnp.uint32(salt)))
+    kb = H.uniform01(H.hash_combine(keys, jnp.uint32(SALT_KEYBASE), jnp.uint32(salt))) / l
+    e = -jnp.log1p(-u)
+    v = e / weights
+    score = jnp.where(v <= 1.0 / l, kb, v)
+    rate = jnp.maximum(1.0 / l, tau)
+    delta = e / rate
+    gate = jnp.where(tau * l > 1.0, True, kb < tau)
+    entry = ((delta < weights) & gate).astype(jnp.int32)
+    return score, delta, entry

@@ -1,0 +1,42 @@
+"""Public ops: segment_sum + embedding_bag with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import BN, segment_sum as _pallas_segment_sum
+from .ref import embedding_bag_ref, segment_sum_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum(vals, seg_ids, *, n_segments: int, backend: str | None = None):
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return segment_sum_ref(vals, seg_ids, n_segments=n_segments)
+    n = vals.shape[0]
+    pad = (-n) % BN
+    if pad:
+        vals = jnp.concatenate([vals, jnp.zeros((pad, vals.shape[1]), vals.dtype)])
+        seg_ids = jnp.concatenate([seg_ids, jnp.full((pad,), -1, jnp.int32)])
+    return _pallas_segment_sum(vals, seg_ids, n_segments=n_segments, interpret=not _on_tpu())
+
+
+def embedding_bag(table, ids, bag_segments, *, n_bags: int, mode: str = "sum",
+                  per_sample_weights=None, backend: str | None = None):
+    """Gather + bag-reduce.  ids: [N] (negative = padding); bag_segments: [N]."""
+    rows = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1), axis=0)
+    if per_sample_weights is not None:
+        rows = rows * per_sample_weights[:, None]
+    rows = jnp.where((ids >= 0)[:, None], rows, 0)
+    out = segment_sum(rows, bag_segments, n_segments=n_bags, backend=backend)
+    if mode == "mean":
+        cnt = segment_sum(
+            jnp.where(ids >= 0, 1.0, 0.0)[:, None], bag_segments, n_segments=n_bags,
+            backend=backend,
+        )
+        out = out / jnp.maximum(cnt, 1.0)
+    return out

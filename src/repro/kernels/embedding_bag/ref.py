@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for segment_sum / embedding_bag."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(vals, seg_ids, *, n_segments: int):
+    ok = (seg_ids >= 0) & (seg_ids < n_segments)
+    vals = jnp.where(ok[:, None], vals, 0)
+    seg_ids = jnp.where(ok, seg_ids, 0)
+    return jax.ops.segment_sum(vals.astype(jnp.float32), seg_ids, num_segments=n_segments)
+
+
+def embedding_bag_ref(table, ids, offsets_segments, *, n_bags: int, mode: str = "sum",
+                      per_sample_weights=None):
+    """EmbeddingBag: rows = table[ids]; reduce by bag segment ids."""
+    rows = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1), axis=0)
+    if per_sample_weights is not None:
+        rows = rows * per_sample_weights[:, None]
+    valid = ids >= 0
+    rows = jnp.where(valid[:, None], rows, 0)
+    out = jax.ops.segment_sum(rows.astype(jnp.float32), offsets_segments, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(valid.astype(jnp.float32), offsets_segments, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

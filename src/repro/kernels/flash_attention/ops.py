@@ -1,0 +1,69 @@
+"""Public attention op with backend dispatch.
+
+backends:
+  'pallas'      — the TPU kernel (interpret mode on CPU; correctness only)
+  'xla_chunked' — lax.map over query chunks: memory-efficient (O(S*BQ) scores),
+                  differentiable, and the dry-run/training path
+  'naive'       — materializes the S x S scores (small-shape reference)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _pallas
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def xla_chunked_attention(q, k, v, *, causal: bool = True, chunk: int = 512):
+    """Memory-efficient attention: compute scores one q-chunk at a time.
+
+    Peak score memory S*chunk instead of S*S; fully differentiable; this is
+    what train_step lowers (flash numerics, XLA codegen).
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    scale = 1.0 / (D**0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+
+    qc = q.reshape(B, Hq, S // chunk, chunk, D)
+
+    def do_chunk(ci, qblk):
+        s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+        if causal:
+            qpos = ci * chunk + jnp.arange(chunk)[:, None]
+            kpos = jnp.arange(S)[None, :]
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+        return o / jnp.sum(p, axis=-1, keepdims=True)
+
+    out = jax.lax.map(
+        lambda args: do_chunk(args[0], args[1]),
+        (jnp.arange(S // chunk), jnp.moveaxis(qc, 2, 0)),
+    )
+    out = jnp.moveaxis(out, 0, 2).reshape(B, Hq, S, D)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, backend: str | None = None, chunk: int = 512):
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "xla_chunked"
+    if backend == "pallas":
+        return _pallas(q, k, v, causal=causal, interpret=not _on_tpu())
+    if backend == "xla_chunked":
+        return xla_chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    if backend == "naive":
+        return attention_ref(q, k, v, causal=causal)
+    raise ValueError(backend)

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective schedules.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+
+The XLA_FLAGS line above MUST stay the first statement: jax fixes the device
+count at first init.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from collections import Counter  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import registry  # noqa: E402
+from ..parallel.sharding import named_sharding_tree  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# byte widths for HLO shape parsing
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one HLO shape string like 'bf16[16,128]{1,0}'
+    or a tuple '(f32[4], f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, *, while_trip_counts: bool = True) -> dict:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Collectives inside while bodies are counted once by text structure; the
+    caller scales scan-region collectives via the roofline correction.
+    Returns {op_name: {"count": n, "bytes": b}}.
+    """
+    out: dict = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = op.rstrip("-start").rstrip("-done") if op.endswith(("-start", "-done")) else op
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base]["count"] += 1
+            out[base]["bytes"] += _shape_bytes(shape_str)
+    return out
+
+
+def compile_cell(cell, mesh):
+    """Lower + compile one cell on a mesh; return (record, compiled)."""
+    in_sh = named_sharding_tree(cell.in_specs, mesh)
+    out_sh = named_sharding_tree(cell.out_specs, mesh)
+    t0 = time.time()
+    jitted = jax.jit(cell.fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=cell.donate)
+    # ambient mesh so the models' internal with_sharding_constraint hints
+    # (shard_hint) resolve — without it they silently no-op
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*cell.in_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    record = {
+        "cell": cell.name,
+        "kind": cell.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "bytes_per_device": {
+            "arguments": ma.argument_size_in_bytes,
+            "outputs": ma.output_size_in_bytes,
+            "temps": ma.temp_size_in_bytes,
+            "aliased": ma.alias_size_in_bytes,
+            "peak_estimate": ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "cost_per_device": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": colls,
+        "model_flops": cell.model_flops,
+        "dtype": cell.dtype,
+        "notes": cell.notes,
+    }
+    return record, compiled, lowered
+
+
+def run_cell(arch, shape, mesh, *, verbose=True, overrides=None):
+    cell = registry.build_cell(arch, shape, overrides=overrides)
+    rec, compiled, _ = compile_cell(cell, mesh)
+    # scan correction: compile the single-layer program, scale by multiplier
+    if cell.scan_correction is not None:
+        layer_fn, lsh, lsp, mult = cell.scan_correction
+        in_sh = named_sharding_tree(lsp, mesh)
+        with jax.set_mesh(mesh):
+            lcomp = jax.jit(layer_fn, in_shardings=in_sh).lower(*lsh).compile()
+        lca = lcomp.cost_analysis()
+        lcolls = parse_collectives(lcomp.as_text())
+        rec["layer_cost_per_device"] = {
+            "flops": lca.get("flops", 0.0),
+            "bytes_accessed": lca.get("bytes accessed", 0.0),
+            "collectives": lcolls,
+            "multiplier": mult,
+        }
+    if verbose:
+        b = rec["bytes_per_device"]
+        print(
+            f"  {rec['cell']:42s} compile {rec['t_compile_s']:6.1f}s  "
+            f"peak/dev {b['peak_estimate']/2**30:7.2f} GiB  "
+            f"flops/dev {rec['cost_per_device']['flops']:.3e}  "
+            f"colls "
+            + ",".join(f"{k.split('-')[-1][:4]}:{v['count']}" for k, v in rec["collectives"].items() if v["count"])
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all for arch)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="key=json_value config override (hillclimb variants)")
+    ap.add_argument("--tag", default=None, help="suffix for output json names")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = json.loads(v)
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 host devices"
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = (
+        registry.all_cells()
+        if args.all or args.arch is None
+        else [
+            (args.arch, s)
+            for s in ([args.shape] if args.shape else registry.shapes_for(args.arch))
+        ]
+    )
+    meshes = {
+        "single": [False],
+        "multi": [True],
+        "both": [False, True],
+    }[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = "pod2" if multi else "pod1"
+        print(f"== mesh {tag}: {dict(zip(mesh.axis_names, mesh.devices.shape))} ==")
+        for arch, shape in cells:
+            key = f"{arch}__{shape}__{tag}".replace("/", "_")
+            if args.tag:
+                key += f"__{args.tag}"
+            fp = outdir / f"{key}.json"
+            if fp.exists():
+                print(f"  [cached] {key}")
+                continue
+            try:
+                rec = run_cell(arch, shape, mesh, overrides=overrides or None)
+                fp.write_text(json.dumps(rec, indent=1))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((key, str(e)))
+                print(f"  FAIL {key}: {e}")
+                (outdir / f"{key}.FAILED").write_text(traceback.format_exc())
+    print(f"\n{len(failures)} failures")
+    for k, e in failures:
+        print(" ", k, e.splitlines()[0][:160] if e else "")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""GQA attention layer: train (chunked, differentiable), prefill, decode.
+
+The sharding convention is Megatron-style tensor parallelism over the head
+dimension ("model" axis): q/k/v projections column-sharded, output projection
+row-sharded; activations between them live as [batch*, seq, heads/model, d].
+Decode keeps the KV cache sharded over heads ("model") so a 512k-token cache
+fits per-device HBM (see DESIGN.md long_500k note).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.flash_attention.ops import attention as attention_op
+from .common import apply_rope, dense_init, rms_norm, rope_angles, shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attention_chunk: int = 512
+    backend: str | None = "xla_chunked"  # dry-run/train path; pallas on TPU serve
+    shard_kv: bool = False  # shard kv heads over "model" only when divisible
+
+
+def init_attention(rng, cfg: AttentionConfig, dtype):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * cfg.d_head, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * cfg.d_head, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.ones((cfg.d_head,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttentionConfig, x, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard_hint(q, P(("pod", "data"), None, "model", None))
+    kv_spec = P(("pod", "data"), None, "model" if cfg.shard_kv else None, None)
+    k = shard_hint(k, kv_spec)
+    v = shard_hint(v, kv_spec)
+    return q, k, v
+
+
+def attention_train(p, cfg: AttentionConfig, x, positions):
+    """Full causal self-attention (training / prefill compute)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = attention_op(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, backend=cfg.backend, chunk=min(cfg.attention_chunk, S),
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def attention_prefill(p, cfg: AttentionConfig, x, positions):
+    """Like train, but also returns the KV cache [B, S, n_kv, d]."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = attention_op(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, backend=cfg.backend, chunk=min(cfg.attention_chunk, S),
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], (k, v)
+
+
+def attention_decode(p, cfg: AttentionConfig, x, cache, pos, cache_len):
+    """One-token decode against a KV cache.
+
+    x: [B, 1, d_model]; cache: (k, v) each [B, C, n_kv, d] (C = max context);
+    pos: [B] current positions; cache entries at index `pos` are written.
+    """
+    B = x.shape[0]
+    ck, cv = cache
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(pos[:, None].astype(jnp.float32), cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # write new kv at pos.  A scatter into the context-sharded cache makes
+    # GSPMD replicate the whole cache ("involuntary full rematerialization");
+    # a one-hot masked select is elementwise over the sharded dim, so each
+    # shard applies it locally.  (Costs a full cache read+write per step —
+    # the shard_map local-scatter variant removes that; see §Perf.)
+    C = ck.shape[1]
+    at_pos = (jnp.arange(C)[None, :] == pos[:, None])[..., None, None]  # [B,C,1,1]
+    ck = jnp.where(at_pos, k[:, 0][:, None], ck)
+    cv = jnp.where(at_pos, v[:, 0][:, None], cv)
+
+    group = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(B, cfg.n_kv, group, cfg.d_head)
+    # scores vs whole cache, masked beyond pos  [B, n_kv, group, C]
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, ck, preferred_element_type=jnp.float32)
+    s = s / (cfg.d_head**0.5)
+    valid = (jnp.arange(ck.shape[1])[None, :] <= pos[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", w.astype(ck.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return o @ p["wo"], (ck, cv)

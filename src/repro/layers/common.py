@@ -1,0 +1,83 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+import os
+
+
+def shard_hint(x, spec: P, tag: str = "generic"):
+    """with_sharding_constraint that degrades to a no-op off-mesh.
+
+    Inside jit under a concrete mesh (dry-run / production) this pins the
+    layout XLA must produce; in single-device tests it vanishes.  Axis names
+    missing from the active mesh are dropped (so specs can reference the
+    superset vocabulary "pod"/"data"/"model").
+
+    REPRO_HINTS selects which constraint classes apply ("all" | "sp" |
+    "none"): the §Perf hillclimb measured that over-constraining (tag
+    "generic" everywhere) forces GSPMD resharding materializations — on
+    moonshot train_4k, peak memory 47.1 GiB with all hints vs 20.4 GiB with
+    SP-only.  Default is "sp": residual-stream sequence-parallel hints only.
+    """
+    mode = os.environ.get("REPRO_HINTS", "sp")
+    if mode == "none" or (mode == "sp" and tag != "sp"):
+        return x
+    try:
+        from ..parallel.sharding import filter_spec
+
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or np.prod(list(mesh.shape.values())) == 1:
+            return x
+        return jax.lax.with_sharding_constraint(x, filter_spec(spec, tuple(mesh.axis_names)))
+    except Exception:
+        return x
+
+
+def dense_init(rng, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    nrm = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (nrm * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions, d_head, theta=10000.0):
+    """positions: [...]; returns (cos, sin) of shape [..., d_head//2]."""
+    inv = 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+    ang = positions[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, D]; cos/sin: [..., S, D//2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """LLaMA-family gated MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu((x @ w1).astype(jnp.float32)).astype(x.dtype) * (x @ w3)
+    return h @ w2
+
+
+def softmax_xent(logits, labels, *, z_loss: float = 0.0):
+    """Token cross-entropy in f32 with optional z-loss; labels -100 ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    mask = labels >= 0
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1)

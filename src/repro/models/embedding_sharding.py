@@ -1,0 +1,50 @@
+"""Frequency-driven hot/cold embedding placement (paper -> systems loop).
+
+Large recsys tables are row-sharded over "model"; every lookup of a hot key
+is then a cross-device gather.  The SH_l sketch over the impression stream
+(stats.StreamStatsService) identifies the heavy keys *without aggregating the
+stream*; the top-H keys get a small replicated "hot" table, the cold tail
+stays row-sharded.  cap statistics give an unbiased estimate of the traffic
+split: hot_traffic ~= Q(sum, hot) / Q(sum, X), used to size H.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import estimators, freqfns
+from ..stats.service import StreamStatsService
+
+
+@dataclasses.dataclass
+class HotColdPlan:
+    hot_ids_sorted: np.ndarray       # sorted hot key ids
+    est_hot_traffic_frac: float      # estimated share of lookups hitting hot
+
+
+def plan_hot_cold(service: StreamStatsService, n_hot: int) -> HotColdPlan:
+    hot = np.sort(service.hot_keys(n_hot))
+    sketch = service.sketches()[max(service.config.ls)]
+    total = estimators.estimate(sketch, freqfns.total())
+    hot_traffic = estimators.estimate(sketch, freqfns.total(), segment=hot)
+    frac = float(hot_traffic / max(total, 1e-9))
+    return HotColdPlan(hot_ids_sorted=hot, est_hot_traffic_frac=frac)
+
+
+def split_table(table, plan: HotColdPlan):
+    """Materialize (hot_table [H, D] to replicate, cold = original table)."""
+    hot_ids = jnp.asarray(plan.hot_ids_sorted, jnp.int32)
+    return jnp.take(table, hot_ids, axis=0), hot_ids
+
+
+def hot_cold_lookup(cold_table, hot_table, hot_ids_sorted, ids):
+    """Lookup ids, serving hot keys from the replicated table."""
+    loc = jnp.searchsorted(hot_ids_sorted, ids)
+    loc = jnp.clip(loc, 0, hot_ids_sorted.shape[0] - 1)
+    is_hot = hot_ids_sorted[loc] == ids
+    hot_rows = jnp.take(hot_table, loc, axis=0)
+    cold_rows = jnp.take(cold_table, ids, axis=0)
+    return jnp.where(is_hot[..., None], hot_rows, cold_rows)

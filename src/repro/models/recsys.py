@@ -1,0 +1,434 @@
+"""RecSys model zoo: DIN, BST, MIND, two-tower retrieval.
+
+Embedding tables are the hot path (assignment note): lookups are
+``jnp.take`` + ``jax.ops.segment_sum`` (EmbeddingBag — JAX has no native
+one), tables row-sharded over the "model" axis, with an optional replicated
+hot-table split driven by the paper's frequency sketches
+(stats.StreamStatsService.hot_keys — see models/embedding_sharding.py).
+
+This is also where the paper's motivating application lives: impression
+streams feed SH_l sketches; Q(cap_T, segment) forecasts campaign reach
+(examples/ad_campaign_stats.py), and two-tower's sampled softmax uses
+sketch-estimated item frequencies for logQ correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..layers.common import dense_init, shard_hint
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table, ids):
+    """Row lookup; id 0 is the padding row by convention."""
+    return jnp.take(table, ids, axis=0)
+
+
+def masked_mean(emb, ids):
+    """Mean-pool a [B, S, D] history with 0 = padding."""
+    mask = (ids > 0).astype(emb.dtype)[..., None]
+    s = jnp.sum(emb * mask, axis=1)
+    n = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return s / n
+
+
+def mlp_init(rng, dims, dtype):
+    ks = jax.random.split(rng, len(dims) - 1)
+    return [
+        {"w": dense_init(ks[i], dims[i], dims[i + 1], dtype), "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def mlp_specs(dims, shard_last=False):
+    out = []
+    for i in range(len(dims) - 1):
+        out.append({"w": P(None, "model") if i == 0 else P("model", None) if i == 1 else P(None, None),
+                    "b": P(None)})
+    return out
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# DIN — Deep Interest Network (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 10_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        d = self.embed_dim
+        attn = 4 * d * self.attn_mlp[0] + self.attn_mlp[0] * self.attn_mlp[1] + self.attn_mlp[1]
+        top_in = 3 * d
+        top = top_in * self.mlp[0] + self.mlp[0] * self.mlp[1] + self.mlp[1]
+        return self.n_items * d + attn + top
+
+
+def din_init(rng, cfg: DINConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "items": dense_init(k1, cfg.n_items, d, cfg.dtype, scale=0.01),
+        "attn": mlp_init(k2, (4 * d, *cfg.attn_mlp, 1), cfg.dtype),
+        "top": mlp_init(k3, (3 * d, *cfg.mlp, 1), cfg.dtype),
+    }
+
+
+def din_specs(cfg: DINConfig):
+    return {
+        "items": P("model", None),  # row-sharded table
+        "attn": [{"w": P(None, None), "b": P(None)} for _ in range(len(cfg.attn_mlp) + 1)],
+        "top": [{"w": P(None, None), "b": P(None)} for _ in range(len(cfg.mlp) + 1)],
+    }
+
+
+def din_forward(params, cfg: DINConfig, batch):
+    hist, target = batch["hist"], batch["target"]
+    h = embed_lookup(params["items"], hist)            # [B,S,d]
+    t = embed_lookup(params["items"], target)          # [B,d]
+    h = shard_hint(h, P(("pod", "data"), None, None))
+    tb = jnp.broadcast_to(t[:, None, :], h.shape)
+    z = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    w = mlp_apply(params["attn"], z, act=jax.nn.sigmoid)[..., 0]   # [B,S] (no softmax, per DIN)
+    w = w * (hist > 0)
+    pooled = jnp.einsum("bs,bsd->bd", w.astype(h.dtype), h)
+    x = jnp.concatenate([pooled, t, pooled * t], axis=-1)
+    return mlp_apply(params["top"], x)[..., 0]
+
+
+def din_loss(params, cfg: DINConfig, batch):
+    return bce_loss(din_forward(params, cfg, batch), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 10_000_000
+    embed_dim: int = 32
+    seq_len: int = 20          # history (incl. target as last position)
+    n_heads: int = 8
+    n_blocks: int = 1
+    d_ff: int = 128
+    mlp: tuple = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        d = self.embed_dim
+        blk = 4 * d * d + 2 * d * self.d_ff
+        flat = self.seq_len * d
+        top = flat * self.mlp[0] + self.mlp[0] * self.mlp[1] + self.mlp[1] * self.mlp[2] + self.mlp[2]
+        return self.n_items * d + self.seq_len * d + self.n_blocks * blk + top
+
+
+def bst_init(rng, cfg: BSTConfig):
+    ks = jax.random.split(rng, 4 + 6 * cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for b in range(cfg.n_blocks):
+        k = ks[4 + 6 * b : 10 + 6 * b]
+        blocks.append(
+            {
+                "wq": dense_init(k[0], d, d, cfg.dtype),
+                "wk": dense_init(k[1], d, d, cfg.dtype),
+                "wv": dense_init(k[2], d, d, cfg.dtype),
+                "wo": dense_init(k[3], d, d, cfg.dtype),
+                "w1": dense_init(k[4], d, cfg.d_ff, cfg.dtype),
+                "w2": dense_init(k[5], cfg.d_ff, d, cfg.dtype),
+                "ln1": jnp.ones((d,), cfg.dtype),
+                "ln2": jnp.ones((d,), cfg.dtype),
+            }
+        )
+    return {
+        "items": dense_init(ks[0], cfg.n_items, d, cfg.dtype, scale=0.01),
+        "pos": dense_init(ks[1], cfg.seq_len, d, cfg.dtype, scale=0.01),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "top": mlp_init(ks[2], (cfg.seq_len * d, *cfg.mlp, 1), cfg.dtype),
+    }
+
+
+def bst_specs(cfg: BSTConfig):
+    blk = {k: P(None, None, None) for k in ("wq", "wk", "wv", "wo", "w1", "w2")}
+    blk["ln1"] = P(None, None)
+    blk["ln2"] = P(None, None)
+    return {
+        "items": P("model", None),
+        "pos": P(None, None),
+        "blocks": blk,
+        "top": [
+            {"w": P(None, "model"), "b": P("model")},
+            {"w": P("model", None), "b": P(None)},
+            {"w": P(None, None), "b": P(None)},
+            {"w": P(None, None), "b": P(None)},
+        ],
+    }
+
+
+def _bst_block(bp, cfg: BSTConfig, x):
+    from ..layers.common import rms_norm
+
+    B, S, d = x.shape
+    hd = d // cfg.n_heads
+    z = rms_norm(x, bp["ln1"])
+    q = (z @ bp["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (z @ bp["wk"]).reshape(B, S, cfg.n_heads, hd)
+    v = (z @ bp["wv"]).reshape(B, S, cfg.n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) / np.sqrt(hd)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).reshape(B, S, d).astype(x.dtype)
+    x = x + o @ bp["wo"]
+    z = rms_norm(x, bp["ln2"])
+    return x + jax.nn.leaky_relu((z @ bp["w1"]).astype(jnp.float32)).astype(x.dtype) @ bp["w2"]
+
+
+def bst_forward(params, cfg: BSTConfig, batch):
+    seq = jnp.concatenate([batch["hist"], batch["target"][:, None]], axis=1)
+    seq = seq[:, -cfg.seq_len :]
+    x = embed_lookup(params["items"], seq) + params["pos"][None]
+    x = shard_hint(x, P(("pod", "data"), None, None))
+
+    def body(x_, bp):
+        return _bst_block(bp, cfg, x_), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    flat = x.reshape(x.shape[0], -1)
+    return mlp_apply(params["top"], flat, act=jax.nn.leaky_relu)[..., 0]
+
+
+def bst_loss(params, cfg: BSTConfig, batch):
+    return bce_loss(bst_forward(params, cfg, batch), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# MIND — Multi-Interest Network with Dynamic routing (arXiv:1904.08030)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 10_000_000
+    embed_dim: int = 64
+    seq_len: int = 50
+    n_interests: int = 4
+    capsule_iters: int = 3
+    label_pow: float = 2.0
+    dtype: Any = jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        d = self.embed_dim
+        return self.n_items * d + d * d
+
+
+def mind_init(rng, cfg: MINDConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "items": dense_init(k1, cfg.n_items, cfg.embed_dim, cfg.dtype, scale=0.01),
+        "bilinear": dense_init(k2, cfg.embed_dim, cfg.embed_dim, cfg.dtype),
+    }
+
+
+def mind_specs(cfg: MINDConfig):
+    return {"items": P("model", None), "bilinear": P(None, None)}
+
+
+def _squash(s):
+    n2 = jnp.sum(s.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (n2 / (1 + n2) * s.astype(jnp.float32) / jnp.sqrt(n2 + 1e-9)).astype(s.dtype)
+
+
+def mind_interests(params, cfg: MINDConfig, hist):
+    """Behavior-to-interest dynamic routing -> [B, K, d] interest capsules."""
+    e = embed_lookup(params["items"], hist)          # [B,S,d]
+    e = shard_hint(e, P(("pod", "data"), None, None))
+    eh = e @ params["bilinear"]                       # [B,S,d]
+    mask = (hist > 0).astype(jnp.float32)
+    B, S, d = e.shape
+    # fixed (hash-derived) routing-logit init, as in the paper's random init
+    b0 = jnp.sin(jnp.arange(S * cfg.n_interests, dtype=jnp.float32) * 12.9898).reshape(
+        1, S, cfg.n_interests
+    ) * 0.1
+    b = jnp.broadcast_to(b0, (B, S, cfg.n_interests))
+
+    v = None
+    for _ in range(cfg.capsule_iters):
+        c = jax.nn.softmax(b, axis=-1) * mask[..., None]           # [B,S,K]
+        s = jnp.einsum("bsk,bsd->bkd", c, eh.astype(jnp.float32))  # [B,K,d]
+        v = _squash(s)
+        b = b + jnp.einsum("bkd,bsd->bsk", v, eh.astype(jnp.float32))
+    return v.astype(cfg.dtype)
+
+
+def mind_loss(params, cfg: MINDConfig, batch):
+    """Label-aware attention + in-batch sampled softmax."""
+    v = mind_interests(params, cfg, batch["hist"])     # [B,K,d]
+    t = embed_lookup(params["items"], batch["target"])  # [B,d]
+    att = jax.nn.softmax(
+        (jnp.einsum("bkd,bd->bk", v.astype(jnp.float32), t.astype(jnp.float32))) ** cfg.label_pow,
+        axis=-1,
+    )
+    u = jnp.einsum("bk,bkd->bd", att, v.astype(jnp.float32))       # [B,d]
+    logits = u @ t.astype(jnp.float32).T                            # in-batch softmax
+    if "logq" in batch:
+        logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(logits.shape[0])
+    return jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1)
+        - jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    )
+
+
+def mind_point_serve(params, cfg: MINDConfig, batch):
+    """Pointwise (user, target) scoring: max over interest capsules."""
+    v = mind_interests(params, cfg, batch["hist"])     # [B,K,d]
+    t = embed_lookup(params["items"], batch["target"])  # [B,d]
+    s = jnp.einsum("bkd,bd->bk", v.astype(jnp.float32), t.astype(jnp.float32))
+    return jnp.max(s, axis=-1)
+
+
+def mind_serve(params, cfg: MINDConfig, batch):
+    """Score candidates: max over interests (retrieval scoring)."""
+    v = mind_interests(params, cfg, batch["hist"])     # [B,K,d]
+    cand = embed_lookup(params["items"], batch["candidates"])  # [NC,d]
+    scores = jnp.einsum("bkd,nd->bkn", v.astype(jnp.float32), cand.astype(jnp.float32))
+    return jnp.max(scores, axis=1)                      # [B,NC]
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube, RecSys'19)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_items: int = 10_000_000
+    n_users: int = 50_000_000
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    seq_len: int = 50
+    dtype: Any = jnp.float32
+    # §Perf: shard embedding rows over BOTH mesh axes (256/512-way) so the
+    # dense table gradient needs no data-axis all-reduce (each device owns
+    # distinct rows).  Row counts padded to multiples of 512.
+    table_shard_2d: bool = False
+
+    @property
+    def n_params(self) -> int:
+        d = self.embed_dim
+        tower = lambda d_in: d_in * self.tower_mlp[0] + self.tower_mlp[0] * self.tower_mlp[1] + \
+            self.tower_mlp[1] * self.tower_mlp[2]
+        return (self.n_items + self.n_users) * d + tower(2 * d) + tower(d)
+
+
+def twotower_init(rng, cfg: TwoTowerConfig):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d = cfg.embed_dim
+    return {
+        "items": dense_init(k1, cfg.n_items, d, cfg.dtype, scale=0.01),
+        "users": dense_init(k2, cfg.n_users, d, cfg.dtype, scale=0.01),
+        "user_tower": mlp_init(k3, (2 * d, *cfg.tower_mlp), cfg.dtype),
+        "item_tower": mlp_init(k4, (d, *cfg.tower_mlp), cfg.dtype),
+    }
+
+
+def twotower_specs(cfg: TwoTowerConfig):
+    tower = [
+        {"w": P(None, "model"), "b": P("model")},
+        {"w": P("model", None), "b": P(None)},
+        {"w": P(None, "model"), "b": P("model")},
+    ]
+    rows = P(("data", "model"), None) if cfg.table_shard_2d else P("model", None)
+    return {
+        "items": rows,
+        "users": rows,
+        "user_tower": tower,
+        "item_tower": tower,
+    }
+
+
+def _user_vec(params, cfg, batch):
+    hist_emb = embed_lookup(params["items"], batch["hist"])
+    pooled = masked_mean(hist_emb, batch["hist"])
+    ue = embed_lookup(params["users"], batch["user_id"])
+    x = jnp.concatenate([ue, pooled], axis=-1)
+    u = mlp_apply(params["user_tower"], x, final_act=False)
+    return u / (jnp.linalg.norm(u.astype(jnp.float32), axis=-1, keepdims=True) + 1e-6).astype(u.dtype)
+
+
+def _item_vec(params, cfg, ids):
+    ie = embed_lookup(params["items"], ids)
+    v = mlp_apply(params["item_tower"], ie, final_act=False)
+    return v / (jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True) + 1e-6).astype(v.dtype)
+
+
+def twotower_loss(params, cfg: TwoTowerConfig, batch, temperature: float = 0.05):
+    """In-batch sampled softmax with logQ correction.
+
+    batch["logq"]: log sampling probability of each in-batch item — in
+    production estimated from the SH_l frequency sketch (the paper's
+    technique closing the loop; examples/recsys_train.py wires it)."""
+    u = _user_vec(params, cfg, batch)
+    v = _item_vec(params, cfg, batch["target"])
+    logits = (u.astype(jnp.float32) @ v.astype(jnp.float32).T) / temperature
+    if "logq" in batch:
+        logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(logits.shape[0])
+    return jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1)
+        - jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    )
+
+
+def twotower_serve(params, cfg: TwoTowerConfig, batch):
+    """CTR-style pointwise scoring of (user, target) pairs."""
+    u = _user_vec(params, cfg, batch)
+    v = _item_vec(params, cfg, batch["target"])
+    return jnp.sum(u.astype(jnp.float32) * v.astype(jnp.float32), axis=-1)
+
+
+def twotower_retrieve(params, cfg: TwoTowerConfig, batch):
+    """batch=1 user vs n_candidates items: batched dot (NOT a loop) + top-k."""
+    u = _user_vec(params, cfg, batch)                       # [1, d']
+    cand = _item_vec(params, cfg, batch["candidates"])      # [NC, d']
+    scores = (cand.astype(jnp.float32) @ u.astype(jnp.float32).T)[:, 0]
+    vals, idx = jax.lax.top_k(scores, 100)
+    return vals, idx

@@ -1,0 +1,310 @@
+"""Transformer LM (dense + MoE): train / prefill / decode.
+
+Covers the five assigned LM architectures (yi-6b, codeqwen1.5-7b, qwen3-8b,
+phi3.5-moe, moonshot-v1): pre-norm RMSNorm blocks, RoPE GQA attention
+(optional qk-norm, per qwen3), SwiGLU MLP or top-k MoE FFN.
+
+Layer parameters are stacked on a leading [L, ...] axis and the forward is a
+``jax.lax.scan`` with per-layer ``jax.checkpoint`` (remat) — the memory policy
+that keeps train_4k within a v5e's HBM.  The roofline tool compiles one layer
+separately to correct the scan-counts-once FLOP accounting (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..layers.attention import (
+    AttentionConfig,
+    attention_decode,
+    attention_prefill,
+    attention_train,
+    init_attention,
+)
+from ..layers.common import dense_init, rms_norm, shard_hint, softmax_xent, swiglu
+from ..layers.moe import MoEConfig, init_moe, moe_apply, moe_apply_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attention_chunk: int = 512
+    attention_backend: str | None = "xla_chunked"
+    scan_layers: bool = True
+    tie_embeddings: bool = False
+    # Megatron-style sequence parallelism: the residual stream (and thus the
+    # per-layer remat-saved activations) is sharded over "model" along the
+    # sequence axis; attention/MoE gather full sequences locally.  Converts
+    # per-layer activation all-reduces into all-gather + reduce-scatter
+    # (half the ring traffic) and divides saved-activation memory by the TP
+    # degree.  §Perf iteration for the train cells.
+    sequence_parallel: bool = False
+    # remat policy: "full" rematerializes everything (min memory, re-runs the
+    # per-layer TP all-reduces in the backward pass); "save_collectives"
+    # checkpoints the post-all-reduce activations (attn_out / ffn_out) so the
+    # backward never repeats forward collectives — affordable when combined
+    # with sequence_parallel (saved tensors are S/TP-sized).  §Perf iteration.
+    remat_policy: str = "full"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def attn_cfg(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            d_head=self.head_dim, qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            attention_chunk=self.attention_chunk, backend=self.attention_backend,
+            shard_kv=(self.n_kv % 16 == 0),
+        )
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS)."""
+        d, f, hd = self.d_model, self.d_ff, self.head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv * 2)
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.n_params
+        d = self.d_model
+        attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv * 2)
+        ffn = self.moe.top_k * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg: TransformerConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "attn": init_attention(k1, cfg.attn_cfg(), cfg.dtype),
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = {
+            "w1": dense_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+            "w3": dense_init(jax.random.fold_in(k2, 1), cfg.d_model, cfg.d_ff, cfg.dtype),
+            "w2": dense_init(k3, cfg.d_ff, cfg.d_model, cfg.dtype),
+        }
+    return p
+
+
+def init_params(rng, cfg: TransformerConfig):
+    ke, kl, ko = jax.random.split(rng, 3)
+    layers = [
+        _init_layer(jax.random.fold_in(kl, i), cfg) for i in range(cfg.n_layers)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": dense_init(ke, cfg.vocab, cfg.d_model, cfg.dtype, scale=0.02),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        "head": dense_init(ko, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+def param_specs(cfg: TransformerConfig):
+    """PartitionSpec tree matching init_params (Megatron TP over 'model')."""
+    L = P(None)  # leading layer-stack axis
+
+    def attn_spec():
+        kv = P(None, None, "model") if cfg.n_kv % 16 == 0 else P(None, None, None)
+        s = {
+            "wq": P(None, None, "model"),
+            "wk": kv,
+            "wv": kv,
+            "wo": P(None, "model", None),
+        }
+        if cfg.qk_norm:
+            s["q_norm"] = P(None, None)
+            s["k_norm"] = P(None, None)
+        return s
+
+    layer = {"attn": attn_spec(), "ln1": P(None, None), "ln2": P(None, None)}
+    if cfg.moe is not None:
+        layer["moe"] = {
+            "router": P(None, None, None),
+            "w1": P(None, "model", None, None),   # experts sharded (EP)
+            "w3": P(None, "model", None, None),
+            "w2": P(None, "model", None, None),
+        }
+    else:
+        layer["mlp"] = {
+            "w1": P(None, None, "model"),
+            "w3": P(None, None, "model"),
+            "w2": P(None, "model", None),
+        }
+    return {
+        "embed": P(None, "model"),
+        "layers": layer,
+        "ln_f": P(None),
+        "head": P(None, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _sp_spec(cfg):
+    return P(("pod", "data"), "model" if cfg.sequence_parallel else None, None)
+
+
+def _sp_hint(cfg, x):
+    # only constrain when SP is on: constraining the residual to the default
+    # layout measurably HURTS (forces GSPMD resharding; 47 GiB vs 20 GiB peak
+    # on moonshot train_4k — §Perf iteration log)
+    return shard_hint(x, _sp_spec(cfg), tag="sp") if cfg.sequence_parallel else x
+
+
+def _layer_fwd(cfg: TransformerConfig, lp, x, positions):
+    from jax.ad_checkpoint import checkpoint_name
+
+    x = _sp_hint(cfg, x)
+    h = attention_train(lp["attn"], cfg.attn_cfg(), rms_norm(x, lp["ln1"]), positions)
+    h = _sp_hint(cfg, h)
+    h = checkpoint_name(h, "attn_out")  # post-TP-all-reduce boundary
+    x = x + h
+    z = rms_norm(x, lp["ln2"])
+    if cfg.moe is not None:
+        y, aux = moe_apply(lp["moe"], cfg.moe, z)
+        y = _sp_hint(cfg, y)
+        y = checkpoint_name(y, "ffn_out")
+        return x + y, aux["balance_loss"] + aux["router_z_loss"]
+    y = swiglu(z, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+    y = _sp_hint(cfg, y)
+    y = checkpoint_name(y, "ffn_out")
+    return x + y, jnp.float32(0.0)
+
+
+def forward(params, cfg: TransformerConfig, tokens):
+    """tokens [B, S] -> logits [B, S, vocab] (f32) + aux loss."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _sp_hint(cfg, x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.float32), (B, S))
+
+    body = lambda x_, lp: _layer_fwd(cfg, lp, x_, positions)
+    if cfg.remat:
+        if cfg.remat_policy == "save_collectives":
+            pol = jax.checkpoint_policies.save_only_these_names("attn_out", "ffn_out")
+            body = jax.checkpoint(body, policy=pol)
+        else:
+            body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        def scan_body(x_, lp):
+            x_, aux = body(x_, lp)
+            return x_, aux
+
+        x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body(x, lp)
+            aux = aux + a
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+    return logits, aux
+
+
+def loss_fn(params, cfg: TransformerConfig, tokens, labels):
+    logits, aux = forward(params, cfg, tokens)
+    return softmax_xent(logits, labels) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: TransformerConfig, tokens):
+    """Returns (last-position logits [B, vocab], caches list per layer)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.float32), (B, S))
+
+    def scan_body(x_, lp):
+        h, cache = attention_prefill(lp["attn"], cfg.attn_cfg(), rms_norm(x_, lp["ln1"]), positions)
+        x_ = x_ + h
+        z = rms_norm(x_, lp["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], cfg.moe, z)
+        else:
+            y = swiglu(z, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        return x_ + y, cache
+
+    x, caches = jax.lax.scan(scan_body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = (x @ params["head"]).astype(jnp.float32)[:, 0]
+    return logits, caches
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_step(params, cfg: TransformerConfig, token, cache, pos):
+    """One decode step.  token [B] int32; cache stacked [L, B, C, n_kv, d];
+    pos [B] int32 write positions.  Returns (logits [B, vocab], new cache)."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+
+    def scan_body(x_, layer_in):
+        lp, ck, cv = layer_in
+        h, (ck2, cv2) = attention_decode(
+            lp["attn"], cfg.attn_cfg(), rms_norm(x_, lp["ln1"]), (ck, cv), pos, None
+        )
+        x_ = x_ + h
+        z = rms_norm(x_, lp["ln2"])
+        if cfg.moe is not None:
+            # decode uses the no-drop dense-combine path (batch-size
+            # independent routing; see layers/moe.py traffic argument)
+            y, _ = moe_apply_dense(lp["moe"], cfg.moe, z)
+        else:
+            y = swiglu(z, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        return x_ + y, (ck2, cv2)
+
+    x, (ck_new, cv_new) = jax.lax.scan(scan_body, x, (params["layers"], cache[0], cache[1]))
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["head"]).astype(jnp.float32)[:, 0]
+    return logits, (ck_new, cv_new)

@@ -1,0 +1,54 @@
+"""Sharding utilities: PartitionSpec filtering + NamedSharding trees.
+
+Cells are written against the *superset* axis vocabulary ("pod", "data",
+"model"); `filter_spec` projects a spec onto whatever mesh is active (the
+single-pod mesh has no "pod" axis), so the same cell lowers on both
+production meshes and on the 1-device test mesh.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def filter_spec(spec: P, axis_names) -> P:
+    if not isinstance(spec, P):
+        return spec
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in axis_names)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(entry if entry in axis_names else None)
+    return P(*out)
+
+
+def filter_spec_tree(tree, axis_names):
+    return jax.tree.map(
+        lambda s: filter_spec(s, axis_names),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named_sharding_tree(tree, mesh):
+    names = mesh.axis_names
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, names)),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def mesh_axis_names():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return ()
+        return tuple(mesh.axis_names)
+    except Exception:
+        return ()

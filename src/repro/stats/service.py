@@ -1,0 +1,131 @@
+"""StreamStatsService: frequency-cap statistics as a first-class framework
+feature (the paper's ad-campaign application, generalized).
+
+Attach a service to any input pipeline; it maintains SH_l sketches (one per
+configured l, or a coordinated multi-objective set) over the stream of keys
+flowing through training/serving, with O(k) state per sketch, and answers
+
+    service.query(T, segment)  ~=  Q(cap_T, segment)
+
+Uses: ad-campaign reach forecasting (recsys archs: keys = (user, campaign)
+pairs, answer = number of qualifying impressions under a per-user cap T);
+token-frequency statistics for LM data mixing; degree statistics for GNN
+samplers; expert-load statistics for MoE routing diagnostics.
+
+The service state is a pytree -> it checkpoints with the training state and
+merges across hosts (core.distributed) because sketches are mergeable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from ..core import estimators, freqfns
+from ..core.samplers import SampleResult
+from ..core import vectorized as VZ
+
+
+@dataclasses.dataclass
+class StatsConfig:
+    k: int = 4096                      # sample size per sketch
+    ls: Sequence[float] = (1.0, 16.0, 256.0, 4096.0)  # geometric l-grid (§6)
+    chunk: int = 2048
+    salt: int = 0x5EED
+
+
+class StreamStatsService:
+    """Host-side orchestrator around the jitted chunked samplers.
+
+    For each l in the grid we keep a fixed-k continuous SH_l sketch.  A
+    cap_T query is answered from the sketch with l closest to T in log-space
+    (the paper's recommendation preceding §6.1: pick l within sqrt(2) of T).
+    """
+
+    def __init__(self, config: StatsConfig):
+        self.config = config
+        self._chunks_keys: list[np.ndarray] = []
+        self._chunks_weights: list[np.ndarray] = []
+        self._n_elements = 0
+        self._results: dict[float, SampleResult] | None = None
+
+    # -- ingestion ---------------------------------------------------------
+
+    def observe(self, keys, weights=None) -> None:
+        """Feed a batch of stream elements (host arrays ok)."""
+        keys = np.asarray(keys).reshape(-1)
+        if weights is None:
+            weights = np.ones(len(keys), dtype=np.float32)
+        self._chunks_keys.append(keys.astype(np.int64))
+        self._chunks_weights.append(np.asarray(weights, np.float32).reshape(-1))
+        self._n_elements += len(keys)
+        self._results = None
+
+    # -- sketch materialization --------------------------------------------
+
+    def _materialize(self) -> dict[float, SampleResult]:
+        if self._results is None:
+            keys = np.concatenate(self._chunks_keys) if self._chunks_keys else np.zeros(0, np.int64)
+            w = np.concatenate(self._chunks_weights) if self._chunks_weights else np.zeros(0, np.float32)
+            out = {}
+            for l in self.config.ls:
+                out[l] = VZ.sample_fixed_k(
+                    keys, w, k=self.config.k, l=l,
+                    salt=self.config.salt, chunk=self.config.chunk,
+                )
+            self._results = out
+        return self._results
+
+    def sketches(self) -> dict[float, SampleResult]:
+        return self._materialize()
+
+    # -- queries -------------------------------------------------------------
+
+    def pick_l(self, T: float) -> float:
+        ls = np.asarray(self.config.ls, dtype=np.float64)
+        return float(ls[np.argmin(np.abs(np.log(ls) - math.log(max(T, 1e-9))))])
+
+    def query_cap(self, T: float, segment=None) -> float:
+        """Estimate Q(cap_T, segment)."""
+        res = self._materialize()[self.pick_l(T)]
+        return estimators.estimate(res, freqfns.cap(T), segment)
+
+    def query_distinct(self, segment=None) -> float:
+        res = self._materialize()[self.pick_l(1.0)]
+        return estimators.estimate(res, freqfns.distinct(), segment)
+
+    def query_total(self, segment=None) -> float:
+        res = self._materialize()[self.pick_l(max(self.config.ls))]
+        return estimators.estimate(res, freqfns.total(), segment)
+
+    def campaign_forecast(self, cap_per_user: float, segment=None) -> float:
+        """The paper's motivating query: qualifying impressions under a
+        per-user frequency cap, for the user segment H."""
+        return self.query_cap(cap_per_user, segment)
+
+    # -- hot-key extraction (embedding-sharding integration) -----------------
+
+    def hot_keys(self, top: int) -> np.ndarray:
+        """Keys with the largest sampled counts — candidates for replicated
+        'hot' embedding-table placement.  Uses the largest-l sketch (closest
+        to pps-by-frequency)."""
+        res = self._materialize()[max(self.config.ls)]
+        order = np.argsort(-res.counts)
+        return res.keys[order[:top]]
+
+    # -- checkpointing --------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "keys": self._chunks_keys,
+            "weights": self._chunks_weights,
+            "n": self._n_elements,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self._chunks_keys = list(d["keys"])
+        self._chunks_weights = list(d["weights"])
+        self._n_elements = int(d["n"])
+        self._results = None

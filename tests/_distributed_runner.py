@@ -1,0 +1,69 @@
+"""Subprocess body for distributed sampler tests (8 host devices).
+
+Run as: python tests/_distributed_runner.py
+Prints "OK" on success; assertion errors otherwise.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType  # noqa: E402
+
+from repro.core import distributed as DD  # noqa: E402
+from repro.core import vectorized as V  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+    rng = np.random.default_rng(0)
+    n = 8 * 4096
+    keys = (rng.zipf(1.4, size=n) % 3000).astype(np.int32)
+    w = np.ones(n, dtype=np.float32)
+    k = 64
+
+    for merge in ("tree", "allgather"):
+        fn = DD.make_distributed_two_pass(
+            mesh, kind="continuous", l=5.0, salt=9, k=k, chunk=512, merge=merge
+        )
+        skeys, sseeds, sw = fn(keys, w)
+        skeys = np.asarray(skeys)[0]
+        sseeds = np.asarray(sseeds)[0]
+        sw = np.asarray(sw)[0]
+        # all shards agree (merged state is replicated)
+        for i in range(1, 8):
+            np.testing.assert_array_equal(np.asarray(skeys), np.asarray(jax.device_get(skeys)))
+
+        # reference: single-stream 2-pass with the same sharded element ids
+        ref_seeds = {}
+        ref_w = {}
+        shard_len = n // 8
+        for s in range(8):
+            shard_keys = keys[s * shard_len : (s + 1) * shard_len]
+            shard_w = w[s * shard_len : (s + 1) * shard_len]
+            eids = (s * shard_len + np.arange(shard_len)).astype(np.int64)
+            from repro.core.samplers import continuous_score_np
+
+            sc = continuous_score_np(shard_keys.astype(np.int64), eids, shard_w, 5.0, 9)
+            for key_, s_, w_ in zip(shard_keys.tolist(), sc.tolist(), shard_w.tolist()):
+                ref_seeds[key_] = min(ref_seeds.get(key_, np.inf), s_)
+                ref_w[key_] = ref_w.get(key_, 0.0) + w_
+        ref_sorted = sorted(ref_seeds.items(), key=lambda kv: kv[1])[: k + 1]
+        ref_keys = sorted(k_ for k_, _ in ref_sorted)
+
+        got = sorted(int(x) for x in skeys if x != 2**31 - 1)
+        assert got == ref_keys, f"{merge}: key sets differ: {got[:5]} vs {ref_keys[:5]}"
+        # exact weights
+        key_order = {int(x): i for i, x in enumerate(skeys.tolist())}
+        for key_ in ref_keys:
+            np.testing.assert_allclose(sw[key_order[key_]], ref_w[key_], rtol=1e-3)
+        print(f"merge={merge} OK")
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Continuous SH_l machinery (§5): inclusion, count law, Thm 5.3 estimator."""
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import continuous as C
+from repro.core import freqfns as F
+
+
+def test_inclusion_prob_regimes():
+    # tau*l < 1: (1-e^{-w/l}) * tau*l
+    w, tau, l = 3.0, 0.05, 4.0
+    np.testing.assert_allclose(C.inclusion_prob(w, tau, l), (1 - math.exp(-w / l)) * tau * l)
+    # tau*l >= 1: 1-e^{-tau w}
+    tau = 0.5
+    np.testing.assert_allclose(C.inclusion_prob(w, tau, l), 1 - math.exp(-tau * w))
+
+
+def test_inclusion_prob_proportional_to_cap():
+    """Fig 1/2 property: Phi(w) ~ w for w << l, ~ const for w >> l."""
+    tau, l = 0.001, 10.0
+    w_small = np.array([0.1, 0.2, 0.4])
+    p = C.inclusion_prob(w_small, tau, l)
+    ratios = p / w_small
+    np.testing.assert_allclose(ratios, ratios[0], rtol=0.03)
+    p_big = C.inclusion_prob(np.array([1000.0, 4000.0]), tau, l)
+    np.testing.assert_allclose(p_big[0], p_big[1], rtol=1e-6)
+
+
+def test_count_law_integrates_to_inclusion():
+    """integral of count density over (0,w) == Phi(w) (Thm 5.2 + eq. 11)."""
+    for tau, l, w in [(0.05, 4.0, 7.0), (0.5, 4.0, 3.0), (0.01, 100.0, 250.0)]:
+        ys = np.linspace(1e-6, w - 1e-6, 200001)
+        mass = np.trapezoid(C.count_density(ys, w, tau, l), ys)
+        np.testing.assert_allclose(mass, C.inclusion_prob(w, tau, l), rtol=1e-4)
+
+
+def test_conditional_count_matches_density():
+    """Inverse-CDF sampler agrees with the Thm 5.2 density (moment check)."""
+    tau, l, w = 0.08, 5.0, 12.0
+    u = (np.arange(100000) + 0.5) / 100000
+    c = C.conditional_count(w, tau, l, u)
+    assert np.all((c > 0) & (c <= w))
+    ys = np.linspace(1e-9, w - 1e-9, 400001)
+    dens = C.count_density(ys, w, tau, l)
+    dens /= np.trapezoid(dens, ys)
+    np.testing.assert_allclose(c.mean(), np.trapezoid(ys * dens, ys), rtol=1e-3)
+    np.testing.assert_allclose((c**2).mean(), np.trapezoid(ys**2 * dens, ys), rtol=1e-3)
+
+
+@given(
+    tau=st.floats(min_value=0.01, max_value=0.9),
+    l=st.floats(min_value=0.5, max_value=100.0),
+    w=st.floats(min_value=0.1, max_value=300.0),
+    T=st.floats(min_value=0.5, max_value=50.0),
+)
+@settings(max_examples=40, deadline=None)
+def test_estimator_unbiased_by_quadrature(tau, l, w, T):
+    """Thm 5.3: E[beta(c_x)] = f(w) exactly.  Verified by numerical
+    integration of beta against the count law, for f = cap_T."""
+    fn = F.cap(T)
+    ys = np.linspace(1e-7 * w, w * (1 - 1e-9), 300001)
+    dens = C.count_density(ys, w, tau, l)
+    vals = C.beta(fn, ys, tau, l)
+    est = np.trapezoid(vals * dens, ys)  # zero contribution when c_x = 0
+    np.testing.assert_allclose(est, fn.f(np.array([w]))[0], rtol=2e-3)
+
+
+def test_two_pass_estimator_identity():
+    """f(w)/Phi(w) * Phi(w) = f(w): inverse probability is trivially unbiased;
+    check the code path end-to-end on arrays."""
+    w = np.array([0.5, 2.0, 10.0, 100.0])
+    tau, l = 0.07, 8.0
+    est = C.estimate_two_pass(F.cap(5), w, tau, l)
+    manual = np.sum(np.minimum(w, 5) / C.inclusion_prob(w, tau, l))
+    np.testing.assert_allclose(est, manual)
+
+
+def test_cv_bounds_shape():
+    """Thm 5.1/5.4 bounds: minimized near l = T, degrade with disparity."""
+    q, k = 0.1, 200
+    at_T = C.cv_bound_two_pass(10, 10, q, k)
+    off = C.cv_bound_two_pass(10, 100, q, k)
+    assert at_T < off
+    # l = T constants: 2-pass ~1.26/sqrt(qk), 1-pass ~1.8/sqrt(qk)
+    base = 1.0 / math.sqrt(q * (k - 1))
+    np.testing.assert_allclose(at_T, math.sqrt(math.e / (math.e - 1)) * base, rtol=1e-9)
+    np.testing.assert_allclose(
+        C.cv_bound_one_pass(10, 10, q, k), math.sqrt(2 * math.e / (math.e - 1)) * base, rtol=1e-9
+    )

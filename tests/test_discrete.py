@@ -1,0 +1,134 @@
+"""Discrete SH_l machinery (§4): phi recurrence, psi inversion, Thm 4.1/4.2."""
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import discrete as D
+from repro.core import freqfns as F
+
+
+def test_phi_l1_is_distinct():
+    np.testing.assert_allclose(D.phi_vector(1, 0.3), [0.3])
+
+
+def test_phi_linf_is_geometric():
+    tau = 0.2
+    phi = D.phi_vector(math.inf, tau)
+    i = np.arange(1, len(phi) + 1)
+    np.testing.assert_allclose(phi, tau * (1 - tau) ** (i - 1), rtol=1e-12)
+
+
+def test_phi_is_probability_vector():
+    """phi_i >= 0, non-increasing, sum <= 1 and -> 1-(1-tau)^l as w -> inf."""
+    for l, tau in [(2, 0.3), (5, 0.1), (20, 0.05), (100, 0.01)]:
+        phi = D.phi_vector(l, tau)
+        assert np.all(phi >= 0)
+        assert np.all(np.diff(phi) <= 1e-15), "phi must be non-increasing (Thm 4.2 proof)"
+        total = phi.sum()
+        limit = 1 - (1 - tau) ** l  # P[some bucket hashes below tau]
+        assert total <= limit + 1e-9
+        assert total > limit - 1e-6, f"phi tail not converged: {total} vs {limit}"
+
+
+def test_phi_monte_carlo():
+    """phi matches a direct simulation of eq. (6) first-counted-element law."""
+    l, tau, n_elem, reps = 4, 0.25, 12, 40000
+    rng = np.random.default_rng(0)
+    firsts = np.zeros(n_elem + 1)
+    for _ in range(reps):
+        bucket_hash = rng.uniform(size=l)
+        buckets = rng.integers(0, l, size=n_elem)
+        scores = bucket_hash[buckets]
+        hit = np.nonzero(scores < tau)[0]
+        firsts[hit[0] + 1 if len(hit) else 0] += 1
+    phi = D.phi_vector(l, tau)
+    emp = firsts[1:] / reps
+    np.testing.assert_allclose(emp[: min(len(phi), n_elem)], phi[:n_elem][: len(emp)], atol=0.01)
+
+
+def test_psi_inverts_phi():
+    """Y(psi) Y(phi) = I on the leading block."""
+    l, tau, n = 7, 0.15, 40
+    phi = D.phi_vector(l, tau)
+    psi = D.psi_vector(phi, n)
+    phi_full = np.zeros(n)
+    phi_full[: min(len(phi), n)] = phi[:n]
+
+    def upper(v):
+        m = np.zeros((n, n))
+        for i in range(n):
+            for j in range(i, n):
+                m[i, j] = v[j - i]
+        return m
+
+    prod = upper(psi) @ upper(phi_full)
+    np.testing.assert_allclose(prod, np.eye(n), atol=1e-8)
+
+
+def test_psi_special_cases():
+    np.testing.assert_allclose(D.psi_vector(D.phi_vector(1, 0.1), 3), [10, 0, 0], atol=1e-10)
+    np.testing.assert_allclose(
+        D.psi_vector(D.phi_vector(math.inf, 0.1), 4), [10, -9, 0, 0], atol=1e-9
+    )
+
+
+def test_psi_prefix_sums_positive():
+    """Claim (9) in the proof of Thm 4.2."""
+    for l, tau in [(3, 0.4), (5, 0.1), (50, 0.02)]:
+        psi = D.psi_vector(D.phi_vector(l, tau), 60)
+        assert np.all(np.cumsum(psi) > 0)
+
+
+@given(
+    l=st.sampled_from([1, 2, 5, 20, 100]),
+    tau=st.floats(min_value=0.01, max_value=0.9),
+    T=st.sampled_from([1, 2, 5, 20, 1000]),
+)
+@settings(max_examples=30, deadline=None)
+def test_beta_nonnegative_for_monotone_f(l, tau, T):
+    """Theorem 4.2: monotone non-decreasing f => beta >= 0."""
+    fvals = F.cap(T).table(80)
+    beta = D.estimator_coefficients(fvals, l, tau, 80)
+    assert beta.min() >= -1e-8 * max(1.0, abs(beta).max())
+
+
+def test_estimator_coefficients_match_closed_forms():
+    tau, n = 0.2, 10
+    f = F.total().table(n)
+    # distinct (eq. 4)
+    np.testing.assert_allclose(
+        D.estimator_coefficients(f, 1, tau, n), np.arange(1, n + 1) / tau
+    )
+    # SH (eq. 5)
+    i = np.arange(1, n + 1, dtype=float)
+    np.testing.assert_allclose(
+        D.estimator_coefficients(f, math.inf, tau, n), (i - (i - 1) * (1 - tau)) / tau
+    )
+
+
+def test_unbiased_via_transform():
+    """E[Qhat] = f^T Y(psi) E[o] = f^T m exactly, by construction: verify
+    numerically that beta^T Y(phi) = f^T (the transform identity)."""
+    l, tau, n = 5, 0.12, 50
+    phi = D.phi_vector(l, tau)
+    psi = D.psi_vector(phi, n)
+    fvals = F.cap(7).table(n)
+    beta = D.beta_coefficients(fvals, psi)
+    # E[o_i] = sum_{j >= i} phi_{j-i+1} m_j ; E[Qhat] = sum_i beta_i E[o_i]
+    # = sum_j m_j sum_{i<=j} beta_i phi_{j-i+1}  must equal sum_j m_j f_j
+    phi_full = np.zeros(n + 1)
+    phi_full[1 : min(len(phi), n) + 1] = phi[:n]
+    for j in [1, 2, 3, 5, 10, 30, 49]:
+        contrib = sum(beta[i - 1] * phi_full[j - i + 1] for i in range(1, j + 1))
+        np.testing.assert_allclose(contrib, fvals[j], rtol=1e-7)
+
+
+def test_inclusion_prob_monotone_saturating():
+    phi = D.phi_vector(10, 0.05)
+    w = np.arange(0, 500)
+    p = D.inclusion_prob(w, phi)
+    assert p[0] == 0
+    assert np.all(np.diff(p) >= -1e-15)
+    assert p[-1] <= 1.0

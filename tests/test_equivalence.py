@@ -1,0 +1,136 @@
+"""Oracle (Algorithms 1-5) vs TPU-native vectorized samplers.
+
+* fixed-threshold: EXACT equality (same per-element hashes).
+* 2-pass: EXACT equality of sampled key set, tau, and weights.
+* fixed-k: distributional equality (unbiased estimates, count law, sizes).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import estimators as E
+from repro.core import freqfns as F
+from repro.core import samplers as S
+from repro.core import vectorized as V
+
+
+@pytest.mark.parametrize("l,tau", [(5.0, 0.02), (1.0, 0.01), (100.0, 0.005)])
+def test_fixed_tau_continuous_exact(zipf_stream, l, tau):
+    ro = S.alg4_fixed_tau_continuous(zipf_stream, None, tau, l=l, salt=7)
+    rv = V.sample_fixed_tau(zipf_stream, None, tau=tau, l=l, salt=7, capacity=16384)
+    np.testing.assert_array_equal(ro.keys, rv.keys)
+    np.testing.assert_allclose(ro.counts, rv.counts, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("kind,l", [("discrete", 5), ("distinct", 1), ("sh", math.inf)])
+def test_fixed_tau_discrete_family_exact(zipf_stream, kind, l):
+    eff_l = 1 if kind == "distinct" else l
+    ro = S.alg2_fixed_tau_discrete(zipf_stream, 0.02, l=eff_l, salt=7, kind=kind)
+    rv = V.sample_fixed_tau(
+        zipf_stream, None, tau=0.02, l=(eff_l if not math.isinf(eff_l) else 1e9),
+        kind=kind, salt=7, capacity=16384,
+    )
+    np.testing.assert_array_equal(ro.keys, rv.keys)
+    np.testing.assert_array_equal(ro.counts, rv.counts.astype(np.int64))
+
+
+@pytest.mark.parametrize("kind", ["continuous", "discrete", "distinct", "sh"])
+def test_two_pass_exact(zipf_stream, kind):
+    l = {"continuous": 5.0, "discrete": 5, "distinct": 1, "sh": 1e9}[kind]
+    okind = kind
+    ro = S.alg1_two_pass(zipf_stream, None, 100, l=l, kind=okind, salt=42)
+    rv = V.sample_two_pass(zipf_stream, None, k=100, l=l, kind=kind, salt=42)
+    np.testing.assert_array_equal(np.sort(ro.keys), np.sort(rv.keys))
+    np.testing.assert_allclose(ro.tau, rv.tau, rtol=1e-5)
+    np.testing.assert_allclose(
+        ro.counts[np.argsort(ro.keys)], rv.counts[np.argsort(rv.keys)], rtol=1e-5
+    )
+
+
+def test_fixed_k_sizes_and_counts_domain(zipf_stream):
+    rv = V.sample_fixed_k(zipf_stream, None, k=100, l=5.0, salt=3)
+    assert len(rv.keys) == 100
+    assert np.all(rv.counts > 0)
+    ukeys, cnts = np.unique(zipf_stream, return_counts=True)
+    w_map = dict(zip(ukeys.tolist(), cnts.tolist()))
+    for x, c in zip(rv.keys.tolist(), rv.counts.tolist()):
+        assert c <= w_map[x] + 1e-3, "count exceeds true weight"
+
+
+def test_fixed_k_unbiased_vectorized(zipf_truth, zipf_stream):
+    """The headline distributional test: mean of 200 estimates within 4 sigma."""
+    _, cnts = zipf_truth
+    truth = F.exact_statistic(F.cap(5), cnts)
+    ests = [
+        E.estimate(V.sample_fixed_k(zipf_stream, None, k=100, l=5.0, salt=77000 + r), F.cap(5))
+        for r in range(200)
+    ]
+    m, se = np.mean(ests), np.std(ests) / math.sqrt(200)
+    assert abs(m - truth) < 4 * se + 0.001 * truth, f"bias {(m-truth)/truth:+.2%} se {se/truth:.2%}"
+
+
+def test_fixed_k_unbiased_oracle(zipf_truth, zipf_stream):
+    """Sequential Algorithm 5 (with reconstruction notes) is unbiased too."""
+    _, cnts = zipf_truth
+    truth = F.exact_statistic(F.cap(5), cnts)
+    ests = [
+        E.estimate(S.alg5_fixed_k_continuous(zipf_stream, None, 100, l=5.0, salt=88000 + r), F.cap(5))
+        for r in range(25)
+    ]
+    m, se = np.mean(ests), np.std(ests) / math.sqrt(25)
+    assert abs(m - truth) < 4 * se + 0.01 * truth
+
+
+def _count_law_pit(result, wmap, l, top_keys):
+    """Probability-integral-transform of sampled counts under the Thm 5.2 law:
+    phi = w - c ~ TruncExp(rate=max(1/l, tau)) on [0, w)  =>  F(phi) ~ U(0,1).
+    """
+    rate = max(1.0 / l, result.tau)
+    us = []
+    d = result.asdict()
+    for x in top_keys:
+        if x in d:
+            w = wmap[x]
+            phi = w - d[x]
+            u = -np.expm1(-rate * phi) / -np.expm1(-rate * w)
+            us.append(min(max(u, 0.0), 1.0))
+    return us
+
+
+def _ks_uniform(us):
+    us = np.sort(np.asarray(us))
+    n = len(us)
+    grid = np.arange(1, n + 1) / n
+    return max(np.max(np.abs(grid - us)), np.max(np.abs(us - (grid - 1.0 / n))))
+
+
+def test_fixed_k_count_law_thm52(zipf_stream):
+    """Counts of sampled keys follow the Thm 5.2 conditional law, in BOTH the
+    sequential oracle and the vectorized sampler (PIT + KS vs uniform)."""
+    ukeys, cnts = np.unique(zipf_stream, return_counts=True)
+    wmap = dict(zip(ukeys.tolist(), cnts.tolist()))
+    top = [int(x) for x in ukeys[np.argsort(-cnts)[:30]]]
+    l = 5.0
+    pit_o, pit_v = [], []
+    for r in range(40):
+        ro = S.alg5_fixed_k_continuous(zipf_stream, None, 100, l=l, salt=91000 + r)
+        pit_o += _count_law_pit(ro, wmap, l, top)
+    for r in range(150):
+        rv = V.sample_fixed_k(zipf_stream, None, k=100, l=l, salt=92000 + r)
+        pit_v += _count_law_pit(rv, wmap, l, top)
+    assert len(pit_o) > 80 and len(pit_v) > 300
+    # alpha ~ 1e-3 critical value 1.95/sqrt(n); PITs share tau within a run,
+    # so allow some slack on top.
+    assert _ks_uniform(pit_o) < 2.2 / math.sqrt(len(pit_o)), f"oracle KS {_ks_uniform(pit_o):.3f} n={len(pit_o)}"
+    assert _ks_uniform(pit_v) < 2.2 / math.sqrt(len(pit_v)), f"vec KS {_ks_uniform(pit_v):.3f} n={len(pit_v)}"
+
+
+def test_weighted_elements_continuous(zipf_stream):
+    """Non-uniform weights: vectorized fixed-tau matches oracle exactly."""
+    rng = np.random.default_rng(5)
+    w = rng.exponential(2.0, size=len(zipf_stream)).astype(np.float32) + 0.1
+    ro = S.alg4_fixed_tau_continuous(zipf_stream, w, 0.05, l=3.0, salt=11)
+    rv = V.sample_fixed_tau(zipf_stream, w, tau=0.05, l=3.0, salt=11, capacity=16384)
+    np.testing.assert_array_equal(ro.keys, rv.keys)
+    np.testing.assert_allclose(ro.counts, rv.counts, rtol=1e-3, atol=1e-2)

@@ -1,0 +1,101 @@
+"""Estimator correctness: gold-standard CV targets, segments, special cases."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import continuous as C
+from repro.core import estimators as E
+from repro.core import freqfns as F
+from repro.core import vectorized as V
+
+
+def test_distinct_sampling_estimates_distinct(zipf_stream, zipf_truth):
+    ukeys, cnts = zipf_truth
+    ests = [
+        E.estimate(
+            V.sample_two_pass(zipf_stream, None, k=100, l=1, kind="distinct", salt=r), F.distinct()
+        )
+        for r in range(50)
+    ]
+    m = np.mean(ests)
+    assert abs(m - len(ukeys)) / len(ukeys) < 0.06
+
+
+def test_sh_estimates_sum_exactly_relative(zipf_stream, zipf_truth):
+    _, cnts = zipf_truth
+    truth = cnts.sum()
+    ests = [
+        E.estimate(
+            V.sample_two_pass(zipf_stream, None, k=100, l=1e9, kind="sh", salt=100 + r), F.total()
+        )
+        for r in range(50)
+    ]
+    assert abs(np.mean(ests) - truth) / truth < 0.05
+
+
+def test_segment_queries(zipf_stream, zipf_truth):
+    """Q(cap_T, H) for H = keys = 0 mod 3, via predicate segments."""
+    ukeys, cnts = zipf_truth
+    seg_mask = ukeys % 3 == 0
+    truth = F.exact_statistic(F.cap(5), cnts[seg_mask])
+    seg = lambda keys: keys % 3 == 0
+    ests = [
+        E.estimate(V.sample_fixed_k(zipf_stream, None, k=300, l=5.0, salt=200 + r), F.cap(5), seg)
+        for r in range(60)
+    ]
+    m, sd = np.mean(ests), np.std(ests)
+    assert abs(m - truth) < 4 * sd / math.sqrt(60) + 0.01 * truth
+    # CV sanity: q = truth share; bound ~ (q(k-1))^{-1/2} * 1.6 (Thm 5.4)
+    q = truth / F.exact_statistic(F.cap(5), cnts)
+    assert sd / truth < 2.0 * C.cv_bound_one_pass(5, 5, q, 300)
+
+
+def test_cv_meets_gold_standard(zipf_stream, zipf_truth):
+    """At l = T the empirical CV should be within the Thm 5.4 bound (and in
+    practice near (qk)^-0.5)."""
+    _, cnts = zipf_truth
+    truth = F.exact_statistic(F.cap(20), cnts)
+    ests = [
+        E.estimate(V.sample_fixed_k(zipf_stream, None, k=150, l=20.0, salt=300 + r), F.cap(20))
+        for r in range(150)
+    ]
+    cv = np.std(ests) / truth
+    assert cv < C.cv_bound_one_pass(20, 20, 1.0, 150)
+    assert cv < 2.0 / math.sqrt(149)  # near gold standard
+
+
+def test_disparity_degrades_gracefully(zipf_stream, zipf_truth):
+    """Estimating cap_100 from an l=1 sample must be worse than from l=100."""
+    _, cnts = zipf_truth
+    truth = F.exact_statistic(F.cap(100), cnts)
+    errs = {}
+    for l in (1.0, 100.0):
+        es = [
+            E.estimate(V.sample_fixed_k(zipf_stream, None, k=100, l=l, salt=400 + r), F.cap(100))
+            for r in range(80)
+        ]
+        errs[l] = np.sqrt(np.mean((np.asarray(es) / truth - 1) ** 2))
+    assert errs[100.0] < errs[1.0]
+
+
+def test_nonnegative_estimates(zipf_stream):
+    """Monotone f => nonnegative per-key estimates (Thm 4.2 / eq. 13)."""
+    for r in range(10):
+        res = V.sample_fixed_k(zipf_stream, None, k=50, l=5.0, salt=500 + r)
+        vals = E.estimate_per_key(res, F.cap(3))
+        assert np.all(vals >= 0)
+
+
+def test_estimate_empty_segment(zipf_stream):
+    res = V.sample_fixed_k(zipf_stream, None, k=50, l=5.0, salt=1)
+    assert E.estimate(res, F.cap(5), segment=np.array([10**8])) == 0.0
+
+
+def test_small_stream_all_keys_sampled():
+    """If fewer than k+1 active keys, tau = inf and estimates are exact."""
+    keys = np.array([1, 1, 2, 3, 3, 3])
+    res = V.sample_fixed_k(keys, None, k=100, l=5.0, salt=0, chunk=8)
+    assert math.isinf(res.tau)
+    assert E.estimate(res, F.total()) == pytest.approx(6.0)
+    assert E.estimate(res, F.distinct()) == pytest.approx(3.0)

@@ -1,0 +1,54 @@
+"""Hashing substrate: numpy/jnp bit-equality + distributional sanity."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hashing as H
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**31 - 1), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_mix32_np_jnp_bit_equal(xs):
+    xs = np.asarray(xs, dtype=np.uint32)
+    a = H.mix32_np(xs)
+    b = np.asarray(H.mix32(jnp.asarray(xs)))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), min_size=1, max_size=64),
+    st.integers(min_value=0, max_value=255),
+)
+@settings(max_examples=50, deadline=None)
+def test_hash_combine_np_jnp_bit_equal(xs, salt):
+    xs = np.asarray(xs, dtype=np.int64)
+    a = H.hash_combine_np(xs, np.uint32(salt))
+    b = np.asarray(H.hash_combine(jnp.asarray(xs, dtype=jnp.int32), jnp.uint32(salt)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_uniform01_range_and_mean():
+    h = H.hash_combine_np(np.arange(200000), np.uint32(3))
+    u = H.uniform01_np(h)
+    assert u.min() > 0 and u.max() < 1
+    assert abs(u.mean() - 0.5) < 0.005
+    # chi-square-ish uniformity over 20 bins
+    hist, _ = np.histogram(u, bins=20)
+    chi2 = np.sum((hist - 10000.0) ** 2 / 10000.0)
+    assert chi2 < 60  # 19 dof, p ~ 1e-5 threshold
+
+
+def test_exp_from_u_mean():
+    h = H.hash_combine_np(np.arange(100000), np.uint32(9))
+    u = H.uniform01_np(h)
+    e = H.exp_from_u(u, 2.0)
+    assert abs(e.mean() - 0.5) < 0.01
+
+
+def test_per_salt_independence():
+    keys = np.arange(10000)
+    u1 = H.uniform01_np(H.hash_combine_np(keys, np.uint32(1)))
+    u2 = H.uniform01_np(H.hash_combine_np(keys, np.uint32(2)))
+    corr = np.corrcoef(u1, u2)[0, 1]
+    assert abs(corr) < 0.03

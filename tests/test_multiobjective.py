@@ -1,0 +1,106 @@
+"""Multi-objective samples (§6): coordination, Lemma 6.1/6.2, estimation."""
+import math
+
+import numpy as np
+
+from repro.core import estimators as E
+from repro.core import freqfns as F
+from repro.core import multiobjective as M
+
+
+def test_union_size_lemma61(zipf_stream):
+    """E|S_L| <= k ln n for L = (0, inf) (Lemma 6.1)."""
+    k = 50
+    sizes = []
+    for salt in range(8):
+        ukeys, hx, y, wx = M.per_key_randomness(zipf_stream, None, salt=salt)
+        union = M.union_sample_all_l(ukeys, hx, y, k)
+        sizes.append(len(union))
+    n = len(np.unique(zipf_stream))
+    bound = k * math.log(n)
+    assert np.mean(sizes) <= bound, f"{np.mean(sizes)} > {bound}"
+    # and the union is much larger than a single sample
+    assert np.mean(sizes) > k
+
+
+def test_coordination_nesting(zipf_stream):
+    """Coordinated samples change gradually with l: neighbors in the grid
+    share most keys (this is the point of coordination, §6.1)."""
+    ukeys, hx, y, _ = M.per_key_randomness(zipf_stream, None, salt=3)
+    k = 100
+    s1, _ = M.sample_for_l(ukeys, hx, y, k, 8.0)
+    s2, _ = M.sample_for_l(ukeys, hx, y, k, 11.0)
+    s3, _ = M.sample_for_l(ukeys, hx, y, k, 8000.0)
+    j12 = len(np.intersect1d(s1, s2)) / k
+    j13 = len(np.intersect1d(s1, s3)) / k
+    assert j12 > 0.8
+    assert j13 < j12
+
+
+def test_membership_interval_structure(zipf_stream):
+    """x in S_l holds on a contiguous l-interval (corollary of Lemma 6.1)."""
+    ukeys, hx, y, _ = M.per_key_randomness(zipf_stream, None, salt=5)
+    k = 60
+    ls = np.geomspace(0.1, 10000, 25)
+    member = np.zeros((len(ukeys), len(ls)), dtype=bool)
+    key_idx = {x: i for i, x in enumerate(ukeys.tolist())}
+    for j, l in enumerate(ls):
+        s, _ = M.sample_for_l(ukeys, hx, y, k, l)
+        for x in s.tolist():
+            member[key_idx[x], j] = True
+    # membership pattern per key must be a contiguous run of True
+    for i in range(len(ukeys)):
+        row = member[i]
+        if row.any():
+            nz = np.nonzero(row)[0]
+            assert np.all(np.diff(nz) == 1), f"non-contiguous membership for key {ukeys[i]}"
+
+
+def test_combined_inclusion_prob_monte_carlo():
+    """Lemma 6.2 rectangle-union integration vs direct Monte Carlo."""
+    taus = {2.0: 0.3, 10.0: 0.08, 100.0: 0.009}
+    w = 3.5
+    p_exact = M.combined_inclusion_prob(w, taus)
+    rng = np.random.default_rng(0)
+    y = rng.exponential(1.0 / w, size=400000)
+    h = rng.uniform(size=400000)
+    hit = np.zeros(400000, dtype=bool)
+    for l, tau in taus.items():
+        hit |= (y < max(tau, 1.0 / l)) & (h < l * tau)
+    p_mc = hit.mean()
+    np.testing.assert_allclose(p_exact, p_mc, atol=0.004)
+
+
+def test_multiobjective_estimator_unbiased(zipf_stream, zipf_truth):
+    """Combined-Phi inverse probability estimates across a T range."""
+    _, cnts = zipf_truth
+    ls = [1.0, 8.0, 64.0, 512.0]
+    ests = {T: [] for T in (1, 8, 64)}
+    for salt in range(25):
+        union_keys, wx, taus_per_key, _ = M.multiobjective_sample(zipf_stream, None, 80, ls, salt=salt)
+        for T in ests:
+            ests[T].append(M.estimate_multi(F.cap(T), union_keys, wx, taus_per_key))
+    for T, es in ests.items():
+        truth = F.exact_statistic(F.cap(T), cnts)
+        m, se = np.mean(es), np.std(es) / math.sqrt(len(es))
+        assert abs(m - truth) < 4 * se + 0.02 * truth, f"T={T}: {m} vs {truth}"
+
+
+def test_multi_beats_single_when_off_grid(zipf_stream, zipf_truth):
+    """The union estimator's variance is <= the single-sample variance
+    (inclusion probability dominates each individual Phi_l)."""
+    _, cnts = zipf_truth
+    T = 64.0
+    truth = F.exact_statistic(F.cap(T), cnts)
+    ls = [1.0, 8.0, 64.0, 512.0]
+    multi, single = [], []
+    from repro.core import vectorized as V
+
+    for salt in range(20):
+        union_keys, wx, taus_per_key, _ = M.multiobjective_sample(zipf_stream, None, 60, ls, salt=salt)
+        multi.append(M.estimate_multi(F.cap(T), union_keys, wx, taus_per_key))
+        r = V.sample_two_pass(zipf_stream, None, k=60, l=64.0, salt=7000 + salt)
+        single.append(E.estimate(r, F.cap(T)))
+    rmse_m = np.sqrt(np.mean((np.asarray(multi) / truth - 1) ** 2))
+    rmse_s = np.sqrt(np.mean((np.asarray(single) / truth - 1) ** 2))
+    assert rmse_m < 1.5 * rmse_s  # allow noise; typically rmse_m <= rmse_s

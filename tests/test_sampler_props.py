@@ -1,0 +1,117 @@
+"""Property-based invariants of the sampling framework (hypothesis)."""
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import freqfns as F
+from repro.core import samplers as S
+from repro.core import vectorized as V
+from repro.core.segments import EMPTY
+
+
+def _stream(draw_keys, n):
+    rng = np.random.default_rng(sum(draw_keys) % 2**31)
+    return rng.choice(draw_keys, size=n).astype(np.int64)
+
+
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=10**6), min_size=1, max_size=30, unique=True),
+    n=st.integers(min_value=1, max_value=500),
+    k=st.integers(min_value=1, max_value=40),
+    l=st.sampled_from([0.5, 1.0, 5.0, 100.0]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fixed_k_invariants(keys, n, k, l):
+    stream = _stream(keys, n)
+    res = V.sample_fixed_k(stream, None, k=k, l=l, salt=1, chunk=64)
+    # sample size <= min(k, distinct)
+    assert len(res.keys) <= min(k, len(np.unique(stream)))
+    # sampled keys are real keys, counts within (0, w_x]
+    ukeys, cnts = np.unique(stream, return_counts=True)
+    wmap = dict(zip(ukeys.tolist(), cnts.tolist()))
+    for x, c in zip(res.keys.tolist(), res.counts.tolist()):
+        assert x in wmap
+        assert 0 < c <= wmap[x] + 1e-3
+    assert int(EMPTY) not in res.keys.tolist()
+
+
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=10**6), min_size=1, max_size=30, unique=True),
+    n=st.integers(min_value=1, max_value=400),
+    tau=st.floats(min_value=0.05, max_value=0.9),
+    kind=st.sampled_from(["continuous", "discrete", "distinct", "sh"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fixed_tau_matches_oracle(keys, n, tau, kind):
+    """Exact oracle equivalence on random small streams — all schemes."""
+    stream = _stream(keys, n)
+    l = {"continuous": 3.0, "discrete": 4, "distinct": 1, "sh": 1e9}[kind]
+    if kind == "continuous":
+        ro = S.alg4_fixed_tau_continuous(stream, None, tau, l=l, salt=2)
+    else:
+        ol = {"discrete": 4, "distinct": 1, "sh": math.inf}[kind]
+        ro = S.alg2_fixed_tau_discrete(stream, tau, l=ol, salt=2, kind=kind)
+    rv = V.sample_fixed_tau(stream, None, tau=tau, l=l, kind=kind, salt=2, chunk=64, capacity=1024)
+    np.testing.assert_array_equal(ro.keys, rv.keys)
+    np.testing.assert_allclose(ro.counts, rv.counts, rtol=1e-3, atol=1e-2)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=50),
+    chunk=st.sampled_from([16, 64, 256]),
+)
+@settings(max_examples=20, deadline=None)
+def test_two_pass_chunk_invariance(n, k, chunk):
+    """The 2-pass result must not depend on the chunking (mergeability)."""
+    rng = np.random.default_rng(n * 1000 + k)
+    stream = rng.integers(0, 50, size=n).astype(np.int64)
+    r1 = V.sample_two_pass(stream, None, k=k, l=5.0, salt=4, chunk=chunk)
+    r2 = V.sample_two_pass(stream, None, k=k, l=5.0, salt=4, chunk=512)
+    np.testing.assert_array_equal(np.sort(r1.keys), np.sort(r2.keys))
+    np.testing.assert_allclose(np.sort(r1.counts), np.sort(r2.counts), rtol=1e-5)
+
+
+@given(weights=st.lists(st.floats(min_value=0.01, max_value=50.0), min_size=2, max_size=200))
+@settings(max_examples=20, deadline=None)
+def test_two_pass_weights_exact(weights):
+    """Pass 2 recovers exact per-key weights."""
+    n = len(weights)
+    rng = np.random.default_rng(n)
+    stream = rng.integers(0, 10, size=n).astype(np.int64)
+    w = np.asarray(weights, dtype=np.float32)
+    res = V.sample_two_pass(stream, w, k=100, l=5.0, salt=6, chunk=64)
+    ukeys = np.unique(stream)
+    expect = {int(x): float(w[stream == x].sum()) for x in ukeys}
+    for x, wx in zip(res.keys.tolist(), res.counts.tolist()):
+        np.testing.assert_allclose(wx, expect[int(x)], rtol=1e-4)
+
+
+def test_merge_bottomk_lossless():
+    """bottom-k(A ∪ B) == merge(bottom-k(A), bottom-k(B)) (paper §3.1)."""
+    import jax.numpy as jnp
+
+    from repro.core.distributed import merge_bottomk
+
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        ka = rng.integers(0, 40, size=16)
+        kb = rng.integers(0, 40, size=16)
+        sa = rng.uniform(size=16).astype(np.float32)
+        sb = rng.uniform(size=16).astype(np.float32)
+        mk, ms = merge_bottomk(
+            jnp.asarray(ka, jnp.int32), jnp.asarray(sa),
+            jnp.asarray(kb, jnp.int32), jnp.asarray(sb), 8,
+        )
+        # reference: min score per key over the union, then bottom-8
+        import collections
+
+        best = collections.defaultdict(lambda: np.inf)
+        for k_, s_ in zip(ka.tolist() + kb.tolist(), sa.tolist() + sb.tolist()):
+            best[k_] = min(best[k_], s_)
+        ref = sorted(best.items(), key=lambda kv: kv[1])[:8]
+        got = [(int(k_), float(s_)) for k_, s_ in zip(np.asarray(mk), np.asarray(ms)) if k_ != int(EMPTY)]
+        assert [k for k, _ in got] == [k for k, _ in ref]
+        np.testing.assert_allclose([s for _, s in got], [s for _, s in ref], rtol=1e-6)

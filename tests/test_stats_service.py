@@ -1,0 +1,62 @@
+"""StreamStatsService + hot/cold embedding planning integration tests."""
+import numpy as np
+
+from repro.models.embedding_sharding import hot_cold_lookup, plan_hot_cold, split_table
+from repro.stats.service import StatsConfig, StreamStatsService
+
+
+def _service_with_stream(n=60000, alpha=1.4, n_keys=5000, k=1024):
+    svc = StreamStatsService(StatsConfig(k=k, ls=(1.0, 8.0, 64.0), chunk=1024))
+    rng = np.random.default_rng(0)
+    keys = (rng.zipf(alpha, size=n) % n_keys).astype(np.int64)
+    for i in range(0, n, 10000):  # batched ingestion like a pipeline
+        svc.observe(keys[i : i + 10000])
+    return svc, keys
+
+
+def test_queries_accuracy():
+    svc, keys = _service_with_stream()
+    ukeys, cnts = np.unique(keys, return_counts=True)
+    assert abs(svc.query_distinct() - len(ukeys)) / len(ukeys) < 0.15
+    assert abs(svc.query_total() - len(keys)) / len(keys) < 0.15
+    truth8 = float(np.minimum(cnts, 8).sum())
+    assert abs(svc.campaign_forecast(8) - truth8) / truth8 < 0.15
+    # segment query
+    seg = lambda k: k % 2 == 0
+    truth_seg = float(np.minimum(cnts[ukeys % 2 == 0], 8).sum())
+    assert abs(svc.campaign_forecast(8, segment=seg) - truth_seg) / truth_seg < 0.2
+
+
+def test_pick_l_matches_log_distance():
+    svc = StreamStatsService(StatsConfig(ls=(1.0, 8.0, 64.0)))
+    assert svc.pick_l(1) == 1.0
+    assert svc.pick_l(10) == 8.0
+    assert svc.pick_l(500) == 64.0
+
+
+def test_state_roundtrip():
+    svc, keys = _service_with_stream(n=20000)
+    q1 = svc.campaign_forecast(8)
+    state = svc.state_dict()
+    svc2 = StreamStatsService(svc.config)
+    svc2.load_state_dict(state)
+    assert svc2.campaign_forecast(8) == q1
+
+
+def test_hot_cold_plan_and_lookup():
+    import jax.numpy as jnp
+
+    svc, keys = _service_with_stream(n=40000, alpha=1.6, n_keys=2000)
+    plan = plan_hot_cold(svc, n_hot=32)
+    assert 0 < plan.est_hot_traffic_frac <= 1.0
+    # heavy keys should be overrepresented in the plan
+    ukeys, cnts = np.unique(keys, return_counts=True)
+    top = set(ukeys[np.argsort(-cnts)[:200]].tolist())
+    hits = sum(1 for x in plan.hot_ids_sorted if int(x) in top)
+    assert hits >= 16, f"only {hits}/32 hot keys in true top-200"
+
+    table = jnp.asarray(np.random.default_rng(1).normal(size=(2000, 8)), jnp.float32)
+    hot_table, hot_ids = split_table(table, plan)
+    ids = jnp.asarray([int(plan.hot_ids_sorted[0]), 3, int(plan.hot_ids_sorted[-1]), 7])
+    out = hot_cold_lookup(table, hot_table, hot_ids, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table)[np.asarray(ids)], rtol=1e-6)
