@@ -7,7 +7,8 @@ Sections:
   2. cv-bounds      — empirical CV vs Thm 5.1/5.4 bounds across disparity
   3. multiobjective — Lemma 6.1 union sizes + combined-estimator accuracy
   4. throughput     — sampler elements/s (oracle vs vectorized vs kernel stage)
-  5. roofline       — summary of the dry-run roofline records (if present)
+  5. service        — incremental StreamStatsService vs buffer-and-replay
+  6. roofline       — summary of the dry-run roofline records (if present)
 """
 from __future__ import annotations
 
@@ -114,7 +115,12 @@ def main() -> None:
 
     tp_main(n=200_000 if not args.full else 2_000_000)
 
-    section("5. Roofline summary (from dry-run records)")
+    section("5. StreamStatsService: incremental vs buffer-and-replay")
+    from benchmarks.service_throughput import main as svc_main
+
+    svc_main(n=200_000 if not args.full else 2_000_000)
+
+    section("6. Roofline summary (from dry-run records)")
     roofline_summary()
 
     print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "

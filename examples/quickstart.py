@@ -1,18 +1,27 @@
 """Quickstart: frequency-cap statistics over a stream in ten lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The sampler is *incremental*: feed batches as they arrive, keep O(k) state,
+finalize whenever you want an answer — no stream buffering anywhere.
 """
 import numpy as np
 
-from repro.core import estimators, freqfns, vectorized
+from repro.core import estimators, freqfns
+from repro.core.incremental import IncrementalSampler
 from repro.data.streams import zipf_keys
 
 # an unaggregated stream: 200k elements, Zipf-popular keys (users, queries...)
 rng = np.random.default_rng(0)
 keys = zipf_keys(rng, 200_000, alpha=1.3, n_keys=100_000)
 
-# one pass, O(k) state: fixed-size continuous SH_l sample tuned for cap_10
-sample = vectorized.sample_fixed_k(keys, k=512, l=10.0, salt=42)
+# fixed-size continuous SH_l sampler tuned for cap_10: one pass, O(k) state.
+# Batches stream through a single jitted, donated-buffer update; the sampler
+# never holds more than k + chunk entries no matter how long the stream runs.
+sampler = IncrementalSampler(l=10.0, k=512, salt=42)
+for i in range(0, len(keys), 8192):          # as an input pipeline would
+    sampler.observe(keys[i : i + 8192])
+sample = sampler.finalize()                   # non-destructive: keep streaming
 
 # estimate any frequency statistic from the same sample
 truth_keys, truth_counts = np.unique(keys, return_counts=True)
@@ -24,8 +33,9 @@ for fn in (freqfns.distinct(), freqfns.cap(10), freqfns.total()):
 
 # the paper's rule: match l to the cap T you care about.  Distinct = cap_1,
 # so an l=1 (distinct-sampling) sketch nails it where the l=10 one cannot:
-s1 = vectorized.sample_fixed_k(keys, k=512, l=1.0, salt=42)
-est = estimators.estimate(s1, freqfns.distinct())
+s1 = IncrementalSampler(l=1.0, k=512, salt=42)
+s1.observe(keys)
+est = estimators.estimate(s1.finalize(), freqfns.distinct())
 truth = len(truth_keys)
 print(f"{'distinct':10s} estimate {est:12.0f}   truth {truth:12.0f}   "
       f"err {abs(est-truth)/truth:6.2%}   (from an l=1 sample)")
@@ -36,3 +46,7 @@ est = estimators.estimate(sample, freqfns.cap(10), segment=seg)
 truth = freqfns.exact_statistic(freqfns.cap(10), truth_counts[truth_keys % 7 == 0])
 print(f"{'cap10|seg':10s} estimate {est:12.0f}   truth {truth:12.0f}   "
       f"err {abs(est-truth)/truth:6.2%}")
+
+# need a whole l-grid (any cap T on demand)?  that's the StreamStatsService:
+# one observe() advances every sketch in a single device dispatch — see
+# examples/ad_campaign_stats.py.

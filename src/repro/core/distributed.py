@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .segments import EMPTY, bottom_k_by, scatter_unique, segment_ids, sort_by_key
+from .segments import EMPTY, bottom_k_by, compact_valid, scatter_unique, segment_ids, sort_by_key
 from . import vectorized as VZ
 
 
@@ -60,7 +60,8 @@ def tree_merge_bottomk(keys, seeds, k: int, axis_name: str):
     log2(P) ppermute hops, each exchanging O(k) state: collective bytes
     O(k log P) per device versus O(k P) for the all_gather merge.
     """
-    size = jax.lax.axis_size(axis_name)
+    size = (jax.lax.axis_size(axis_name) if hasattr(jax.lax, "axis_size")
+            else jax.lax.psum(1, axis_name))  # older jax spelling
     stage = 1
     while stage < size:
         perm = [(i, i ^ stage) for i in range(size)]
@@ -81,6 +82,102 @@ def allgather_merge_bottomk(keys, seeds, k: int, axis_name: str):
         jnp.full((1,), EMPTY, all_keys.dtype), jnp.full((1,), jnp.inf, all_seeds.dtype),
         k,
     )
+
+
+# ---------------------------------------------------------------------------
+# Mergeable fixed-k continuous states (1-pass sketches across hosts)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_fixed_k(table_a, table_b, l, salt, *, k):
+    """Merge two per-host fixed-k continuous sampler states (core.vectorized
+    ``TableState``) under a shared threshold.
+
+    Procedure: union the tables; combine duplicate keys (counts add, KeyBase
+    and seed min, plus one expected entry clip ``1/max(1/l, tau)`` per extra
+    host — a key that entered on m hosts paid m entry-time clips while the
+    continuous estimator corrects for exactly one); adopt the *lower*
+    threshold; run one batched eviction round (§5.2 machinery) back down to
+    <= k keys.  The result is a valid fixed-k state with ``table_a``'s
+    capacity, so it can keep ingesting or merge again — pairwise folds give
+    multi-host trees, the same topology as the bottom-k merges above.
+
+    Accuracy contract (measured in tests/test_incremental.py): with
+    **key-partitioned** shards (each key lives on one host — the natural
+    sharding for user-keyed streams) merged estimates are unbiased within
+    noise, like a single-stream run.  With arbitrary element-level splits,
+    keys straddling hosts make the 1-pass merge inherently approximate
+    (per-host entry events condition on per-host thresholds; cross-shard
+    mass of unsampled keys is unrecoverable) — expect up to ~10% bias at
+    k=512.  Use the 2-pass path (lossless bottom-k merge + exact pass-2
+    weights) when cross-host exactness is required.
+    """
+    cap = table_a.keys.shape[0]
+    tau = jnp.minimum(table_a.tau, table_b.tau)
+    keys2 = jnp.concatenate([table_a.keys, table_b.keys])
+    counts2 = jnp.concatenate([table_a.counts, table_b.counts])
+    kb2 = jnp.concatenate([table_a.kb, table_b.kb])
+    seed2 = jnp.concatenate([table_a.seed, table_b.seed])
+
+    ks, (cn, kb, sd) = sort_by_key(keys2, counts2, kb2, seed2)
+    seg, _ = segment_ids(ks)
+    N = ks.shape[0]
+    live = ks != EMPTY
+    cnt = jax.ops.segment_sum(jnp.where(live, cn, 0.0), seg, num_segments=N)
+    dup = jax.ops.segment_sum(jnp.where(live, 1.0, 0.0), seg, num_segments=N)
+    kbm = jax.ops.segment_min(jnp.where(live, kb, jnp.inf), seg, num_segments=N)
+    sdm = jax.ops.segment_min(jnp.where(live, sd, jnp.inf), seg, num_segments=N)
+    uk, _ = scatter_unique(ks, seg, 0.0)
+
+    # duplicate-entry clip correction (m hosts -> m-1 extra clips)
+    rate = jnp.maximum(1.0 / l, tau)
+    cnt = cnt + jnp.maximum(dup - 1.0, 0.0) / rate
+    cnt = jnp.where(uk != EMPTY, cnt, 0.0)
+    kbm = jnp.where(uk != EMPTY, kbm, jnp.inf)
+    sdm = jnp.where(uk != EMPTY, sdm, jnp.inf)
+
+    round_no = table_a.step + table_b.step + 1
+    keys_e, counts_e, kb_e, seed_e, tau_e = VZ._evict_to_k(
+        uk, cnt, kbm, sdm, tau, k, l, salt, round_no)
+
+    # compact the <= k survivors back into table_a's capacity
+    keys_c, counts_c, kb_c, seed_c = compact_valid(
+        keys_e != EMPTY, keys_e, counts_e, kb_e, seed_e,
+        fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
+    )
+    return VZ.TableState(
+        keys=keys_c[:cap], counts=counts_c[:cap], kb=kb_c[:cap],
+        seed=seed_c[:cap],
+        tau=tau_e,
+        step=jnp.maximum(table_a.step, table_b.step) + 1,
+        overflow=table_a.overflow + table_b.overflow,
+    )
+
+
+def merge_fixed_k_states(tables, l, salt, *, k):
+    """Fold a sequence of per-host fixed-k states into one (pairwise tree)."""
+    tables = list(tables)
+    if not tables:
+        raise ValueError("no states to merge")
+    while len(tables) > 1:
+        nxt = [
+            merge_fixed_k(tables[i], tables[i + 1], l, salt, k=k)
+            if i + 1 < len(tables) else tables[i]
+            for i in range(0, len(tables), 2)
+        ]
+        tables = nxt
+    return tables[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_fixed_k_multi(table_a, table_b, ls, salt, *, k):
+    """Lane-wise merge of two stacked multi-l states (leading axis |ls|) —
+    the multi-host path of stats.service.StreamStatsService."""
+    return jax.vmap(
+        lambda ta, tb, l: merge_fixed_k(ta, tb, l, salt, k=k),
+        in_axes=(0, 0, 0),
+    )(table_a, table_b, ls)
 
 
 # ---------------------------------------------------------------------------
@@ -107,18 +204,15 @@ def pass1_shard(keys_shard, weights_shard, *, kind, l, salt, k, chunk, axis_name
     def body(carry, xs):
         skeys, sseeds = carry
         ck, cw, ce = xs
-        scores = VZ.element_scores(kind, ck, ce, cw, l, salt)
-        ks, (sc,) = sort_by_key(ck, scores)
-        seg, _ = segment_ids(ks)
-        mins = jax.ops.segment_min(jnp.where(ks != EMPTY, sc, jnp.inf), seg, num_segments=chunk)
-        uk, _ = scatter_unique(ks, seg, 0.0)
-        mins = jnp.where(uk != EMPTY, mins, jnp.inf)
+        uk, mins = VZ.chunk_bottomk_summary(ck, ce, cw, l, salt, kind=kind)
         return merge_bottomk(skeys, sseeds, uk, mins, cap), None
 
     init = (jnp.full((cap,), EMPTY, jnp.int32), jnp.full((cap,), jnp.inf, jnp.float32))
     # mark the carry as varying over the mesh axis (its value depends on the
-    # shard's data from step 1 on)
-    init = jax.lax.pcast(init, (axis_name,), to="varying")
+    # shard's data from step 1 on); older jax (< pcast) doesn't track varying
+    # axes, so the cast is unnecessary there
+    if hasattr(jax.lax, "pcast"):
+        init = jax.lax.pcast(init, (axis_name,), to="varying")
     (skeys, sseeds), _ = jax.lax.scan(body, init, (kshape, wshape, eids))
     if merge == "tree":
         return tree_merge_bottomk(skeys, sseeds, cap, axis_name)

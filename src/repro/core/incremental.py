@@ -1,0 +1,415 @@
+"""Incremental sampler state API: the streaming face of core.vectorized.
+
+The chunked samplers were born as ``lax.scan`` loops over a fully
+materialized stream.  This module exposes the *same* per-chunk step
+functions as an explicit state machine so long-lived services ingest a
+stream piece by piece with O(k) resident state and zero recompute:
+
+    state = init_state(l=20.0, k=4096, chunk=2048)
+    state = update(state, key_chunk, weight_chunk)      # one jitted dispatch
+    ...
+    result = finalize(state)                            # SampleResult
+
+Contracts (verified in tests/test_incremental.py):
+
+* **Same function, same bits.**  ``update`` applies exactly the step the
+  one-shot scan applies (``vectorized.fixed_tau_step`` / ``fixed_k_step``),
+  with element ids continuing from ``state.n_seen``.  Feeding a stream
+  through ``update`` in chunk-aligned pieces and finalizing reproduces the
+  one-shot sampler on the concatenated stream **element-exactly** (fixed
+  threshold) / identically per lane (fixed-k, same chunk boundaries).
+* **Donated buffers.**  The update jits donate the incoming state pytree, so
+  steady-state ingestion performs no state copies; never reuse a state you
+  passed to ``update`` — use its return value.
+* **Multi-l in one dispatch.**  ``init_multi_state`` stacks one fixed-k
+  continuous sketch per l of a grid (leading axis |ls|); ``update_multi``
+  advances *all* of them per batch in a single device dispatch: the fused
+  multi-l capscore kernel (kernels/capscore) scores every lane in one
+  VMEM-resident pass over the elements, then the merge/evict step runs
+  vmapped across lanes.
+* **O(k) checkpoints.**  A state is a flat pytree of fixed-size arrays —
+  serialize it with ``jax.tree`` utilities or checkpoint.manager; size is
+  independent of how many elements were observed.
+
+Unaligned batches (sizes not a multiple of ``chunk``) are the caller's
+concern by design — the pure functions stay shape-static for jit.  The
+``IncrementalSampler`` / ``MultiSampler`` wrappers below carry the O(chunk)
+host-side remainder buffer and do the padding at finalize, mirroring the
+one-shot samplers' end-of-stream padding so exactness is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.capscore.ops import capscore_multi
+from .samplers import SampleResult
+from .segments import EMPTY
+from . import vectorized as VZ
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SamplerState:
+    """Streaming sampler state: the scan carry, liberated from the scan.
+
+    ``table`` leaves are [capacity] for a single sketch or [L, capacity] for
+    a stacked multi-l state; ``l`` is scalar or [L] to match; ``n_seen`` is
+    the stream position (it seeds element ids, shared by all lanes).
+    """
+
+    table: VZ.TableState
+    n_seen: jax.Array   # int32 scalar: elements consumed so far
+    l: jax.Array        # float32: cap parameter(s)
+    salt: jax.Array     # uint32 scalar
+
+    def tree_flatten(self):
+        return (self.table, self.n_seen, self.l, self.salt), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.table.keys.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Static (compile-time) configuration of an incremental sampler."""
+
+    kind: str = "continuous"
+    k: int | None = None          # fixed-k mode when set, else fixed-tau
+    chunk: int = 2048
+
+    @property
+    def mode(self) -> str:
+        return "fixed_k" if self.k is not None else "fixed_tau"
+
+
+def init_state(l, *, k=None, tau=None, kind="continuous", chunk=2048,
+               capacity=8192, salt=0) -> tuple[SamplerState, SamplerSpec]:
+    """Fresh O(k)/O(capacity) sampler state + its static spec.
+
+    Fixed-k (``k`` set): capacity is k + chunk so a chunk merge never
+    overflows before eviction (only ``kind="continuous"`` supports one-pass
+    fixed-k, as in the one-shot sampler).  Fixed-tau (``tau`` set): table of
+    ``capacity`` slots, overflow counted and raised at finalize.
+    """
+    if (k is None) == (tau is None):
+        raise ValueError("exactly one of k= / tau= must be given")
+    if k is not None:
+        if kind != "continuous":
+            raise ValueError("one-pass fixed-k requires kind='continuous'")
+        table = VZ.init_table(k + chunk)
+    else:
+        table = VZ.init_table(capacity, tau)
+    state = SamplerState(
+        table=table,
+        n_seen=jnp.int32(0),
+        l=jnp.float32(l),
+        salt=jnp.asarray(salt, jnp.uint32),
+    )
+    return state, SamplerSpec(kind=kind, k=k, chunk=chunk)
+
+
+def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
+    chunk = spec.chunk
+    n = keys.shape[0]
+    if n % chunk:
+        raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
+    kc = keys.reshape(n // chunk, chunk)
+    wc = weights.reshape(n // chunk, chunk)
+
+    def body(carry, xs):
+        table, pos = carry
+        ck, cw = xs
+        eids = pos + jnp.arange(chunk, dtype=jnp.int32)
+        if spec.mode == "fixed_k":
+            table = VZ.fixed_k_step(table, ck, cw, eids, state.l, state.salt, k=spec.k)
+        else:
+            table = VZ.fixed_tau_step(table, ck, cw, eids, state.l, state.salt,
+                                      kind=spec.kind)
+        return (table, pos + chunk), None
+
+    (table, pos), _ = jax.lax.scan(body, (state.table, state.n_seen), (kc, wc))
+    return SamplerState(table, pos, state.l, state.salt)
+
+
+_update_donated = functools.partial(jax.jit, static_argnames=("spec",),
+                                    donate_argnums=(0,))(_update_impl)
+_update_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_impl)
+
+
+def update(state: SamplerState, keys, weights, spec: SamplerSpec, *,
+           donate: bool = True) -> SamplerState:
+    """Advance the sampler over a chunk-aligned batch in one jitted dispatch.
+
+    With ``donate=True`` (default) the input state's buffers are donated to
+    the output — do not touch ``state`` afterwards.  ``donate=False`` leaves
+    the input intact (the lazy-finalize flush path).
+    """
+    fn = _update_donated if donate else _update_fresh
+    return fn(state, jnp.asarray(keys), jnp.asarray(weights), spec)
+
+
+def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
+    """Extract the SampleResult; the state remains usable for more updates."""
+    st = state.table
+    overflow = int(st.overflow)
+    if overflow > 0:
+        raise RuntimeError(
+            f"fixed-tau capacity overflow ({overflow}); raise capacity")
+    return VZ._to_result(st, l=float(state.l), kind=spec.kind, tau=float(st.tau))
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-l state: every sketch of an l-grid advances per dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_multi_state(ls, *, k, chunk=2048, salt=0) -> tuple[SamplerState, SamplerSpec]:
+    """One fixed-k continuous sketch per l, stacked on a leading axis."""
+    ls = np.asarray(ls, np.float32)
+    L = len(ls)
+    capacity = k + chunk
+    table = VZ.TableState(
+        keys=jnp.full((L, capacity), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((L, capacity), jnp.float32),
+        kb=jnp.full((L, capacity), jnp.inf, jnp.float32),
+        seed=jnp.full((L, capacity), jnp.inf, jnp.float32),
+        tau=jnp.full((L,), jnp.inf, jnp.float32),
+        step=jnp.zeros((L,), jnp.int32),
+        overflow=jnp.zeros((L,), jnp.int32),
+    )
+    state = SamplerState(
+        table=table,
+        n_seen=jnp.int32(0),
+        l=jnp.asarray(ls),
+        salt=jnp.asarray(salt, jnp.uint32),
+    )
+    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk)
+
+
+def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
+    chunk = spec.chunk
+    n = keys.shape[0]
+    if n % chunk:
+        raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
+    kc = keys.reshape(n // chunk, chunk)
+    wc = weights.reshape(n // chunk, chunk)
+
+    def lane_step(table, ck, cw, score, delta, entry, kb, l):
+        return VZ.fixed_k_step_scored(table, ck, cw, score, delta, entry, kb,
+                                      k=spec.k, l=l, salt=state.salt)
+
+    vstep = jax.vmap(lane_step, in_axes=(0, None, None, 0, 0, 0, 0, 0))
+
+    def body(carry, xs):
+        table, pos = carry
+        ck, cw = xs
+        eids = pos + jnp.arange(chunk, dtype=jnp.int32)
+        # one fused pass scores every l lane under its current threshold
+        score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
+                                                 state.salt)
+        table = vstep(table, ck, cw, score, delta, entry, kb, state.l)
+        return (table, pos + chunk), None
+
+    (table, pos), _ = jax.lax.scan(body, (state.table, state.n_seen), (kc, wc))
+    return SamplerState(table, pos, state.l, state.salt)
+
+
+_update_multi_donated = functools.partial(jax.jit, static_argnames=("spec",),
+                                          donate_argnums=(0,))(_update_multi_impl)
+_update_multi_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_multi_impl)
+
+
+def update_multi(state: SamplerState, keys, weights, spec: SamplerSpec, *,
+                 donate: bool = True) -> SamplerState:
+    """Advance every l-lane sketch over a chunk-aligned batch: one dispatch."""
+    fn = _update_multi_donated if donate else _update_multi_fresh
+    return fn(state, jnp.asarray(keys), jnp.asarray(weights), spec)
+
+
+def finalize_multi(state: SamplerState, spec: SamplerSpec,
+                   ls=None) -> dict[float, SampleResult]:
+    """Per-lane SampleResults, keyed by l (host-side extraction).
+
+    ``ls`` supplies the dict keys (the caller's original, full-precision l
+    values); defaults to the f32 lane values stored in the state.  Pass the
+    configured grid so lookups like ``results[3.3]`` don't miss on f32
+    rounding.
+    """
+    tables = jax.device_get(state.table)
+    if ls is None:
+        ls = np.asarray(state.l)
+    out = {}
+    for j, l in enumerate(ls):
+        st = jax.tree.map(lambda a: a[j], tables)
+        out[float(l)] = VZ._to_result(st, l=float(l), kind=spec.kind,
+                                      tau=float(st.tau))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrappers: remainder buffering for unaligned batches
+# ---------------------------------------------------------------------------
+
+
+class _RemainderBuffer:
+    """O(chunk) staging area between arbitrary observe() batches and the
+    chunk-aligned jitted update."""
+
+    def __init__(self, chunk: int):
+        self.chunk = chunk
+        self.keys = np.zeros(0, np.int32)
+        self.weights = np.zeros(0, np.float32)
+
+    def add(self, keys, weights):
+        """Append; return the chunk-aligned prefix ready for dispatch."""
+        keys = np.concatenate([self.keys, np.asarray(keys, np.int32).reshape(-1)])
+        if weights is None:
+            weights = np.ones(len(keys) - len(self.weights), np.float32)
+        weights = np.concatenate(
+            [self.weights, np.asarray(weights, np.float32).reshape(-1)])
+        m = (len(keys) // self.chunk) * self.chunk
+        self.keys, self.weights = keys[m:], weights[m:]
+        return (keys[:m], weights[:m]) if m else (None, None)
+
+    def flush_padded(self):
+        """The trailing partial chunk, EMPTY/0-padded to one full chunk —
+        exactly the padding the one-shot samplers apply at end-of-stream."""
+        if not len(self.keys):
+            return None, None
+        pad = self.chunk - len(self.keys)
+        keys = np.concatenate([self.keys, np.full(pad, int(EMPTY), np.int32)])
+        weights = np.concatenate([self.weights, np.zeros(pad, np.float32)])
+        return keys, weights
+
+    def state_dict(self) -> dict:
+        """Fixed-shape payload ([chunk] + a length scalar) so checkpoints
+        restore into a fresh buffer regardless of current fill level."""
+        pad = self.chunk - len(self.keys)
+        return {
+            "rem_keys": np.concatenate([self.keys, np.zeros(pad, np.int32)]),
+            "rem_weights": np.concatenate([self.weights, np.zeros(pad, np.float32)]),
+            "rem_len": np.int32(len(self.keys)),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        m = int(d["rem_len"])
+        self.keys = np.asarray(d["rem_keys"], np.int32)[:m]
+        self.weights = np.asarray(d["rem_weights"], np.float32)[:m]
+
+    @property
+    def nbytes(self) -> int:
+        return self.keys.nbytes + self.weights.nbytes
+
+
+class IncrementalSampler:
+    """Single-sketch streaming sampler with arbitrary batch sizes.
+
+    Thin stateful shell over the pure API: buffers the sub-chunk remainder on
+    host, dispatches chunk-aligned prefixes through the donated update, and
+    pads only at (non-destructive) finalize.
+    """
+
+    def __init__(self, l, *, k=None, tau=None, kind="continuous", chunk=2048,
+                 capacity=8192, salt=0):
+        self.state, self.spec = init_state(
+            l, k=k, tau=tau, kind=kind, chunk=chunk, capacity=capacity, salt=salt)
+        self._rem = _RemainderBuffer(chunk)
+
+    def observe(self, keys, weights=None) -> None:
+        bk, bw = self._rem.add(keys, weights)
+        if bk is not None:
+            self.state = update(self.state, bk, bw, self.spec)
+
+    def flushed_state(self) -> SamplerState:
+        """State with the (padded) sub-chunk remainder folded in — what
+        finalize sees; the live state is left untouched."""
+        state = self.state
+        fk, fw = self._rem.flush_padded()
+        if fk is not None:
+            state = update(state, fk, fw, self.spec, donate=False)
+        return state
+
+    def finalize(self) -> SampleResult:
+        """Current sample over everything observed; ingestion may continue."""
+        return finalize(self.flushed_state(), self.spec)
+
+    @property
+    def n_observed(self) -> int:
+        return int(self.state.n_seen) + len(self._rem.keys)
+
+
+class MultiSampler:
+    """l-grid streaming sampler: all lanes advance in one dispatch/batch."""
+
+    def __init__(self, ls, *, k, chunk=2048, salt=0):
+        self.ls = tuple(float(l) for l in ls)  # full-precision query keys
+        self.state, self.spec = init_multi_state(ls, k=k, chunk=chunk, salt=salt)
+        self._rem = _RemainderBuffer(chunk)
+
+    def observe(self, keys, weights=None) -> None:
+        bk, bw = self._rem.add(keys, weights)
+        if bk is not None:
+            self.state = update_multi(self.state, bk, bw, self.spec)
+
+    def flushed_state(self) -> SamplerState:
+        """State with the (padded) sub-chunk remainder folded in — what
+        finalize sees; the live state is left untouched.  Use this when
+        handing the table to merge_fixed_k so trailing elements count."""
+        state = self.state
+        fk, fw = self._rem.flush_padded()
+        if fk is not None:
+            state = update_multi(state, fk, fw, self.spec, donate=False)
+        return state
+
+    def finalize(self) -> dict[float, SampleResult]:
+        return finalize_multi(self.flushed_state(), self.spec, ls=self.ls)
+
+    @property
+    def n_observed(self) -> int:
+        return int(self.state.n_seen) + len(self._rem.keys)
+
+    # -- serialization (O(k * |ls| + chunk), independent of stream length) --
+
+    def state_dict(self) -> dict:
+        t = jax.device_get(self.state.table)
+        d = {
+            "keys": t.keys, "counts": t.counts, "kb": t.kb, "seed": t.seed,
+            "tau": t.tau, "step": t.step, "overflow": t.overflow,
+            "n_seen": np.int32(self.state.n_seen),
+            "ls": np.asarray(self.state.l),
+            "salt": np.uint32(self.state.salt),
+        }
+        d.update(self._rem.state_dict())
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        table = VZ.TableState(
+            keys=jnp.asarray(d["keys"]), counts=jnp.asarray(d["counts"]),
+            kb=jnp.asarray(d["kb"]), seed=jnp.asarray(d["seed"]),
+            tau=jnp.asarray(d["tau"]),
+            step=jnp.asarray(d["step"]), overflow=jnp.asarray(d["overflow"]),
+        )
+        self.state = SamplerState(
+            table=table,
+            n_seen=jnp.asarray(d["n_seen"], jnp.int32),
+            l=jnp.asarray(d["ls"], jnp.float32),
+            salt=jnp.asarray(d["salt"], jnp.uint32),
+        )
+        self._rem.load_state_dict(d)
+
+    @property
+    def resident_bytes(self) -> int:
+        """Device-resident sketch bytes + host remainder bytes."""
+        leaves = jax.tree.leaves(self.state)
+        return sum(int(np.asarray(x).nbytes) for x in leaves) + self._rem.nbytes

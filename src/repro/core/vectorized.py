@@ -151,6 +151,18 @@ def aggregate_discrete(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
     return _aggregate(keys, weights, entry, weights, scores, scores)
 
 
+def aggregate_continuous_scored(keys, weights, score, delta, entry, kb) -> ChunkAgg:
+    """``aggregate_continuous`` on precomputed per-element scoring outputs.
+
+    ``score/delta/entry`` are exactly what the fused capscore kernel emits
+    (kernels/capscore), so the multi-l update can score every l lane in one
+    device pass and feed each lane through the same segment machinery.
+    """
+    entry = entry.astype(bool) & (keys != EMPTY)
+    score = jnp.where(keys == EMPTY, INF, score)
+    return _aggregate(keys, weights, entry, weights - delta, score, kb)
+
+
 # ---------------------------------------------------------------------------
 # State merge (state table + chunk aggregates -> combined table)
 # ---------------------------------------------------------------------------
@@ -159,7 +171,10 @@ def aggregate_discrete(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
 class TableState(NamedTuple):
     keys: jax.Array    # [cap]
     counts: jax.Array  # [cap] float32
-    kb: jax.Array      # [cap] KeyBase / seed payload
+    kb: jax.Array      # [cap] KeyBase / min-score payload
+    seed: jax.Array    # [cap] running min element score (the key's bottom-k
+    #                    seed over observed elements) — the coordinated-merge
+    #                    handle of core.distributed.merge_fixed_k
     tau: jax.Array     # scalar float32
     step: jax.Array    # scalar int32 (eviction round counter)
     overflow: jax.Array  # scalar int32 (fixed-tau capacity overflow count)
@@ -170,6 +185,7 @@ def _merge_table(state: TableState, agg: ChunkAgg):
 
     cached key:   count += chunk total weight (Alg 2/4/5 cached branch)
     new key:      insert iff an entry event happened, count = contrib
+    seed:         running min element score (both branches)
     """
     cap = state.keys.shape[0]
     C = agg.ukeys.shape[0]
@@ -181,8 +197,11 @@ def _merge_table(state: TableState, agg: ChunkAgg):
     ent2 = jnp.concatenate([jnp.zeros((cap,), bool), agg.entered])
     ctr2 = jnp.concatenate([jnp.zeros((cap,)), agg.contrib])
     kb2 = jnp.concatenate([state.kb, agg.kb])
+    sd2 = jnp.concatenate([state.seed, agg.min_score])
 
-    ks, (st, cn, wt, en, ct, kb) = sort_by_key(keys2, is_state, cnt2, wtot2, ent2, ctr2, kb2)
+    ks, (st, cn, wt, en, ct, kb, sd) = sort_by_key(
+        keys2, is_state, cnt2, wtot2, ent2, ctr2, kb2, sd2
+    )
     seg, _ = segment_ids(ks)
     present = jax.ops.segment_max(st.astype(jnp.int32), seg, num_segments=N) > 0
     s_count = jax.ops.segment_sum(cn, seg, num_segments=N)
@@ -190,15 +209,101 @@ def _merge_table(state: TableState, agg: ChunkAgg):
     c_ent = jax.ops.segment_max(en.astype(jnp.int32), seg, num_segments=N) > 0
     c_ctr = jax.ops.segment_sum(ct, seg, num_segments=N)
     kb_m = jax.ops.segment_min(kb, seg, num_segments=N)
+    sd_m = jax.ops.segment_min(sd, seg, num_segments=N)
     ukeys, _ = scatter_unique(ks, seg, 0.0)
 
     new_count = jnp.where(present, s_count + c_w, jnp.where(c_ent, c_ctr, 0.0))
     valid = (ukeys != EMPTY) & (present | c_ent)
-    keys_c, counts_c, kb_c = compact_valid(
-        valid, ukeys, new_count, kb_m, fills=(EMPTY, 0.0, jnp.float32(jnp.inf))
+    keys_c, counts_c, kb_c, seed_c = compact_valid(
+        valid, ukeys, new_count, kb_m, sd_m,
+        fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
     )
     n_valid = jnp.sum(valid.astype(jnp.int32))
-    return keys_c, counts_c, kb_c, n_valid
+    return keys_c, counts_c, kb_c, seed_c, n_valid
+
+
+# ---------------------------------------------------------------------------
+# Single-chunk streaming steps (shared by the scan bodies below and by the
+# incremental state API in core/incremental.py — same function, same jit)
+# ---------------------------------------------------------------------------
+
+
+def init_table(capacity: int, tau=jnp.inf) -> TableState:
+    """Fresh O(capacity) sampler table (the scan carry / streaming state)."""
+    return TableState(
+        keys=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.float32),
+        kb=jnp.full((capacity,), jnp.inf, jnp.float32),
+        seed=jnp.full((capacity,), jnp.inf, jnp.float32),
+        tau=jnp.float32(tau),
+        step=jnp.int32(0),
+        overflow=jnp.int32(0),
+    )
+
+
+def fixed_tau_step(state: TableState, keys, weights, eids, l, salt, *, kind) -> TableState:
+    """Advance a fixed-threshold sampler (Alg 2/4) by one chunk of elements."""
+    capacity = state.keys.shape[0]
+    if kind == "continuous":
+        agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt)
+    else:
+        agg = aggregate_discrete(keys, weights, eids, state.tau, kind, l, salt)
+    keys_c, counts_c, kb_c, seed_c, n_valid = _merge_table(state, agg)
+    over = state.overflow + jnp.maximum(n_valid - capacity, 0)
+    return TableState(keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
+                      seed_c[:capacity], state.tau, state.step + 1, over)
+
+
+def fixed_k_step(state: TableState, keys, weights, eids, l, salt, *, k) -> TableState:
+    """Advance a fixed-k continuous sampler (Alg 5) by one chunk: aggregate
+    under the current threshold, merge, batch-evict back down to <= k."""
+    agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt)
+    return _fixed_k_merge_evict(state, agg, k, l, salt)
+
+
+def fixed_k_step_scored(state: TableState, keys, weights, score, delta, entry, kb,
+                        *, k, l, salt) -> TableState:
+    """``fixed_k_step`` on precomputed capscore outputs (multi-l fused path)."""
+    agg = aggregate_continuous_scored(keys, weights, score, delta, entry, kb)
+    return _fixed_k_merge_evict(state, agg, k, l, salt)
+
+
+def _fixed_k_merge_evict(state: TableState, agg: ChunkAgg, k, l, salt) -> TableState:
+    capacity = state.keys.shape[0]
+    keys_c, counts_c, kb_c, seed_c, _ = _merge_table(state, agg)
+    keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k(
+        keys_c[:capacity], counts_c[:capacity], kb_c[:capacity], seed_c[:capacity],
+        state.tau, k, l, salt, state.step + 1,
+    )
+    return TableState(keys_e, counts_e, kb_e, seed_e, tau_e, state.step + 1, state.overflow)
+
+
+def chunk_bottomk_summary(keys, eids, weights, l, salt, *, kind):
+    """Per-chunk (unique key, min element score) summary for pass-1 bottom-k."""
+    chunk = keys.shape[0]
+    scores = element_scores(kind, keys, eids, weights, l, salt)
+    ks, (sc,) = sort_by_key(keys, scores)
+    seg, _ = segment_ids(ks)
+    mins = jax.ops.segment_min(jnp.where(ks != EMPTY, sc, INF), seg, num_segments=chunk)
+    ukeys, _ = scatter_unique(ks, seg, 0.0)
+    return ukeys, jnp.where(ukeys != EMPTY, mins, INF)
+
+
+def pass1_step(carry, keys, weights, eids, l, salt, *, kind, cap):
+    """Advance a bottom-k-by-seed summary (Alg 1 pass I) by one chunk."""
+    skeys, sseeds = carry
+    ukeys, mins = chunk_bottomk_summary(keys, eids, weights, l, salt, kind=kind)
+    # merge with state: combine duplicates by min-seed, keep bottom-cap
+    keys2 = jnp.concatenate([skeys, ukeys])
+    seeds2 = jnp.concatenate([sseeds, mins])
+    ks2, (sd2,) = sort_by_key(keys2, seeds2)
+    seg2, _ = segment_ids(ks2)
+    N = ks2.shape[0]
+    sd_m = jax.ops.segment_min(sd2, seg2, num_segments=N)
+    uk2, _ = scatter_unique(ks2, seg2, 0.0)
+    sd_m = jnp.where(uk2 != EMPTY, sd_m, INF)
+    sd_k, uk_k = bottom_k_by(sd_m, cap, uk2, fills=(EMPTY,))
+    return uk_k, sd_k
 
 
 # ---------------------------------------------------------------------------
@@ -214,28 +319,11 @@ def _run_fixed_tau(keys, weights, l, salt, tau, *, kind, capacity, chunk):
     weights = weights.reshape(n_chunks, chunk)
     eids = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
 
-    init = TableState(
-        keys=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
-        counts=jnp.zeros((capacity,), jnp.float32),
-        kb=jnp.full((capacity,), jnp.inf, jnp.float32),
-        tau=jnp.float32(tau),
-        step=jnp.int32(0),
-        overflow=jnp.int32(0),
-    )
+    init = init_table(capacity, tau)
 
     def body(state: TableState, xs):
         ck, cw, ce = xs
-        if kind == "continuous":
-            agg = aggregate_continuous(ck, cw, ce, state.tau, l, salt)
-        else:
-            agg = aggregate_discrete(ck, cw, ce, state.tau, kind, l, salt)
-        keys_c, counts_c, kb_c, n_valid = _merge_table(state, agg)
-        over = state.overflow + jnp.maximum(n_valid - capacity, 0)
-        return (
-            TableState(keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
-                       state.tau, state.step + 1, over),
-            None,
-        )
+        return fixed_tau_step(state, ck, cw, ce, l, salt, kind=kind), None
 
     state, _ = jax.lax.scan(body, init, (keys, weights, eids))
     return state
@@ -256,7 +344,7 @@ def sample_fixed_tau(keys, weights=None, *, tau, l, kind="continuous", salt=0,
 # ---------------------------------------------------------------------------
 
 
-def _evict_to_k(state_keys, counts, kb, tau, k, l, salt, round_no):
+def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
     """Batched eviction (§5.2): tau* = delta-th largest z; drop z >= tau*."""
     valid = state_keys != EMPTY
     n_valid = jnp.sum(valid.astype(jnp.int32))
@@ -292,8 +380,9 @@ def _evict_to_k(state_keys, counts, kb, tau, k, l, salt, round_no):
     keys_o = jnp.where(evict, EMPTY, state_keys)
     counts_o = jnp.where(evict, 0.0, counts)
     kb_o = jnp.where(evict, INF, kb)
+    seed_o = jnp.where(evict, INF, seed)
     tau_o = jnp.where(delta > 0, tau_star, tau)
-    return keys_o, counts_o, kb_o, tau_o
+    return keys_o, counts_o, kb_o, seed_o, tau_o
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -305,24 +394,11 @@ def _run_fixed_k_continuous(keys, weights, l, salt, *, k, chunk):
     weights = weights.reshape(n_chunks, chunk)
     eids = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
 
-    init = TableState(
-        keys=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
-        counts=jnp.zeros((capacity,), jnp.float32),
-        kb=jnp.full((capacity,), jnp.inf, jnp.float32),
-        tau=jnp.float32(jnp.inf),
-        step=jnp.int32(0),
-        overflow=jnp.int32(0),
-    )
+    init = init_table(capacity)
 
     def body(state: TableState, xs):
         ck, cw, ce = xs
-        agg = aggregate_continuous(ck, cw, ce, state.tau, l, salt)
-        keys_c, counts_c, kb_c, _ = _merge_table(state, agg)
-        keys_e, counts_e, kb_e, tau_e = _evict_to_k(
-            keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
-            state.tau, k, l, salt, state.step + 1,
-        )
-        return TableState(keys_e, counts_e, kb_e, tau_e, state.step + 1, state.overflow), None
+        return fixed_k_step(state, ck, cw, ce, l, salt, k=k), None
 
     state, _ = jax.lax.scan(body, init, (keys, weights, eids))
     return state
@@ -353,24 +429,8 @@ def _run_pass1(keys, weights, l, salt, *, kind, k, chunk):
     init_seeds = jnp.full((cap,), jnp.inf, jnp.float32)
 
     def body(carry, xs):
-        skeys, sseeds = carry
         ck, cw, ce = xs
-        scores = element_scores(kind, ck, ce, cw, l, salt)
-        ks, (sc,) = sort_by_key(ck, scores)
-        seg, _ = segment_ids(ks)
-        mins = jax.ops.segment_min(jnp.where(ks != EMPTY, sc, INF), seg, num_segments=chunk)
-        ukeys, _ = scatter_unique(ks, seg, 0.0)
-        # merge with state: combine duplicates by min-seed, keep bottom-(k+1)
-        keys2 = jnp.concatenate([skeys, ukeys])
-        seeds2 = jnp.concatenate([sseeds, jnp.where(ukeys != EMPTY, mins, INF)])
-        ks2, (sd2,) = sort_by_key(keys2, seeds2)
-        seg2, _ = segment_ids(ks2)
-        N = ks2.shape[0]
-        sd_m = jax.ops.segment_min(sd2, seg2, num_segments=N)
-        uk2, _ = scatter_unique(ks2, seg2, 0.0)
-        sd_m = jnp.where(uk2 != EMPTY, sd_m, INF)
-        sd_k, uk_k = bottom_k_by(sd_m, cap, uk2, fills=(EMPTY,))
-        return (uk_k, sd_k), None
+        return pass1_step(carry, ck, cw, ce, l, salt, kind=kind, cap=cap), None
 
     (skeys, sseeds), _ = jax.lax.scan(body, (init_keys, init_seeds), (keys, weights, eids))
     return skeys, sseeds

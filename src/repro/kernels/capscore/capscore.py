@@ -138,3 +138,109 @@ def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool = True):
         interpret=interpret,
     )(scalars, keys2, eids2, w2)
     return score.reshape(n), delta.reshape(n), entry.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# Multi-l variant: score every l lane of the sketch grid in one VMEM pass
+# ---------------------------------------------------------------------------
+
+
+def _make_capscore_multi_kernel(n_l: int):
+    """Kernel closure over the (static) number of l lanes.
+
+    The element hashes (eid avalanche -> u, e = -log1p(-u); key avalanche ->
+    Hash(x)) are computed ONCE per element block and kept VMEM-resident while
+    all ``n_l`` (l, tau) lanes are scored — the per-lane work is 4 cheap
+    vector ops, so the whole l-grid costs barely more than one lane.
+    """
+
+    def kernel(scalar_ref, keys_ref, eids_ref, w_ref,
+               score_ref, delta_ref, entry_ref, kb_ref):
+        keys = keys_ref[...].astype(jnp.uint32)
+        eids = eids_ref[...].astype(jnp.uint32)
+        w = w_ref[...]
+        salt = scalar_ref[2 * n_l].astype(jnp.uint32)
+
+        # shared element randomness (independent of l and tau)
+        h = _combine(jnp.full_like(eids, _SEED0), eids)
+        h = _combine(h, np.uint32(SALT_ELEM))
+        h = _combine(h, salt)
+        u = _u01(h)
+        e = -jnp.log1p(-u)
+        v = e / w
+
+        hk = _combine(jnp.full_like(keys, _SEED0), keys)
+        hk = _combine(hk, np.uint32(SALT_KEYBASE))
+        hk = _combine(hk, salt)
+        ku = _u01(hk)  # Hash(x) in (0,1); KeyBase = ku / l
+
+        for j in range(n_l):
+            l = jax.lax.bitcast_convert_type(scalar_ref[j], jnp.float32)
+            tau = jax.lax.bitcast_convert_type(scalar_ref[n_l + j], jnp.float32)
+            inv_l = 1.0 / l
+            kb = ku / l  # division, not *inv_l: bit-identical to the XLA path
+            score = jnp.where(v <= inv_l, kb, v)
+            rate = jnp.maximum(inv_l, tau)
+            delta = e / rate
+            gate = jnp.where(tau * l > 1.0, True, kb < tau)
+            entry = ((delta < w) & gate).astype(jnp.int32)
+            score_ref[j] = score
+            delta_ref[j] = delta
+            entry_ref[j] = entry
+            kb_ref[j] = kb
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_l", "interpret"))
+def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
+                   interpret: bool = True):
+    """Fused multi-l scoring over a stream chunk.
+
+    Args:
+      keys, eids: int32 [N] with N % 1024 == 0 (use ops.capscore_multi).
+      weights: float32 [N].
+      ls, taus: float32 [n_l] per-lane cap parameter / current threshold.
+      salt: uint32 scalar shared by all lanes.
+    Returns:
+      (score f32[n_l, N], delta f32[n_l, N], entry int32[n_l, N],
+       kb f32[n_l, N]) — lane j scored under (ls[j], taus[j]).
+    """
+    n = keys.shape[0]
+    assert n % (BLOCK_ROWS * LANES) == 0, n
+    rows = n // LANES
+    shape2d = (rows, LANES)
+    keys2 = keys.reshape(shape2d)
+    eids2 = eids.reshape(shape2d)
+    w2 = weights.reshape(shape2d)
+    scalars = jnp.concatenate(
+        [
+            jax.lax.bitcast_convert_type(jnp.asarray(ls, jnp.float32), jnp.int32).reshape(n_l),
+            jax.lax.bitcast_convert_type(jnp.asarray(taus, jnp.float32), jnp.int32).reshape(n_l),
+            jnp.asarray(salt, jnp.uint32).astype(jnp.int32).reshape(1),
+        ]
+    )
+
+    grid = (rows // BLOCK_ROWS,)
+    in_blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s: (i, 0))
+    out_blk = lambda: pl.BlockSpec((n_l, BLOCK_ROWS, LANES), lambda i, s: (0, i, 0))
+    shape3d = (n_l, rows, LANES)
+    out_shape = [
+        jax.ShapeDtypeStruct(shape3d, jnp.float32),
+        jax.ShapeDtypeStruct(shape3d, jnp.float32),
+        jax.ShapeDtypeStruct(shape3d, jnp.int32),
+        jax.ShapeDtypeStruct(shape3d, jnp.float32),
+    ]
+    score, delta, entry, kb = pl.pallas_call(
+        _make_capscore_multi_kernel(n_l),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[in_blk(), in_blk(), in_blk()],
+            out_specs=[out_blk(), out_blk(), out_blk(), out_blk()],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, keys2, eids2, w2)
+    return (score.reshape(n_l, n), delta.reshape(n_l, n),
+            entry.reshape(n_l, n), kb.reshape(n_l, n))

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .capscore import BLOCK_ROWS, LANES, capscore as _kernel
-from .ref import capscore_ref
+from .capscore import BLOCK_ROWS, LANES, capscore as _kernel, capscore_multi as _kernel_multi
+from .ref import capscore_multi_ref, capscore_ref
 
 _TILE = BLOCK_ROWS * LANES
 
@@ -35,3 +35,27 @@ def capscore(keys, eids, weights, l, tau, salt, *, backend: str | None = None):
     if pad:
         s, d, e = s[:n], d[:n], e[:n]
     return s, d, e
+
+
+def capscore_multi(keys, eids, weights, ls, taus, salt, *, backend: str | None = None):
+    """Fused multi-l element scoring: one pass over the elements scores every
+    (ls[j], taus[j]) lane of a sketch grid.  backend: 'pallas' | 'xla' | None.
+
+    Returns (score, delta, entry, kb), each shaped [len(ls), N].
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return capscore_multi_ref(keys, eids, weights, ls, taus, salt)
+    n = keys.shape[0]
+    n_l = ls.shape[0] if hasattr(ls, "shape") else len(ls)
+    pad = (-n) % _TILE
+    if pad:
+        keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
+        eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
+        weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
+    s, d, e, kb = _kernel_multi(keys, eids, weights, ls, taus, salt,
+                                n_l=int(n_l), interpret=not _on_tpu())
+    if pad:
+        s, d, e, kb = s[:, :n], d[:, :n], e[:, :n], kb[:, :n]
+    return s, d, e, kb

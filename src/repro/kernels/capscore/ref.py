@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the capscore kernel (mirrors core.vectorized scoring)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ...core import hashing as H
@@ -20,3 +21,29 @@ def capscore_ref(keys, eids, weights, l, tau, salt):
     gate = jnp.where(tau * l > 1.0, True, kb < tau)
     entry = ((delta < weights) & gate).astype(jnp.int32)
     return score, delta, entry
+
+
+def capscore_multi_ref(keys, eids, weights, ls, taus, salt):
+    """Multi-l oracle: lane j = capscore under (ls[j], taus[j]) + KeyBase.
+
+    Element hashes are shared across lanes (the same sharing the fused kernel
+    exploits); per-lane outputs are bit-identical to single-l ``capscore_ref``.
+    """
+    ls = jnp.asarray(ls, jnp.float32)
+    taus = jnp.asarray(taus, jnp.float32)
+    u = H.uniform01(H.hash_combine(eids, jnp.uint32(SALT_ELEM), jnp.uint32(salt)))
+    ku = H.uniform01(H.hash_combine(keys, jnp.uint32(SALT_KEYBASE), jnp.uint32(salt)))
+    e = -jnp.log1p(-u)
+    v = e / weights
+
+    def lane(l, tau):
+        inv_l = 1.0 / l
+        kb = ku / l  # division, not *inv_l: bit-identical to core.vectorized.keybase
+        score = jnp.where(v <= inv_l, kb, v)
+        rate = jnp.maximum(inv_l, tau)
+        delta = e / rate
+        gate = jnp.where(tau * l > 1.0, True, kb < tau)
+        entry = ((delta < weights) & gate).astype(jnp.int32)
+        return score, delta, entry, kb
+
+    return jax.vmap(lane)(ls, taus)

@@ -22,9 +22,10 @@ import tempfile  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..checkpoint import manager as ckpt  # noqa: E402
+from .mesh import make_mesh  # noqa: E402
 from ..configs import registry  # noqa: E402
 from ..data.streams import ShardedStream, StreamCursor  # noqa: E402
 from ..models import transformer as T  # noqa: E402
@@ -33,7 +34,7 @@ from ..parallel.sharding import named_sharding_tree  # noqa: E402
 
 
 def _mesh(n):
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 def _step_fn(cfg, opt_cfg):

@@ -3,18 +3,27 @@ device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the jax version has them
+    (older jax has no AxisType and defaults to the equivalent behavior)."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int | None = None):
     """Small mesh over whatever devices exist (tests / single host)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((1, n, 1), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return make_mesh((1, n, 1), ("pod", "data", "model"))

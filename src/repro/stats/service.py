@@ -1,31 +1,47 @@
 """StreamStatsService: frequency-cap statistics as a first-class framework
-feature (the paper's ad-campaign application, generalized).
+feature (the paper's ad-campaign application, generalized) — now a true
+incremental service.
 
-Attach a service to any input pipeline; it maintains SH_l sketches (one per
-configured l, or a coordinated multi-objective set) over the stream of keys
-flowing through training/serving, with O(k) state per sketch, and answers
+Attach a service to any input pipeline; it maintains one fixed-k continuous
+SH_l sketch per configured l over the stream of keys flowing through
+training/serving and answers
 
-    service.query(T, segment)  ~=  Q(cap_T, segment)
+    service.query_cap(T, segment)  ~=  Q(cap_T, segment)
+
+**State is O(k * |ls|), independent of stream length.**  ``observe()``
+advances every sketch of the l-grid in a single jitted device dispatch with
+donated state buffers (core.incremental.MultiSampler): the fused multi-l
+capscore kernel scores all lanes in one VMEM-resident pass over the batch,
+then the merge/evict step runs vmapped across lanes.  Nothing is buffered
+except the sub-chunk remainder (< chunk elements) awaiting alignment;
+queries finalize the resident sketches lazily (cached until the next
+``observe``) — no replay, no recompute.
 
 Uses: ad-campaign reach forecasting (recsys archs: keys = (user, campaign)
 pairs, answer = number of qualifying impressions under a per-user cap T);
 token-frequency statistics for LM data mixing; degree statistics for GNN
 samplers; expert-load statistics for MoE routing diagnostics.
 
-The service state is a pytree -> it checkpoints with the training state and
-merges across hosts (core.distributed) because sketches are mergeable.
+The service state is a pytree: ``state_dict()`` is a flat dict of fixed-size
+arrays that checkpoints through checkpoint.manager (``save_checkpoint`` /
+``restore_checkpoint`` below) and resumes bit-for-bit mid-stream.  Per-host
+services merge across hosts with core.distributed.merge_fixed_k (see
+``merge()``): unbiased for key-partitioned shards, approximate for arbitrary
+element splits.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from pathlib import Path
 from typing import Sequence
 
 import numpy as np
 
-from ..core import estimators, freqfns
+from ..checkpoint import manager as ckpt_manager
+from ..core import distributed as DZ
+from ..core import estimators, freqfns, incremental
 from ..core.samplers import SampleResult
-from ..core import vectorized as VZ
 
 
 @dataclasses.dataclass
@@ -37,7 +53,7 @@ class StatsConfig:
 
 
 class StreamStatsService:
-    """Host-side orchestrator around the jitted chunked samplers.
+    """Incremental multi-l sketch service over the jitted chunked samplers.
 
     For each l in the grid we keep a fixed-k continuous SH_l sketch.  A
     cap_T query is answered from the sketch with l closest to T in log-space
@@ -46,36 +62,32 @@ class StreamStatsService:
 
     def __init__(self, config: StatsConfig):
         self.config = config
-        self._chunks_keys: list[np.ndarray] = []
-        self._chunks_weights: list[np.ndarray] = []
-        self._n_elements = 0
+        self._sampler = incremental.MultiSampler(
+            tuple(float(l) for l in config.ls), k=config.k,
+            chunk=config.chunk, salt=config.salt,
+        )
         self._results: dict[float, SampleResult] | None = None
 
     # -- ingestion ---------------------------------------------------------
 
     def observe(self, keys, weights=None) -> None:
-        """Feed a batch of stream elements (host arrays ok)."""
-        keys = np.asarray(keys).reshape(-1)
-        if weights is None:
-            weights = np.ones(len(keys), dtype=np.float32)
-        self._chunks_keys.append(keys.astype(np.int64))
-        self._chunks_weights.append(np.asarray(weights, np.float32).reshape(-1))
-        self._n_elements += len(keys)
+        """Feed a batch of stream elements (host arrays ok).
+
+        One jitted dispatch advances all |ls| sketches; only the sub-chunk
+        remainder stays on host until the next batch aligns it.
+        """
+        self._sampler.observe(np.asarray(keys).reshape(-1), weights)
         self._results = None
+
+    @property
+    def n_observed(self) -> int:
+        return self._sampler.n_observed
 
     # -- sketch materialization --------------------------------------------
 
     def _materialize(self) -> dict[float, SampleResult]:
         if self._results is None:
-            keys = np.concatenate(self._chunks_keys) if self._chunks_keys else np.zeros(0, np.int64)
-            w = np.concatenate(self._chunks_weights) if self._chunks_weights else np.zeros(0, np.float32)
-            out = {}
-            for l in self.config.ls:
-                out[l] = VZ.sample_fixed_k(
-                    keys, w, k=self.config.k, l=l,
-                    salt=self.config.salt, chunk=self.config.chunk,
-                )
-            self._results = out
+            self._results = self._sampler.finalize()
         return self._results
 
     def sketches(self) -> dict[float, SampleResult]:
@@ -115,17 +127,59 @@ class StreamStatsService:
         order = np.argsort(-res.counts)
         return res.keys[order[:top]]
 
+    # -- multi-host merge ----------------------------------------------------
+
+    def merge(self, other: "StreamStatsService") -> None:
+        """Absorb another host's sketches (lane-wise merge_fixed_k under the
+        shared per-lane threshold).  Both services must share a config."""
+        if (tuple(other.config.ls) != tuple(self.config.ls)
+                or other.config.k != self.config.k
+                or other.config.salt != self.config.salt
+                or other.config.chunk != self.config.chunk):
+            # salt especially: kb/seed/tau from different hash functions
+            # would union into a silently biased sketch
+            raise ValueError("merge requires identical (k, ls, chunk, salt) configs")
+        mine, theirs = self._sampler.state, other._sampler.state
+        merged = DZ.merge_fixed_k_multi(
+            mine.table, theirs.table, mine.l, mine.salt, k=self.config.k)
+        self._sampler.state = incremental.SamplerState(
+            table=merged,
+            n_seen=mine.n_seen + theirs.n_seen,
+            l=mine.l, salt=mine.salt,
+        )
+        # the other host's sub-chunk remainder joins ours through observe()
+        rem = other._sampler._rem
+        if len(rem.keys):
+            self._sampler.observe(rem.keys, rem.weights)
+        self._results = None
+
     # -- checkpointing --------------------------------------------------------
 
     def state_dict(self) -> dict:
-        return {
-            "keys": self._chunks_keys,
-            "weights": self._chunks_weights,
-            "n": self._n_elements,
-        }
+        """O(k * |ls| + chunk) pytree of fixed-size arrays — the size is
+        independent of how many elements were observed."""
+        return self._sampler.state_dict()
 
     def load_state_dict(self, d: dict) -> None:
-        self._chunks_keys = list(d["keys"])
-        self._chunks_weights = list(d["weights"])
-        self._n_elements = int(d["n"])
+        self._sampler.load_state_dict(d)
         self._results = None
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes held by the sketches + remainder (the whole service state)."""
+        return self._sampler.resident_bytes
+
+    def save_checkpoint(self, ckpt_dir: str | Path, step: int) -> Path:
+        """Write the service state through checkpoint.manager (atomic commit,
+        retention); composes with a training state living in the same dir."""
+        return ckpt_manager.save(ckpt_dir, step, self.state_dict())
+
+    def restore_checkpoint(self, ckpt_dir: str | Path, step: int | None = None) -> int:
+        """Load the latest (or a specific) committed step; returns the step."""
+        if step is None:
+            step = ckpt_manager.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+        tree = ckpt_manager.restore(ckpt_dir, step, self.state_dict())
+        self.load_state_dict(tree)
+        return step

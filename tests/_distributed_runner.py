@@ -9,15 +9,23 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.core import distributed as DD  # noqa: E402
 from repro.core import vectorized as V  # noqa: E402
 
 
+def _make_mesh():
+    try:  # AxisType landed after jax 0.4; default axis types are equivalent
+        from jax.sharding import AxisType
+
+        return jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    except ImportError:
+        return jax.make_mesh((8,), ("data",))
+
+
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = _make_mesh()
 
     rng = np.random.default_rng(0)
     n = 8 * 4096

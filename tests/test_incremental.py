@@ -1,0 +1,278 @@
+"""Incremental state API (core.incremental) and mergeable fixed-k sketches.
+
+Contracts under test:
+
+* chunk-aligned incremental ingestion == one-shot scan, bit-for-bit
+  (fixed-tau: element-exact keys and counts; fixed-k: identical sample,
+  threshold and counts when chunk boundaries align);
+* the multi-l stacked update advances every lane exactly like |ls|
+  independent single-l runs;
+* state_dict -> load_state_dict mid-stream resumes bit-for-bit, and its
+  payload size is independent of the number of observed elements;
+* the multi-l capscore kernel matches the reference scorer lane-for-lane;
+* merge_fixed_k: merged per-host sketches estimate like a single-stream run
+  for key-partitioned shards.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import distributed as D
+from repro.core import estimators as E
+from repro.core import freqfns as F
+from repro.core import incremental as I
+from repro.core import vectorized as V
+
+
+def _stream(n=20000, n_keys=5000, seed=0, weighted=True):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(1.4, size=n) % n_keys).astype(np.int64)
+    w = (rng.exponential(1.0, n) + 0.1).astype(np.float32) if weighted else None
+    return keys, w
+
+
+# ---------------------------------------------------------------------------
+# incremental == one-shot
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["continuous", "discrete", "distinct", "sh"])
+def test_fixed_tau_incremental_element_exact(kind):
+    keys, w = _stream(weighted=(kind == "continuous"))
+    l = {"continuous": 5.0, "discrete": 5.0, "distinct": 1.0, "sh": 1e9}[kind]
+    one = V.sample_fixed_tau(keys, w, tau=0.02, l=l, kind=kind, salt=7,
+                             chunk=1024, capacity=16384)
+    s = I.IncrementalSampler(l, tau=0.02, kind=kind, chunk=1024,
+                             capacity=16384, salt=7)
+    for i in range(0, len(keys), 3000):  # deliberately chunk-unaligned batches
+        s.observe(keys[i:i + 3000], None if w is None else w[i:i + 3000])
+    inc = s.finalize()
+    np.testing.assert_array_equal(one.keys, inc.keys)
+    np.testing.assert_allclose(one.counts, inc.counts, rtol=1e-6, atol=1e-5)
+    assert inc.tau == pytest.approx(one.tau, rel=1e-6)  # f32 state vs host float
+
+
+def test_fixed_k_incremental_matches_one_shot():
+    keys, w = _stream()
+    one = V.sample_fixed_k(keys, w, k=512, l=16.0, salt=3, chunk=1024)
+    s = I.IncrementalSampler(16.0, k=512, chunk=1024, salt=3)
+    for i in range(0, len(keys), 3000):
+        s.observe(keys[i:i + 3000], w[i:i + 3000])
+    inc = s.finalize()
+    np.testing.assert_array_equal(one.keys, inc.keys)
+    np.testing.assert_allclose(one.counts, inc.counts, rtol=1e-6)
+    np.testing.assert_allclose(one.tau, inc.tau, rtol=1e-6)
+
+
+def test_finalize_is_nondestructive_and_repeatable():
+    keys, w = _stream(n=6000)
+    s = I.IncrementalSampler(8.0, k=128, chunk=512, salt=1)
+    s.observe(keys[:3500], w[:3500])
+    r1 = s.finalize()
+    r2 = s.finalize()
+    np.testing.assert_array_equal(r1.keys, r2.keys)
+    s.observe(keys[3500:], w[3500:])  # ingestion continues after finalize
+    r3 = s.finalize()
+    one = V.sample_fixed_k(keys, w, k=128, l=8.0, salt=1, chunk=512)
+    np.testing.assert_array_equal(one.keys, r3.keys)
+
+
+def test_multi_l_lanes_match_single_l_runs():
+    keys, w = _stream()
+    ls = (1.0, 16.0, 256.0)
+    m = I.MultiSampler(ls, k=256, chunk=1024, salt=9)
+    for i in range(0, len(keys), 2500):
+        m.observe(keys[i:i + 2500], w[i:i + 2500])
+    res = m.finalize()
+    for l in ls:
+        ref = V.sample_fixed_k(keys, w, k=256, l=l, salt=9, chunk=1024)
+        np.testing.assert_array_equal(ref.keys, res[l].keys)
+        np.testing.assert_allclose(ref.counts, res[l].counts, rtol=1e-6)
+        np.testing.assert_allclose(ref.tau, res[l].tau, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_state_roundtrip_resumes_bit_for_bit():
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    keys, _ = _stream(n=30000)
+    cfg = StatsConfig(k=256, ls=(1.0, 8.0, 64.0), chunk=1024)
+
+    uninterrupted = StreamStatsService(cfg)
+    for i in range(0, len(keys), 7000):
+        uninterrupted.observe(keys[i:i + 7000])
+
+    first = StreamStatsService(cfg)
+    first.observe(keys[:14000])
+    blob = first.state_dict()  # mid-stream, with a live sub-chunk remainder
+    resumed = StreamStatsService(cfg)
+    resumed.load_state_dict(blob)
+    for i in range(14000, len(keys), 7000):
+        resumed.observe(keys[i:i + 7000])
+
+    for l in cfg.ls:
+        a = uninterrupted.sketches()[l]
+        b = resumed.sketches()[l]
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_allclose(a.counts, b.counts, rtol=1e-6)
+        assert a.tau == b.tau
+
+
+def test_state_size_independent_of_stream_length():
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    cfg = StatsConfig(k=256, ls=(1.0, 8.0), chunk=1024)
+
+    def total_bytes(n):
+        svc = StreamStatsService(cfg)
+        keys, _ = _stream(n=n, seed=4)
+        svc.observe(keys)
+        d = svc.state_dict()
+        # equal element counts in the remainder so payloads are comparable
+        assert svc.n_observed == n
+        return sum(np.asarray(v).nbytes for v in d.values())
+
+    small, large = total_bytes(2048), total_bytes(65536)
+    assert small == large, (small, large)
+
+
+def test_checkpoint_manager_roundtrip(tmp_path):
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    keys, _ = _stream(n=20000)
+    cfg = StatsConfig(k=128, ls=(1.0, 16.0), chunk=1024)
+    svc = StreamStatsService(cfg)
+    svc.observe(keys[:11111])
+    svc.save_checkpoint(tmp_path / "ck", step=1)
+
+    svc2 = StreamStatsService(cfg)
+    step = svc2.restore_checkpoint(tmp_path / "ck")
+    assert step == 1
+    svc.observe(keys[11111:])
+    svc2.observe(keys[11111:])
+    assert svc.campaign_forecast(8) == svc2.campaign_forecast(8)
+
+
+# ---------------------------------------------------------------------------
+# multi-l capscore kernel
+# ---------------------------------------------------------------------------
+
+
+def test_capscore_multi_matches_ref_lane_for_lane():
+    from repro.kernels.capscore.ops import capscore_multi
+    from repro.kernels.capscore.ref import capscore_ref
+
+    rng = np.random.default_rng(5)
+    n = 3000  # non-tile-aligned on purpose
+    keys = jnp.asarray(rng.integers(0, 1 << 30, n), jnp.int32)
+    eids = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.asarray(rng.exponential(2.0, n) + 0.05, jnp.float32)
+    ls = jnp.asarray([1.0, 16.0, 256.0, 4096.0], jnp.float32)
+    taus = jnp.asarray([0.5, np.inf, 0.01, 2.0], jnp.float32)
+
+    s, d, e, kb = capscore_multi(keys, eids, w, ls, taus, 7, backend="pallas")
+    assert s.shape == (4, n)
+    for j in range(4):
+        s1, d1, e1 = capscore_ref(keys, eids, w, float(ls[j]), float(taus[j]),
+                                  jnp.uint32(7))
+        np.testing.assert_allclose(np.asarray(s[j]), np.asarray(s1), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(d[j]), np.asarray(d1), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(e[j]), np.asarray(e1))
+
+
+def test_capscore_multi_backends_agree():
+    from repro.kernels.capscore.ops import capscore_multi
+
+    rng = np.random.default_rng(6)
+    n = 2048
+    keys = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    eids = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.ones(n, jnp.float32)
+    ls = jnp.asarray([2.0, 50.0], jnp.float32)
+    taus = jnp.asarray([0.3, 0.7], jnp.float32)
+    out_p = capscore_multi(keys, eids, w, ls, taus, 9, backend="pallas")
+    out_x = capscore_multi(keys, eids, w, ls, taus, 9, backend="xla")
+    for a, b in zip(out_p, out_x):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# mergeable fixed-k sketches
+# ---------------------------------------------------------------------------
+
+
+def test_merge_fixed_k_key_disjoint_unbiased():
+    keys, _ = _stream(n=40000, n_keys=8000, seed=2)
+    ukeys, cnts = np.unique(keys, return_counts=True)
+    k, l = 512, 16.0
+    truth = F.exact_statistic(F.cap(10), cnts)
+    errs = []
+    for salt in range(6):
+        sa = I.IncrementalSampler(l, k=k, chunk=1024, salt=salt)
+        sb = I.IncrementalSampler(l, k=k, chunk=1024, salt=salt)
+        sa.observe(keys[keys % 2 == 0])
+        sb.observe(keys[keys % 2 == 1])
+        tm = D.merge_fixed_k(sa.flushed_state().table, sb.flushed_state().table,
+                             jnp.float32(l), jnp.uint32(salt), k=k)
+        res = V._to_result(tm, l=l, kind="continuous", tau=float(tm.tau))
+        assert len(res.keys) <= k
+        errs.append((E.estimate(res, F.cap(10)) - truth) / truth)
+    assert abs(np.mean(errs)) < 0.10, errs
+
+
+def test_merge_fixed_k_element_split_bounded_bias():
+    keys, _ = _stream(n=40000, n_keys=8000, seed=2)
+    _, cnts = np.unique(keys, return_counts=True)
+    k, l = 512, 16.0
+    truth = F.exact_statistic(F.cap(10), cnts)
+    errs = []
+    for salt in range(4):
+        sa = I.IncrementalSampler(l, k=k, chunk=1024, salt=salt)
+        sb = I.IncrementalSampler(l, k=k, chunk=1024, salt=salt)
+        sa.observe(keys[0::2])
+        sb.observe(keys[1::2])
+        tm = D.merge_fixed_k(sa.flushed_state().table, sb.flushed_state().table,
+                             jnp.float32(l), jnp.uint32(salt), k=k)
+        res = V._to_result(tm, l=l, kind="continuous", tau=float(tm.tau))
+        errs.append((E.estimate(res, F.cap(10)) - truth) / truth)
+    # keys straddling shards make the 1-pass merge approximate (DESIGN.md §5)
+    assert abs(np.mean(errs)) < 0.20, errs
+
+
+def test_merge_fixed_k_states_fold():
+    keys, _ = _stream(n=40000, n_keys=8000, seed=2)
+    _, cnts = np.unique(keys, return_counts=True)
+    k, l = 256, 16.0
+    tabs = []
+    for i in range(4):
+        s = I.IncrementalSampler(l, k=k, chunk=1024, salt=1)
+        s.observe(keys[keys % 4 == i])
+        tabs.append(s.flushed_state().table)
+    tm = D.merge_fixed_k_states(tabs, jnp.float32(l), jnp.uint32(1), k=k)
+    res = V._to_result(tm, l=l, kind="continuous", tau=float(tm.tau))
+    truth = F.exact_statistic(F.cap(10), cnts)
+    assert len(res.keys) <= k
+    assert abs(E.estimate(res, F.cap(10)) - truth) / truth < 0.25
+
+
+def test_service_merge_multi_host():
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    keys, _ = _stream(n=40000, n_keys=8000, seed=3)
+    _, cnts = np.unique(keys, return_counts=True)
+    cfg = StatsConfig(k=512, ls=(1.0, 8.0, 64.0), chunk=1024)
+    a = StreamStatsService(cfg)
+    b = StreamStatsService(cfg)
+    a.observe(keys[keys % 2 == 0])
+    b.observe(keys[keys % 2 == 1])
+    a.merge(b)
+    assert a.n_observed == len(keys)
+    truth8 = F.exact_statistic(F.cap(8), cnts)
+    assert abs(a.campaign_forecast(8) - truth8) / truth8 < 0.2
+    truth_d = float(len(cnts))
+    assert abs(a.query_distinct() - truth_d) / truth_d < 0.2
