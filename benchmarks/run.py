@@ -8,7 +8,8 @@ Sections:
   3. multiobjective — Lemma 6.1 union sizes + combined-estimator accuracy
   4. throughput     — sampler elements/s (oracle vs vectorized vs kernel stage)
   5. service        — incremental StreamStatsService vs buffer-and-replay
-  6. roofline       — summary of the dry-run roofline records (if present)
+  6. merge          — cross-host merge cost, exact vs approximate mode
+  7. roofline       — summary of the dry-run roofline records (if present)
 """
 from __future__ import annotations
 
@@ -120,7 +121,12 @@ def main() -> None:
 
     svc_main(n=200_000 if not args.full else 2_000_000)
 
-    section("6. Roofline summary (from dry-run records)")
+    section("6. Cross-host merge: exact vs approximate")
+    from benchmarks.merge_throughput import main as merge_main
+
+    merge_main(n=400_000 if not args.full else 4_000_000)
+
+    section("7. Roofline summary (from dry-run records)")
     roofline_summary()
 
     print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "

@@ -1,6 +1,8 @@
 """Distributed 2-pass sampling across an 8-device mesh: each device samples
 its stream shard, states merge via log-depth ppermute butterflies (the
-paper's mergeability, §3.1, as jax.lax collectives).
+paper's mergeability, §3.1, as jax.lax collectives).  The multi-l program
+answers every cap_T of a query grid from ONE launch — chunks are scored once
+through the fused multi-l capscore kernel and all lanes reuse the hashes.
 
     PYTHONPATH=src python examples/distributed_stats.py
 """
@@ -10,34 +12,41 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.core import continuous as C  # noqa: E402
 from repro.core import distributed as DD  # noqa: E402
 from repro.core import freqfns as F  # noqa: E402
+from repro.core.segments import EMPTY  # noqa: E402
 
-mesh = jax.make_mesh((len(jax.devices()),), ("data",), axis_types=(AxisType.Auto,))
+EMPTY = int(EMPTY)
+
+try:  # AxisType landed after jax 0.4; default axis types are equivalent
+    from jax.sharding import AxisType
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+                         axis_types=(AxisType.Auto,))
+except ImportError:
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
 rng = np.random.default_rng(0)
 n = len(jax.devices()) * 65536
 keys = (rng.zipf(1.3, size=n) % 100_000).astype(np.int32)
 weights = np.ones(n, np.float32)
 
-k, l = 256, 8.0
-fn = DD.make_distributed_two_pass(mesh, kind="continuous", l=l, salt=3, k=k,
-                                  chunk=4096, merge="tree")
-skeys, sseeds, sw = map(np.asarray, fn(keys, weights))
-skeys, sseeds, sw = skeys[0], sseeds[0], sw[0]
-
-valid = skeys != 2**31 - 1
-order = np.argsort(sseeds[valid])
-tau = sseeds[valid][order[k]] if valid.sum() > k else np.inf
-sample_w = sw[valid][order[:k]]
+k = 256
+ls = (1.0, 8.0, 64.0)
+fn = DD.make_distributed_two_pass_multi(mesh, ls=ls, salt=3, k=k,
+                                        chunk=4096, merge="tree")
+mkeys, mseeds, mw = (np.asarray(a)[0] for a in fn(keys, weights))
 
 ukeys, cnts = np.unique(keys, return_counts=True)
-for T in (1.0, 8.0, 64.0):
+for j, (l, T) in enumerate(zip(ls, (1.0, 8.0, 64.0))):
+    valid = mkeys[j] != EMPTY
+    order = np.argsort(mseeds[j][valid])
+    tau = mseeds[j][valid][order[k]] if valid.sum() > k else np.inf
+    sample_w = mw[j][valid][order[:k]]
     est = float(np.sum(np.minimum(sample_w, T) / C.inclusion_prob(sample_w, tau, l)))
     truth = F.exact_statistic(F.cap(T), cnts)
-    print(f"cap_{T:<4g} distributed estimate {est:12.0f}  truth {truth:12.0f}  "
-          f"err {abs(est-truth)/truth:6.2%}")
+    print(f"cap_{T:<4g} (lane l={l:<4g}) distributed estimate {est:12.0f}  "
+          f"truth {truth:12.0f}  err {abs(est-truth)/truth:6.2%}")
 print(f"[example] {len(jax.devices())} devices, {n} elements, k={k}, "
-      f"state per device = O(k)")
+      f"|ls|={len(ls)} lanes in one launch, state per device = O(k * |ls|)")

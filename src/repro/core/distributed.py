@@ -5,20 +5,32 @@ streams merge losslessly into the bottom-k summary of the union.  We map it
 onto the mesh:
 
 * every device runs the chunked sampler (core.vectorized) over its *stream
-  shard* inside ``shard_map``;
+  shard* inside ``shard_map``, with shard-hashed element ids
+  (``vectorized.shard_eids``) so randomness never aliases across shards;
 * states merge with ``jax.lax`` collectives:
     - `all_gather` merge: one hop, O(P * k) state per device — right for
-      small k or final extraction;
-    - ring / butterfly merge via `ppermute`: log2(P) hops of bottom-k merges,
-      O(k) live state — right for large k (this is the collective-efficient
-      path measured in benchmarks and the hillclimb);
+      small k, final extraction, and non-power-of-two axes;
+    - butterfly merge via `ppermute`: log2(P) hops of bottom-k merges,
+      O(k) live state — right for large k on power-of-two axes (other sizes
+      fall back to all_gather automatically);
 * pass 2 (exact weights of sampled keys) is a per-shard segment-sum followed
-  by a `psum` — exactly the paper's 2-pass distributed scheme.
+  by a `psum` — exactly the paper's 2-pass distributed scheme;
+* ``make_distributed_two_pass_multi`` runs the whole l-grid in one program:
+  chunks are scored once through the fused multi-l capscore kernel
+  (kernels/capscore) and every lane reuses the element hashes.
+
+Two cross-host merge families (contracts in DESIGN.md §5.2, regression
+tests in tests/test_merge_bias.py):
+
+* ``merge_bottomk`` / ``merge_bottomk_multi`` — lossless summary merges,
+  exact for any element split (the service's exact mode);
+* ``merge_fixed_k`` / ``merge_fixed_k_multi`` — 1-pass sketch merges,
+  unbiased for key-partitioned shards, ~10% bias for element splits.
 
 All functions are pure and shard_map-compatible; they are exercised on real
 multi-device meshes in tests (subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8) and in the dry-run at 512
-devices.
+XLA_FLAGS=--xla_force_host_platform_device_count={3,6,8}) and in the
+dry-run at 512 devices.
 """
 from __future__ import annotations
 
@@ -28,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .segments import EMPTY, bottom_k_by, compact_valid, scatter_unique, segment_ids, sort_by_key
+from .segments import EMPTY, compact_valid, scatter_unique, segment_ids, sort_by_key
 from . import vectorized as VZ
 
 
@@ -42,16 +54,27 @@ def merge_bottomk(keys_a, seeds_a, keys_b, seeds_b, k: int):
 
     Lossless for bottom-k of the union (paper §3.1).
     """
-    keys2 = jnp.concatenate([keys_a, keys_b])
-    seeds2 = jnp.concatenate([seeds_a, seeds_b])
-    ks, (sd,) = sort_by_key(keys2, seeds2)
-    seg, _ = segment_ids(ks)
-    n = ks.shape[0]
-    sd_min = jax.ops.segment_min(sd, seg, num_segments=n)
-    uk, _ = scatter_unique(ks, seg, 0.0)
-    sd_min = jnp.where(uk != EMPTY, sd_min, jnp.inf)
-    sd_k, uk_k = bottom_k_by(sd_min, k, uk, fills=(EMPTY,))
-    return uk_k, sd_k
+    return VZ.merge_bottomk_summary(keys_a, seeds_a, keys_b, seeds_b, k)
+
+
+def _lanewise_merge_bottomk(keys_a, seeds_a, keys_b, seeds_b, cap: int):
+    """vmap of merge_bottomk over stacked lanes — the one definition shared
+    by merge_bottomk_multi and both collective multi-lane mergers."""
+    return jax.vmap(
+        lambda ka, sa, kb, sb: merge_bottomk(ka, sa, kb, sb, cap)
+    )(keys_a, seeds_a, keys_b, seeds_b)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def merge_bottomk_multi(keys_a, seeds_a, keys_b, seeds_b, *, cap):
+    """Lane-wise lossless min-merge of stacked bottom-cap summaries [L, cap] —
+    the exact-mode multi-host path of stats.service.StreamStatsService."""
+    return _lanewise_merge_bottomk(keys_a, seeds_a, keys_b, seeds_b, cap)
+
+
+def _axis_size(axis_name: str) -> int:
+    return (jax.lax.axis_size(axis_name) if hasattr(jax.lax, "axis_size")
+            else jax.lax.psum(1, axis_name))  # older jax spelling
 
 
 def tree_merge_bottomk(keys, seeds, k: int, axis_name: str):
@@ -59,9 +82,14 @@ def tree_merge_bottomk(keys, seeds, k: int, axis_name: str):
 
     log2(P) ppermute hops, each exchanging O(k) state: collective bytes
     O(k log P) per device versus O(k P) for the all_gather merge.
+
+    The butterfly permutation ``i ^ stage`` is only a valid pairing when the
+    axis size is a power of two; other sizes fall back to the one-hop
+    all_gather merge (same result, O(k P) bytes).
     """
-    size = (jax.lax.axis_size(axis_name) if hasattr(jax.lax, "axis_size")
-            else jax.lax.psum(1, axis_name))  # older jax spelling
+    size = _axis_size(axis_name)
+    if size & (size - 1):
+        return allgather_merge_bottomk(keys, seeds, k, axis_name)
     stage = 1
     while stage < size:
         perm = [(i, i ^ stage) for i in range(size)]
@@ -82,6 +110,33 @@ def allgather_merge_bottomk(keys, seeds, k: int, axis_name: str):
         jnp.full((1,), EMPTY, all_keys.dtype), jnp.full((1,), jnp.inf, all_seeds.dtype),
         k,
     )
+
+
+def tree_merge_bottomk_multi(keys, seeds, cap: int, axis_name: str):
+    """Butterfly merge of stacked per-lane summaries ([L, cap] per device):
+    each hop exchanges the whole stack once, then merges lane-wise locally.
+    Non-power-of-two axes fall back to the all_gather merge."""
+    size = _axis_size(axis_name)
+    if size & (size - 1):
+        return allgather_merge_bottomk_multi(keys, seeds, cap, axis_name)
+    stage = 1
+    while stage < size:
+        perm = [(i, i ^ stage) for i in range(size)]
+        other_keys = jax.lax.ppermute(keys, axis_name, perm)
+        other_seeds = jax.lax.ppermute(seeds, axis_name, perm)
+        keys, seeds = _lanewise_merge_bottomk(keys, seeds, other_keys, other_seeds, cap)
+        stage *= 2
+    return keys, seeds
+
+
+def allgather_merge_bottomk_multi(keys, seeds, cap: int, axis_name: str):
+    """One-hop merge of stacked per-lane summaries [L, cap]."""
+    L = keys.shape[0]
+    all_keys = jnp.moveaxis(jax.lax.all_gather(keys, axis_name), 0, 1).reshape(L, -1)
+    all_seeds = jnp.moveaxis(jax.lax.all_gather(seeds, axis_name), 0, 1).reshape(L, -1)
+    empty_k = jnp.full((L, 1), EMPTY, keys.dtype)
+    empty_s = jnp.full((L, 1), jnp.inf, seeds.dtype)
+    return _lanewise_merge_bottomk(all_keys, all_seeds, empty_k, empty_s, cap)
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +192,10 @@ def merge_fixed_k(table_a, table_b, l, salt, *, k):
     kbm = jnp.where(uk != EMPTY, kbm, jnp.inf)
     sdm = jnp.where(uk != EMPTY, sdm, jnp.inf)
 
+    # eviction randomness is hashed on the round counter: the merged state
+    # stores this same round as its step so NO later per-chunk eviction can
+    # reuse it (max(a,b)+1 would collide with a future round, replaying the
+    # same ux/rx draws and correlating evictions)
     round_no = table_a.step + table_b.step + 1
     keys_e, counts_e, kb_e, seed_e, tau_e = VZ._evict_to_k(
         uk, cnt, kbm, sdm, tau, k, l, salt, round_no)
@@ -150,7 +209,7 @@ def merge_fixed_k(table_a, table_b, l, salt, *, k):
         keys=keys_c[:cap], counts=counts_c[:cap], kb=kb_c[:cap],
         seed=seed_c[:cap],
         tau=tau_e,
-        step=jnp.maximum(table_a.step, table_b.step) + 1,
+        step=round_no,
         overflow=table_a.overflow + table_b.overflow,
     )
 
@@ -188,16 +247,17 @@ def merge_fixed_k_multi(table_a, table_b, ls, salt, *, k):
 def pass1_shard(keys_shard, weights_shard, *, kind, l, salt, k, chunk, axis_name, merge="tree"):
     """Per-device pass 1 over the local stream shard + cross-device merge.
 
-    Element ids are disambiguated by shard index so the global randomness is
-    the same as a single-stream run over the concatenation.
+    Element ids are disambiguated by hashing the shard index into the id
+    (``vectorized.shard_eids``), so ids from different shards never alias —
+    the previous ``shard_no * n`` arithmetic overflowed int32 once P*n > 2^31,
+    silently correlating element randomness across shards.
     """
     shard_no = jax.lax.axis_index(axis_name)
     n = keys_shard.shape[0]
     n_chunks = n // chunk
     kshape = keys_shard.reshape(n_chunks, chunk)
     wshape = weights_shard.reshape(n_chunks, chunk)
-    base = (shard_no.astype(jnp.int32) * jnp.int32(n)).astype(jnp.int32)
-    eids = (base + jnp.arange(n, dtype=jnp.int32)).reshape(n_chunks, chunk)
+    eids = VZ.shard_eids(shard_no, jnp.arange(n, dtype=jnp.int32)).reshape(n_chunks, chunk)
 
     cap = k + 1
 
@@ -248,6 +308,104 @@ def make_distributed_two_pass(mesh, *, kind, l, salt, k, chunk, axis_name="data"
             sorted_keys = skeys[order]
             w = pass2_shard(kshard.reshape(-1), wshard.reshape(-1), sorted_keys, axis_name=axis_name)
             return sorted_keys[None], sseeds[order][None], w[None]
+
+        return shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        )(keys, weights)
+
+    return jax.jit(program)
+
+
+# ---------------------------------------------------------------------------
+# Multi-l distributed 2-pass: the whole l-grid in one program
+# ---------------------------------------------------------------------------
+
+
+def pass1_shard_multi(keys_shard, weights_shard, *, ls, salt, k, chunk,
+                      axis_name, merge="tree"):
+    """Per-device pass 1 for every l of a grid + cross-device lane-wise merge.
+
+    Chunks are scored once through the fused multi-l capscore kernel
+    (kernels/capscore; Pallas on TPU, lane-exact XLA reference elsewhere):
+    the element hashes are computed once and every (l) lane reuses them, so
+    the whole grid costs barely more than a single-l pass 1.  Element ids are
+    shard-hashed (``vectorized.shard_eids``).  Returns ([L, k+1] keys,
+    [L, k+1] seeds), the per-lane bottom-(k+1) summaries of the union.
+    """
+    from ..kernels.capscore.ops import capscore_multi
+
+    shard_no = jax.lax.axis_index(axis_name)
+    n = keys_shard.shape[0]
+    n_chunks = n // chunk
+    kshape = keys_shard.reshape(n_chunks, chunk)
+    wshape = weights_shard.reshape(n_chunks, chunk)
+    eids = VZ.shard_eids(shard_no, jnp.arange(n, dtype=jnp.int32)).reshape(n_chunks, chunk)
+
+    ls = jnp.asarray(ls, jnp.float32)
+    L = ls.shape[0]
+    cap = k + 1
+    # element scores don't depend on tau; feed inert thresholds to the kernel
+    taus = jnp.full((L,), jnp.inf, jnp.float32)
+
+    def body(carry, xs):
+        ck, cw, ce = xs
+        score, _, _, _ = capscore_multi(ck, ce, cw, ls, taus, salt)
+        return VZ.pass1_step_multi(carry, ck, score, cap=cap), None
+
+    init = (jnp.full((L, cap), EMPTY, jnp.int32),
+            jnp.full((L, cap), jnp.inf, jnp.float32))
+    if hasattr(jax.lax, "pcast"):
+        init = jax.lax.pcast(init, (axis_name,), to="varying")
+    (skeys, sseeds), _ = jax.lax.scan(body, init, (kshape, wshape, eids))
+    if merge == "tree":
+        return tree_merge_bottomk_multi(skeys, sseeds, cap, axis_name)
+    return allgather_merge_bottomk_multi(skeys, sseeds, cap, axis_name)
+
+
+def pass2_shard_multi(keys_shard, weights_shard, sampled_sorted, *, axis_name):
+    """Per-device exact-weight accumulation for every lane + one psum.
+
+    ``sampled_sorted``: [L, kk] per-lane sorted sampled keys (EMPTY-padded,
+    EMPTY sorts last).  Returns [L, kk] exact weights, replicated.
+    """
+    def lane(ss):
+        kk = ss.shape[0]
+        loc = jnp.searchsorted(ss, keys_shard)
+        loc = jnp.clip(loc, 0, kk - 1)
+        match = (ss[loc] == keys_shard) & (keys_shard != EMPTY)
+        return jnp.zeros((kk,), jnp.float32).at[loc].add(
+            jnp.where(match, weights_shard, 0.0))
+
+    local = jax.vmap(lane)(sampled_sorted)
+    return jax.lax.psum(local, axis_name)
+
+
+def make_distributed_two_pass_multi(mesh, *, ls, salt, k, chunk,
+                                    axis_name="data", merge="tree"):
+    """Build a jitted shard_map program computing the exact distributed
+    2-pass sample for EVERY l of the grid in one launch.
+
+    Returns fn(keys [P*n], weights [P*n]) -> (sampled_keys [L, k+1],
+    seeds [L, k+1], weights [L, k+1]) replicated; per lane, keys are sorted
+    ascending (EMPTY-padded) with their seeds and exact pass-2 weights.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def program(keys, weights):
+        def shard_body(kshard, wshard):
+            skeys, sseeds = pass1_shard_multi(
+                kshard.reshape(-1), wshard.reshape(-1),
+                ls=ls, salt=salt, k=k, chunk=chunk,
+                axis_name=axis_name, merge=merge,
+            )
+            order = jnp.argsort(skeys, axis=1)
+            sorted_keys = jnp.take_along_axis(skeys, order, axis=1)
+            sorted_seeds = jnp.take_along_axis(sseeds, order, axis=1)
+            w = pass2_shard_multi(kshard.reshape(-1), wshard.reshape(-1),
+                                  sorted_keys, axis_name=axis_name)
+            return sorted_keys[None], sorted_seeds[None], w[None]
 
         return shard_map(
             shard_body, mesh=mesh,

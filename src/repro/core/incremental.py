@@ -61,15 +61,24 @@ class SamplerState:
     ``table`` leaves are [capacity] for a single sketch or [L, capacity] for
     a stacked multi-l state; ``l`` is scalar or [L] to match; ``n_seen`` is
     the stream position (it seeds element ids, shared by all lanes).
+
+    ``bk_keys``/``bk_seeds`` (multi-l states only, else None) carry the
+    *lossless* per-lane bottom-(k+1) (key, min element score) summary of
+    everything observed — the coordinated-randomness handle that makes
+    cross-host merges exact (paper §3.1; core.distributed.merge_bottomk_multi
+    + the service reconcile pass).
     """
 
     table: VZ.TableState
     n_seen: jax.Array   # int32 scalar: elements consumed so far
     l: jax.Array        # float32: cap parameter(s)
     salt: jax.Array     # uint32 scalar
+    bk_keys: jax.Array | None = None   # [L, k+1] int32 bottom-k summary keys
+    bk_seeds: jax.Array | None = None  # [L, k+1] f32 per-key min element score
 
     def tree_flatten(self):
-        return (self.table, self.n_seen, self.l, self.salt), None
+        return (self.table, self.n_seen, self.l, self.salt,
+                self.bk_keys, self.bk_seeds), None
 
     @classmethod
     def tree_unflatten(cls, _aux, children):
@@ -82,15 +91,32 @@ class SamplerState:
 
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec:
-    """Static (compile-time) configuration of an incremental sampler."""
+    """Static (compile-time) configuration of an incremental sampler.
+
+    ``host_id`` disambiguates element randomness across hosts that ingest
+    disjoint shards of one logical stream: ids become
+    ``hash(SALT_SHARD, host_id, position)`` (vectorized.shard_eids) instead
+    of the raw position, so no two hosts ever share an element's randomness —
+    the precondition for both merge modes of stats.service.  ``None`` (the
+    default) keeps raw positions, preserving bit-exact equivalence with the
+    one-shot samplers.
+    """
 
     kind: str = "continuous"
     k: int | None = None          # fixed-k mode when set, else fixed-tau
     chunk: int = 2048
+    host_id: int | None = None    # element-id namespace for multi-host runs
 
     @property
     def mode(self) -> str:
         return "fixed_k" if self.k is not None else "fixed_tau"
+
+    def eids(self, pos):
+        """Element ids for one chunk starting at stream position ``pos``."""
+        base = pos + jnp.arange(self.chunk, dtype=jnp.int32)
+        if self.host_id is None:
+            return base
+        return VZ.shard_eids(jnp.uint32(self.host_id), base)
 
 
 def init_state(l, *, k=None, tau=None, kind="continuous", chunk=2048,
@@ -130,7 +156,7 @@ def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> Sampl
     def body(carry, xs):
         table, pos = carry
         ck, cw = xs
-        eids = pos + jnp.arange(chunk, dtype=jnp.int32)
+        eids = spec.eids(pos)
         if spec.mode == "fixed_k":
             table = VZ.fixed_k_step(table, ck, cw, eids, state.l, state.salt, k=spec.k)
         else:
@@ -174,8 +200,10 @@ def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
 # ---------------------------------------------------------------------------
 
 
-def init_multi_state(ls, *, k, chunk=2048, salt=0) -> tuple[SamplerState, SamplerSpec]:
-    """One fixed-k continuous sketch per l, stacked on a leading axis."""
+def init_multi_state(ls, *, k, chunk=2048, salt=0,
+                     host_id=None) -> tuple[SamplerState, SamplerSpec]:
+    """One fixed-k continuous sketch per l, stacked on a leading axis, plus a
+    lossless per-lane bottom-(k+1) summary for exact cross-host merging."""
     ls = np.asarray(ls, np.float32)
     L = len(ls)
     capacity = k + chunk
@@ -193,8 +221,10 @@ def init_multi_state(ls, *, k, chunk=2048, salt=0) -> tuple[SamplerState, Sample
         n_seen=jnp.int32(0),
         l=jnp.asarray(ls),
         salt=jnp.asarray(salt, jnp.uint32),
+        bk_keys=jnp.full((L, k + 1), EMPTY, dtype=jnp.int32),
+        bk_seeds=jnp.full((L, k + 1), jnp.inf, jnp.float32),
     )
-    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk)
+    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk, host_id=host_id)
 
 
 def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
@@ -211,18 +241,25 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
 
     vstep = jax.vmap(lane_step, in_axes=(0, None, None, 0, 0, 0, 0, 0))
 
+    cap_bk = state.bk_keys.shape[1]
+
     def body(carry, xs):
-        table, pos = carry
+        table, bk_keys, bk_seeds, pos = carry
         ck, cw = xs
-        eids = pos + jnp.arange(chunk, dtype=jnp.int32)
+        eids = spec.eids(pos)
         # one fused pass scores every l lane under its current threshold
         score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
                                                  state.salt)
         table = vstep(table, ck, cw, score, delta, entry, kb, state.l)
-        return (table, pos + chunk), None
+        # the same scores advance the lossless per-lane bottom-(k+1) summary
+        # (scores are tau-independent, so this is the exact pass-1 summary)
+        bk_keys, bk_seeds = VZ.pass1_step_multi(
+            (bk_keys, bk_seeds), ck, score, cap=cap_bk)
+        return (table, bk_keys, bk_seeds, pos + chunk), None
 
-    (table, pos), _ = jax.lax.scan(body, (state.table, state.n_seen), (kc, wc))
-    return SamplerState(table, pos, state.l, state.salt)
+    (table, bk_keys, bk_seeds, pos), _ = jax.lax.scan(
+        body, (state.table, state.bk_keys, state.bk_seeds, state.n_seen), (kc, wc))
+    return SamplerState(table, pos, state.l, state.salt, bk_keys, bk_seeds)
 
 
 _update_multi_donated = functools.partial(jax.jit, static_argnames=("spec",),
@@ -321,9 +358,11 @@ class IncrementalSampler:
     """
 
     def __init__(self, l, *, k=None, tau=None, kind="continuous", chunk=2048,
-                 capacity=8192, salt=0):
+                 capacity=8192, salt=0, host_id=None):
         self.state, self.spec = init_state(
             l, k=k, tau=tau, kind=kind, chunk=chunk, capacity=capacity, salt=salt)
+        if host_id is not None:
+            self.spec = dataclasses.replace(self.spec, host_id=host_id)
         self._rem = _RemainderBuffer(chunk)
 
     def observe(self, keys, weights=None) -> None:
@@ -350,14 +389,24 @@ class IncrementalSampler:
 
 
 class MultiSampler:
-    """l-grid streaming sampler: all lanes advance in one dispatch/batch."""
+    """l-grid streaming sampler: all lanes advance in one dispatch/batch.
 
-    def __init__(self, ls, *, k, chunk=2048, salt=0):
+    Besides the fixed-k sketches, every lane carries the lossless
+    bottom-(k+1) (key, seed) summary of the observed stream — O(k) extra
+    state that makes cross-host merges exact (see stats.service).  Multi-host
+    deployments must give each host a distinct ``host_id`` so element
+    randomness never aliases across shards.
+    """
+
+    def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None):
         self.ls = tuple(float(l) for l in ls)  # full-precision query keys
-        self.state, self.spec = init_multi_state(ls, k=k, chunk=chunk, salt=salt)
+        self.state, self.spec = init_multi_state(
+            ls, k=k, chunk=chunk, salt=salt, host_id=host_id)
         self._rem = _RemainderBuffer(chunk)
+        self._n_real = 0  # real (non-padding) elements, incl. merged-in hosts
 
     def observe(self, keys, weights=None) -> None:
+        self._n_real += int(np.asarray(keys).reshape(-1).shape[0])
         bk, bw = self._rem.add(keys, weights)
         if bk is not None:
             self.state = update_multi(self.state, bk, bw, self.spec)
@@ -372,23 +421,63 @@ class MultiSampler:
             state = update_multi(state, fk, fw, self.spec, donate=False)
         return state
 
+    def absorb(self, other: "MultiSampler", *, k, merge_summaries: bool) -> None:
+        """Fold another host's sampler into this one (both flushed first).
+
+        The fixed-k tables merge through the 1-pass heuristic
+        (distributed.merge_fixed_k_multi); with ``merge_summaries`` the
+        lossless bottom-(k+1) summaries min-merge too (exact mode).  Both
+        remainders are flushed *in their own host's element-id namespace* —
+        never re-scored under the absorbing host's ids, which would draw
+        fresh randomness for already-scored elements and bias the summaries.
+        """
+        from . import distributed as DZ
+
+        mine, theirs = self.flushed_state(), other.flushed_state()
+        table = DZ.merge_fixed_k_multi(mine.table, theirs.table, mine.l,
+                                       mine.salt, k=k)
+        if merge_summaries:
+            bk_keys, bk_seeds = DZ.merge_bottomk_multi(
+                mine.bk_keys, mine.bk_seeds, theirs.bk_keys, theirs.bk_seeds,
+                cap=mine.bk_keys.shape[1])
+        else:
+            bk_keys, bk_seeds = mine.bk_keys, mine.bk_seeds
+        self.state = SamplerState(
+            table=table,
+            n_seen=mine.n_seen + theirs.n_seen,
+            l=mine.l, salt=mine.salt,
+            bk_keys=bk_keys, bk_seeds=bk_seeds,
+        )
+        # remainders are inside the merged state now
+        self._n_real += other._n_real
+        self._rem = _RemainderBuffer(self.spec.chunk)
+
     def finalize(self) -> dict[float, SampleResult]:
         return finalize_multi(self.flushed_state(), self.spec, ls=self.ls)
 
+    def bottomk_summaries(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host copies of the flushed per-lane bottom-(k+1) summaries:
+        ([L, k+1] keys, [L, k+1] seeds)."""
+        st = self.flushed_state()
+        return np.asarray(st.bk_keys), np.asarray(st.bk_seeds)
+
     @property
     def n_observed(self) -> int:
-        return int(self.state.n_seen) + len(self._rem.keys)
+        return self._n_real
 
     # -- serialization (O(k * |ls| + chunk), independent of stream length) --
 
     def state_dict(self) -> dict:
-        t = jax.device_get(self.state.table)
+        st = jax.device_get(self.state)
+        t = st.table
         d = {
             "keys": t.keys, "counts": t.counts, "kb": t.kb, "seed": t.seed,
             "tau": t.tau, "step": t.step, "overflow": t.overflow,
-            "n_seen": np.int32(self.state.n_seen),
-            "ls": np.asarray(self.state.l),
-            "salt": np.uint32(self.state.salt),
+            "bk_keys": st.bk_keys, "bk_seeds": st.bk_seeds,
+            "n_seen": np.int32(st.n_seen),
+            "n_real": np.int64(self._n_real),
+            "ls": np.asarray(st.l),
+            "salt": np.uint32(st.salt),
         }
         d.update(self._rem.state_dict())
         return d
@@ -400,13 +489,24 @@ class MultiSampler:
             tau=jnp.asarray(d["tau"]),
             step=jnp.asarray(d["step"]), overflow=jnp.asarray(d["overflow"]),
         )
+        # blobs written before the summary buffers existed load with fresh
+        # (empty) summaries — the caller must treat them as invalid for
+        # exact merging (stats.service keys this off the same absence)
+        L, cap_bk = table.keys.shape[0], (self.spec.k or 0) + 1
+        bk_keys = (jnp.asarray(d["bk_keys"], jnp.int32) if "bk_keys" in d
+                   else jnp.full((L, cap_bk), EMPTY, jnp.int32))
+        bk_seeds = (jnp.asarray(d["bk_seeds"], jnp.float32) if "bk_seeds" in d
+                    else jnp.full((L, cap_bk), jnp.inf, jnp.float32))
         self.state = SamplerState(
             table=table,
             n_seen=jnp.asarray(d["n_seen"], jnp.int32),
             l=jnp.asarray(d["ls"], jnp.float32),
             salt=jnp.asarray(d["salt"], jnp.uint32),
+            bk_keys=bk_keys, bk_seeds=bk_seeds,
         )
         self._rem.load_state_dict(d)
+        self._n_real = int(d["n_real"]) if "n_real" in d else (
+            int(self.state.n_seen) + len(self._rem.keys))
 
     @property
     def resident_bytes(self) -> int:

@@ -136,10 +136,16 @@ def multiobjective_sample(keys_stream, weights_stream, k: int, ls, salt: int = 0
     """End-to-end: coordinated 2-pass multi-objective sample over an l-grid.
 
     Returns (union_keys, union_weights, taus_per_key, per_l_samples).
-    tau_l^{-x} handling: for x in S_l, the paper's tau_l^{-x} is the k-th
-    smallest seed among other keys == tau_l computed with x removed; we use
-    the standard bottom-k convention tau_l (the (k+1)-smallest overall) for
-    keys not in S_l and the k-th-smallest-of-others for members.
+
+    tau_l^{-x} handling (Lemma 6.2 requires per-key thresholds that are
+    *independent of x's own randomness*): for EVERY union key x — member of
+    S_l or not — tau_l^{-x} is the k-th smallest seed among the OTHER keys.
+    x is in S_l exactly when seed_l(x) < tau_l^{-x}, and Phi integrates that
+    event's probability, so using the same quantity for members and
+    non-members is what makes the estimator unbiased.  (An earlier docstring
+    claimed non-members use the (k+1)-smallest overall; that was never what
+    the code computed — the k-th smallest of others IS the k-th smallest
+    overall when x ranks above it.)
     """
     ukeys, hx, y, wx = per_key_randomness(keys_stream, weights_stream, salt)
     per_l = union_sample_grid(ukeys, hx, y, k, ls)
@@ -159,16 +165,22 @@ def multiobjective_sample(keys_stream, weights_stream, k: int, ls, salt: int = 0
         taus = {}
         for l in ls:
             s_sorted = sorted_seeds[l]
-            own = seeds[l][i]
-            k_eff = min(k, len(s_sorted) - 1)
             if len(s_sorted) <= k:
+                # k or fewer keys total: every key is sampled and fewer than
+                # k OTHER seeds exist, so the exclusion threshold is +inf
+                # (the estimator then uses Phi = 1: the sample is the data).
                 taus[l] = math.inf
+                continue
+            own = seeds[l][i]
+            # k-th smallest among OTHERS.  With own removed from the sorted
+            # array, that is s_sorted[k] when own ranks within the bottom k
+            # (own <= s_sorted[k-1]) and s_sorted[k-1] otherwise.  Under an
+            # exact tie own == s_sorted[k-1] == s_sorted[k] both branches
+            # return the same value, so <= vs < is immaterial (and ties are
+            # hash collisions: measure-zero for the continuous seed law).
+            if own <= s_sorted[k - 1]:
+                taus[l] = float(s_sorted[k])
             else:
-                kth = s_sorted[k_eff - 1] if k_eff >= 1 else math.inf
-                # k-th smallest among OTHERS: drop own seed if it is below kth
-                if own <= kth:
-                    taus[l] = float(s_sorted[k_eff])
-                else:
-                    taus[l] = float(kth)
+                taus[l] = float(s_sorted[k - 1])
         taus_per_key.append(taus)
     return union_keys, np.asarray(w_sampled), taus_per_key, per_l

@@ -37,6 +37,7 @@ SALT_BUCKET = 0x02
 SALT_KEYBASE = 0x03
 SALT_EVICT_U = 0x04
 SALT_EVICT_R = 0x05
+SALT_SHARD = 0x06  # shard/host disambiguation of element ids
 
 
 @dataclasses.dataclass
@@ -89,6 +90,22 @@ def continuous_score_np(keys, eids, weights, l: float, salt: int):
     v = H.exp_from_u(u, np.asarray(weights, dtype=np.float64))
     kb = keybase_np(keys, l, salt)
     return np.where(v <= 1.0 / l, kb, v)
+
+
+def shard_eids_np(shard_no, idx):
+    """Element ids for position ``idx`` of shard/host ``shard_no``.
+
+    Hash-derived rather than ``shard_no * n + idx``: the arithmetic form
+    overflows int32 once P*n > 2^31, silently aliasing element randomness
+    across shards.  Bit-identical to the device twin
+    (core.vectorized.shard_eids) after the uint32 cast both apply.
+    """
+    idx = np.asarray(idx)
+    # broadcast the scalar parts: numpy warns on (wrapping) scalar uint32
+    # arithmetic but not on the identical array ops
+    salt_part = np.broadcast_to(np.uint32(SALT_SHARD), idx.shape)
+    shard_part = np.broadcast_to(np.asarray(shard_no, np.uint32), idx.shape)
+    return H.hash_combine_np(salt_part, shard_part, idx)
 
 
 # ---------------------------------------------------------------------------

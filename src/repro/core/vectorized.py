@@ -38,6 +38,7 @@ from .samplers import (
     SALT_EVICT_R,
     SALT_EVICT_U,
     SALT_KEYBASE,
+    SALT_SHARD,
     SampleResult,
 )
 from .segments import EMPTY, bottom_k_by, compact_valid, scatter_unique, segment_ids, sort_by_key
@@ -57,6 +58,18 @@ def keybase(keys, l, salt):
 
 def elem_uniform(eids, salt):
     return H.uniform01(H.hash_combine(eids, jnp.uint32(SALT_ELEM), jnp.uint32(salt)))
+
+
+def shard_eids(shard_no, idx):
+    """Element ids for positions ``idx`` of shard/host ``shard_no``.
+
+    Hash-derived, so ids from distinct shards never systematically alias —
+    the arithmetic form ``shard_no * n + idx`` overflows int32 once
+    P*n > 2^31 and silently reuses the same element randomness on different
+    shards.  Downstream hashing casts to uint32, so the int32 bit pattern
+    returned here matches samplers.shard_eids_np exactly.
+    """
+    return H.hash_combine(jnp.uint32(SALT_SHARD), shard_no, idx).astype(jnp.int32)
 
 
 def element_scores(kind: str, keys, eids, weights, l, salt):
@@ -289,13 +302,15 @@ def chunk_bottomk_summary(keys, eids, weights, l, salt, *, kind):
     return ukeys, jnp.where(ukeys != EMPTY, mins, INF)
 
 
-def pass1_step(carry, keys, weights, eids, l, salt, *, kind, cap):
-    """Advance a bottom-k-by-seed summary (Alg 1 pass I) by one chunk."""
-    skeys, sseeds = carry
-    ukeys, mins = chunk_bottomk_summary(keys, eids, weights, l, salt, kind=kind)
-    # merge with state: combine duplicates by min-seed, keep bottom-cap
+def merge_bottomk_summary(skeys, sseeds, ukeys, useeds, cap):
+    """Merge two (key, seed) summaries: min-seed per duplicate key, bottom-cap.
+
+    Lossless for the bottom-cap of the union (paper §3.1) — the building
+    block of pass-1 chunk accumulation, the incremental per-lane summaries
+    and every cross-shard merge in core.distributed.
+    """
     keys2 = jnp.concatenate([skeys, ukeys])
-    seeds2 = jnp.concatenate([sseeds, mins])
+    seeds2 = jnp.concatenate([sseeds, useeds])
     ks2, (sd2,) = sort_by_key(keys2, seeds2)
     seg2, _ = segment_ids(ks2)
     N = ks2.shape[0]
@@ -304,6 +319,42 @@ def pass1_step(carry, keys, weights, eids, l, salt, *, kind, cap):
     sd_m = jnp.where(uk2 != EMPTY, sd_m, INF)
     sd_k, uk_k = bottom_k_by(sd_m, cap, uk2, fills=(EMPTY,))
     return uk_k, sd_k
+
+
+def pass1_step(carry, keys, weights, eids, l, salt, *, kind, cap):
+    """Advance a bottom-k-by-seed summary (Alg 1 pass I) by one chunk."""
+    skeys, sseeds = carry
+    ukeys, mins = chunk_bottomk_summary(keys, eids, weights, l, salt, kind=kind)
+    return merge_bottomk_summary(skeys, sseeds, ukeys, mins, cap)
+
+
+def chunk_bottomk_summary_scored(keys, scores):
+    """Per-lane (unique key, min element score) chunk summaries from
+    precomputed multi-lane scores [L, C] (the fused capscore pass-1 path).
+
+    One sort of the chunk by key is shared by all lanes; the per-lane work
+    is a single segment_min.  Returns (ukeys [C], mins [L, C]).
+    """
+    C = keys.shape[0]
+    ks, (pos,) = sort_by_key(keys, jnp.arange(C))
+    seg, _ = segment_ids(ks)
+    live = ks != EMPTY
+    mins = jax.vmap(
+        lambda s: jax.ops.segment_min(jnp.where(live, s[pos], INF), seg,
+                                      num_segments=C)
+    )(scores)
+    ukeys, _ = scatter_unique(ks, seg, 0.0)
+    return ukeys, jnp.where(ukeys != EMPTY, mins, INF)
+
+
+def pass1_step_multi(carry, keys, scores, *, cap):
+    """Advance stacked per-lane bottom-cap summaries ([L, cap] keys/seeds) by
+    one chunk whose multi-lane scores were already computed (capscore_multi)."""
+    skeys, sseeds = carry
+    ukeys, mins = chunk_bottomk_summary_scored(keys, scores)
+    return jax.vmap(
+        lambda sk, ss, mn: merge_bottomk_summary(sk, ss, ukeys, mn, cap)
+    )(skeys, sseeds, mins)
 
 
 # ---------------------------------------------------------------------------

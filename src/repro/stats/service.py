@@ -1,6 +1,6 @@
 """StreamStatsService: frequency-cap statistics as a first-class framework
-feature (the paper's ad-campaign application, generalized) — now a true
-incremental service.
+feature (the paper's ad-campaign application, generalized) — a true
+incremental service with an **exact multi-host mode**.
 
 Attach a service to any input pipeline; it maintains one fixed-k continuous
 SH_l sketch per configured l over the stream of keys flowing through
@@ -22,12 +22,31 @@ pairs, answer = number of qualifying impressions under a per-user cap T);
 token-frequency statistics for LM data mixing; degree statistics for GNN
 samplers; expert-load statistics for MoE routing diagnostics.
 
+Multi-host contract (DESIGN.md §5):
+
+* Give every host a distinct ``StatsConfig.host_id`` (same k/ls/chunk/salt).
+  Key randomness (KeyBase hashes) is shared through the salt — that is the
+  coordination that makes merges meaningful — while element randomness is
+  host-disambiguated so shards never alias.
+* ``merge(other)`` (mode="exact", the default) min-merges each lane's
+  *lossless* bottom-(k+1) (key, seed) summary — exact for ANY split of
+  elements across hosts, including keys straddling hosts (paper §3.1) — and
+  also folds the 1-pass fixed-k sketches so approximate queries keep working.
+* ``reconcile(keys, weights)`` is the paper's pass II: re-scan each host's
+  shard (stream it through in any batch sizes; or use
+  core.distributed.pass2_shard_multi on a mesh) to accumulate the exact
+  weights of the sampled keys.  Once every shard has been reconciled,
+  queries flow through the 2-pass inverse-probability estimators
+  (``exact_weights=True``) with **zero merge bias**.
+* ``merge(other, mode="approx")`` skips the summaries: cheapest, unbiased
+  for key-partitioned shards, but carries up to ~10% bias at k=512 when
+  keys straddle hosts (measured in tests/test_merge_bias.py).  Exact mode
+  exists precisely to kill that bias.
+
 The service state is a pytree: ``state_dict()`` is a flat dict of fixed-size
-arrays that checkpoints through checkpoint.manager (``save_checkpoint`` /
-``restore_checkpoint`` below) and resumes bit-for-bit mid-stream.  Per-host
-services merge across hosts with core.distributed.merge_fixed_k (see
-``merge()``): unbiased for key-partitioned shards, approximate for arbitrary
-element splits.
+arrays (sketches + summaries + remainder) that checkpoints through
+checkpoint.manager (``save_checkpoint`` / ``restore_checkpoint`` below) and
+resumes bit-for-bit mid-stream.
 """
 from __future__ import annotations
 
@@ -39,9 +58,9 @@ from typing import Sequence
 import numpy as np
 
 from ..checkpoint import manager as ckpt_manager
-from ..core import distributed as DZ
 from ..core import estimators, freqfns, incremental
 from ..core.samplers import SampleResult
+from ..core.segments import EMPTY
 
 
 @dataclasses.dataclass
@@ -50,12 +69,24 @@ class StatsConfig:
     ls: Sequence[float] = (1.0, 16.0, 256.0, 4096.0)  # geometric l-grid (§6)
     chunk: int = 2048
     salt: int = 0x5EED
+    host_id: int | None = None         # REQUIRED (distinct) for exact merges
+
+
+@dataclasses.dataclass
+class _LaneSample:
+    """Frozen pass-1 outcome of one l lane + its pass-2 accumulator."""
+
+    l: float
+    keys: np.ndarray       # sorted sampled keys (<= k)
+    tau: float             # (k+1)-smallest seed, inf if everything sampled
+    weights: np.ndarray    # exact-weight accumulator (float64)
 
 
 class StreamStatsService:
     """Incremental multi-l sketch service over the jitted chunked samplers.
 
-    For each l in the grid we keep a fixed-k continuous SH_l sketch.  A
+    For each l in the grid we keep a fixed-k continuous SH_l sketch plus the
+    lossless bottom-(k+1) summary that powers the exact distributed mode.  A
     cap_T query is answered from the sketch with l closest to T in log-space
     (the paper's recommendation preceding §6.1: pick l within sqrt(2) of T).
     """
@@ -64,9 +95,17 @@ class StreamStatsService:
         self.config = config
         self._sampler = incremental.MultiSampler(
             tuple(float(l) for l in config.ls), k=config.k,
-            chunk=config.chunk, salt=config.salt,
+            chunk=config.chunk, salt=config.salt, host_id=config.host_id,
         )
         self._results: dict[float, SampleResult] | None = None
+        self._lanes: list[_LaneSample] | None = None  # reconcile accumulators
+        self._recon_n = 0  # elements re-scanned by the current reconcile
+        self._recon_discarded = False  # a begun reconcile was invalidated
+        self._exact_ok = True  # summaries valid (invalidated by approx merge)
+        # every host whose stream this service has absorbed (exact mode must
+        # never merge two streams sharing an element-id namespace)
+        self._host_ids: set[int] = (
+            set() if config.host_id is None else {config.host_id})
 
     # -- ingestion ---------------------------------------------------------
 
@@ -78,6 +117,14 @@ class StreamStatsService:
         """
         self._sampler.observe(np.asarray(keys).reshape(-1), weights)
         self._results = None
+        self._invalidate_reconcile()
+
+    def _invalidate_reconcile(self) -> None:
+        """New elements / merges change the pass-1 sample: any accumulated
+        pass-II weights refer to a stale sample and must be discarded."""
+        if self._lanes is not None:
+            self._lanes = None
+            self._recon_discarded = True
 
     @property
     def n_observed(self) -> int:
@@ -99,23 +146,49 @@ class StreamStatsService:
         ls = np.asarray(self.config.ls, dtype=np.float64)
         return float(ls[np.argmin(np.abs(np.log(ls) - math.log(max(T, 1e-9))))])
 
-    def query_cap(self, T: float, segment=None) -> float:
-        """Estimate Q(cap_T, segment)."""
-        res = self._materialize()[self.pick_l(T)]
+    @property
+    def _reconcile_complete(self) -> bool:
+        """Every observed element has been streamed back through reconcile
+        (each shard exactly once re-scans the whole logical stream)."""
+        return self._lanes is not None and self._recon_n >= self.n_observed
+
+    def _result_for(self, l: float, exact: bool | None) -> SampleResult:
+        # auto mode only trusts the exact path once pass II covered the whole
+        # stream — a half-reconciled accumulator would silently report
+        # partial sums (or 0/0 = nan for zero-weight keys)
+        use_exact = exact if exact is not None else self._reconcile_complete
+        if use_exact:
+            if not self._reconcile_complete:
+                raise ValueError(
+                    f"exact query before reconcile completed: {self._recon_n} "
+                    f"of {self.n_observed} observed elements re-scanned — "
+                    "stream every shard through reconcile() first")
+            return self.exact_sketches()[l]
+        return self._materialize()[l]
+
+    def query_cap(self, T: float, segment=None, *, exact: bool | None = None) -> float:
+        """Estimate Q(cap_T, segment).
+
+        ``exact=None`` (default) uses the reconciled 2-pass estimates when a
+        reconcile pass has run, else the resident 1-pass sketches; force one
+        path with True/False.
+        """
+        res = self._result_for(self.pick_l(T), exact)
         return estimators.estimate(res, freqfns.cap(T), segment)
 
-    def query_distinct(self, segment=None) -> float:
-        res = self._materialize()[self.pick_l(1.0)]
+    def query_distinct(self, segment=None, *, exact: bool | None = None) -> float:
+        res = self._result_for(self.pick_l(1.0), exact)
         return estimators.estimate(res, freqfns.distinct(), segment)
 
-    def query_total(self, segment=None) -> float:
-        res = self._materialize()[self.pick_l(max(self.config.ls))]
+    def query_total(self, segment=None, *, exact: bool | None = None) -> float:
+        res = self._result_for(max(self.config.ls), exact)
         return estimators.estimate(res, freqfns.total(), segment)
 
-    def campaign_forecast(self, cap_per_user: float, segment=None) -> float:
+    def campaign_forecast(self, cap_per_user: float, segment=None, *,
+                          exact: bool | None = None) -> float:
         """The paper's motivating query: qualifying impressions under a
         per-user frequency cap, for the user segment H."""
-        return self.query_cap(cap_per_user, segment)
+        return self.query_cap(cap_per_user, segment, exact=exact)
 
     # -- hot-key extraction (embedding-sharding integration) -----------------
 
@@ -129,9 +202,20 @@ class StreamStatsService:
 
     # -- multi-host merge ----------------------------------------------------
 
-    def merge(self, other: "StreamStatsService") -> None:
-        """Absorb another host's sketches (lane-wise merge_fixed_k under the
-        shared per-lane threshold).  Both services must share a config."""
+    def merge(self, other: "StreamStatsService", mode: str = "exact") -> None:
+        """Absorb another host's state.  Both services must share
+        (k, ls, chunk, salt).
+
+        mode="exact": additionally min-merge the lossless per-lane
+        bottom-(k+1) summaries (paper §3.1 mergeability) — requires the two
+        hosts to carry **distinct** ``host_id``s, otherwise their element
+        randomness aliases and the merged summary is silently biased.  Run
+        ``reconcile`` over every shard afterwards to unlock exact queries.
+
+        mode="approx": 1-pass ``merge_fixed_k`` only — cheap, unbiased for
+        key-partitioned shards, ~10% bias for arbitrary element splits;
+        exact queries become unavailable.
+        """
         if (tuple(other.config.ls) != tuple(self.config.ls)
                 or other.config.k != self.config.k
                 or other.config.salt != self.config.salt
@@ -139,34 +223,137 @@ class StreamStatsService:
             # salt especially: kb/seed/tau from different hash functions
             # would union into a silently biased sketch
             raise ValueError("merge requires identical (k, ls, chunk, salt) configs")
-        mine, theirs = self._sampler.state, other._sampler.state
-        merged = DZ.merge_fixed_k_multi(
-            mine.table, theirs.table, mine.l, mine.salt, k=self.config.k)
-        self._sampler.state = incremental.SamplerState(
-            table=merged,
-            n_seen=mine.n_seen + theirs.n_seen,
-            l=mine.l, salt=mine.salt,
-        )
-        # the other host's sub-chunk remainder joins ours through observe()
-        rem = other._sampler._rem
-        if len(rem.keys):
-            self._sampler.observe(rem.keys, rem.weights)
+        if mode not in ("exact", "approx"):
+            raise ValueError(f"unknown merge mode {mode!r}")
+        if mode == "exact":
+            if self.config.host_id is None or other.config.host_id is None:
+                raise ValueError(
+                    "exact merge requires a host_id on both services: shared "
+                    "element-id namespaces alias randomness across shards")
+            overlap = self._host_ids & other._host_ids
+            if overlap:
+                # not just pairwise: hosts absorbed earlier count too (two
+                # absorbed shards sharing an id namespace are just as biased)
+                raise ValueError(
+                    "exact merge requires distinct host_ids across ALL "
+                    f"absorbed hosts; {sorted(overlap)} appear on both sides")
+            if not (self._exact_ok and other._exact_ok):
+                raise ValueError(
+                    "exact merge unavailable: a prior mode='approx' merge "
+                    "invalidated the lossless summaries")
+        self._sampler.absorb(other._sampler, k=self.config.k,
+                             merge_summaries=(mode == "exact"))
+        self._host_ids |= other._host_ids
+        if mode == "approx":
+            self._exact_ok = False
         self._results = None
+        self._invalidate_reconcile()
+
+    # -- exact second pass (paper pass II) -----------------------------------
+
+    def begin_reconcile(self) -> None:
+        """Freeze the pass-1 sample (per-lane bottom-k keys + threshold) and
+        reset the exact-weight accumulators.  Called implicitly by the first
+        ``reconcile``; must be called EXPLICITLY to restart after an
+        ``observe``/``merge`` discarded a begun reconcile."""
+        if not self._exact_ok:
+            raise ValueError(
+                "exact pass unavailable after a mode='approx' merge")
+        self._recon_discarded = False
+        self._recon_n = 0
+        bk_keys, bk_seeds = self._sampler.bottomk_summaries()
+        k = self.config.k
+        self._lanes = []
+        for j, l in enumerate(self.config.ls):
+            keys_j, seeds_j = bk_keys[j], bk_seeds[j]
+            valid = keys_j != int(EMPTY)
+            kk, ss = keys_j[valid], seeds_j[valid]
+            order = np.argsort(ss)
+            if len(kk) > k:
+                tau = float(ss[order[k]])
+                kk = kk[order[:k]]
+            else:
+                tau = math.inf
+            kk = np.sort(kk)
+            self._lanes.append(_LaneSample(
+                l=float(l), keys=kk, tau=tau,
+                weights=np.zeros(len(kk), np.float64)))
+
+    def reconcile(self, keys, weights=None) -> None:
+        """Accumulate exact weights of the sampled keys from a batch of the
+        original stream (pass II).  Stream EVERY shard's elements through
+        this (any batch sizes, any order) before exact queries; weights of
+        un-reconciled elements are simply missing from the estimates.
+        On a mesh, core.distributed.pass2_shard_multi + psum is the
+        equivalent collective form."""
+        if self._lanes is None:
+            if self._recon_discarded:
+                # an observe()/merge() changed the pass-1 sample after a
+                # reconcile began: silently re-beginning would drop the
+                # weights accumulated so far and report partial sums as exact
+                raise ValueError(
+                    "reconcile was invalidated by observe()/merge(): the "
+                    "accumulated pass-II weights were discarded — call "
+                    "begin_reconcile() and re-stream EVERY shard")
+            self.begin_reconcile()
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        w = (np.ones(len(keys), np.float64) if weights is None
+             else np.asarray(weights, np.float64).reshape(-1))
+        self._recon_n += len(keys)
+        for lane in self._lanes:
+            if not len(lane.keys):
+                continue
+            loc = np.searchsorted(lane.keys, keys)
+            loc = np.clip(loc, 0, len(lane.keys) - 1)
+            match = lane.keys[loc] == keys
+            np.add.at(lane.weights, loc[match], w[match])
+
+    def exact_sketches(self) -> dict[float, SampleResult]:
+        """Per-lane 2-pass SampleResults (exact weights) from the reconciled
+        accumulators.  Available only once pass II covered the whole stream
+        — partial accumulators stamped ``exact_weights=True`` would be the
+        silent-wrong-answer path this API exists to kill."""
+        if not self._reconcile_complete:
+            raise ValueError(
+                f"no complete exact sample: {self._recon_n} of "
+                f"{self.n_observed} observed elements re-scanned — run "
+                "reconcile(keys, weights) over every shard of the stream")
+        return {
+            lane.l: SampleResult(
+                keys=lane.keys, counts=lane.weights.copy(), tau=lane.tau,
+                l=lane.l, kind="continuous", exact_weights=True)
+            for lane in self._lanes
+        }
 
     # -- checkpointing --------------------------------------------------------
 
     def state_dict(self) -> dict:
         """O(k * |ls| + chunk) pytree of fixed-size arrays — the size is
-        independent of how many elements were observed."""
-        return self._sampler.state_dict()
+        independent of how many elements were observed.  Includes the
+        lossless bottom-(k+1) summary buffers and their validity flag.
+
+        Checkpoint per host, before merging: the set of absorbed host_ids is
+        deliberately not serialized (variable length), so a restored service
+        only knows its own configured host_id."""
+        d = self._sampler.state_dict()
+        d["exact_ok"] = np.bool_(self._exact_ok)
+        return d
 
     def load_state_dict(self, d: dict) -> None:
         self._sampler.load_state_dict(d)
+        # pre-summary blobs load with empty summaries: exact mode stays off
+        self._exact_ok = ("bk_keys" in d) and bool(d.get("exact_ok", True))
         self._results = None
+        self._lanes = None
+        self._recon_n = 0
+        self._recon_discarded = False
+        self._host_ids = (set() if self.config.host_id is None
+                          else {self.config.host_id})
 
     @property
     def resident_bytes(self) -> int:
-        """Bytes held by the sketches + remainder (the whole service state)."""
+        """Bytes held by the sketches + summaries + remainder (the whole
+        service state)."""
         return self._sampler.resident_bytes
 
     def save_checkpoint(self, ckpt_dir: str | Path, step: int) -> Path:

@@ -1,22 +1,72 @@
-"""Distributed sampling correctness (subprocess with 8 host devices)."""
+"""Distributed sampling correctness (subprocess multi-device runs) and
+shard element-id disambiguation."""
 import os
 import subprocess
 import sys
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
 
 
-@pytest.mark.slow
-def test_distributed_two_pass_matches_reference():
+def _run_distributed(ndev: int):
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "_distributed_runner.py")],
+        [sys.executable, str(ROOT / "tests" / "_distributed_runner.py"), str(ndev)],
         capture_output=True, text=True, timeout=900, env=env,
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_two_pass_matches_reference():
+    _run_distributed(8)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [3, 6])
+def test_distributed_non_power_of_two_devices(ndev):
+    """tree merge must fall back to all_gather for non-pow2 axes — the
+    butterfly permutation i ^ stage is not a valid pairing there."""
+    _run_distributed(ndev)
+
+
+def test_shard_eids_never_alias():
+    """Regression for the int32 overflow in ``base = shard_no * n``: shard
+    pairs whose arithmetic bases alias mod 2^32 must still get disjoint
+    hashed element ids."""
+    from repro.core.samplers import shard_eids_np
+
+    n = 2**12
+    # under the old scheme base = shard_no * n (int32): shard 2^20 wraps to
+    # base 0 (2^20 * 2^12 = 2^32 ≡ 0), shard 2^20 + 7 to shard 7's base, ...
+    aliasing_pairs = [(0, 2**20), (7, 2**20 + 7), (1, 2**19 + 1), (3, 2**31 // n + 3)]
+    idx = np.arange(n)
+    for a, b in aliasing_pairs:
+        ea = shard_eids_np(a, idx)
+        eb = shard_eids_np(b, idx)
+        # the old scheme would make these IDENTICAL arrays; hashed ids share
+        # no elements at all (collisions are birthday-rare, not systematic)
+        assert not np.array_equal(ea, eb)
+        assert len(np.intersect1d(ea, eb)) == 0, (a, b)
+
+
+def test_shard_eids_device_matches_host():
+    """The jnp and numpy twins must be bit-identical (uint32 stream)."""
+    import jax.numpy as jnp
+
+    from repro.core.samplers import shard_eids_np
+    from repro.core.vectorized import shard_eids
+
+    idx = np.arange(4096)
+    for shard in (0, 1, 5, 2**20):
+        host = shard_eids_np(shard, idx).astype(np.uint32)
+        dev = np.asarray(
+            shard_eids(jnp.uint32(shard), jnp.asarray(idx, jnp.int32))
+        ).astype(np.uint32)
+        np.testing.assert_array_equal(host, dev)

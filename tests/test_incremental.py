@@ -265,14 +265,70 @@ def test_service_merge_multi_host():
 
     keys, _ = _stream(n=40000, n_keys=8000, seed=3)
     _, cnts = np.unique(keys, return_counts=True)
-    cfg = StatsConfig(k=512, ls=(1.0, 8.0, 64.0), chunk=1024)
-    a = StreamStatsService(cfg)
-    b = StreamStatsService(cfg)
-    a.observe(keys[keys % 2 == 0])
-    b.observe(keys[keys % 2 == 1])
-    a.merge(b)
+    sh0, sh1 = keys[keys % 2 == 0], keys[keys % 2 == 1]
+    a = StreamStatsService(StatsConfig(k=512, ls=(1.0, 8.0, 64.0), chunk=1024,
+                                       host_id=0))
+    b = StreamStatsService(StatsConfig(k=512, ls=(1.0, 8.0, 64.0), chunk=1024,
+                                       host_id=1))
+    a.observe(sh0)
+    b.observe(sh1)
+    a.merge(b)  # exact mode (default): summaries + 1-pass sketches
     assert a.n_observed == len(keys)
     truth8 = F.exact_statistic(F.cap(8), cnts)
-    assert abs(a.campaign_forecast(8) - truth8) / truth8 < 0.2
     truth_d = float(len(cnts))
+    # before reconcile, queries ride the approximate merged sketches
+    assert abs(a.campaign_forecast(8) - truth8) / truth8 < 0.2
     assert abs(a.query_distinct() - truth_d) / truth_d < 0.2
+    # after the pass-II re-scan of both shards, queries are exact-weighted
+    a.reconcile(sh0)
+    a.reconcile(sh1)
+    assert abs(a.campaign_forecast(8) - truth8) / truth8 < 0.2
+    assert abs(a.query_distinct(exact=True) - truth_d) / truth_d < 0.2
+
+
+def test_load_pre_summary_blob_disables_exact_mode():
+    """Blobs written before the summary buffers existed still load (fresh
+    empty summaries), but exact mode stays off — empty summaries don't
+    describe the observed stream."""
+    import pytest
+
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    keys, _ = _stream(n=8000, n_keys=2000, seed=7)
+    cfg = StatsConfig(k=128, ls=(1.0, 16.0), chunk=1024)
+    svc = StreamStatsService(cfg)
+    svc.observe(keys)
+    blob = svc.state_dict()
+    old_blob = {k: v for k, v in blob.items()
+                if k not in ("bk_keys", "bk_seeds", "n_real", "exact_ok")}
+
+    restored = StreamStatsService(cfg)
+    restored.load_state_dict(old_blob)
+    assert restored.n_observed == len(keys)  # n_real fallback: n_seen + rem
+    assert restored.campaign_forecast(8) == svc.campaign_forecast(8)
+    with pytest.raises(ValueError, match="approx|unavailable"):
+        restored.begin_reconcile()
+
+
+def test_service_summary_buffers_checkpoint_roundtrip():
+    """The lossless bottom-(k+1) summaries ride state_dict / checkpoint:
+    a restored service reconciles to the identical exact sample."""
+    from repro.stats.service import StatsConfig, StreamStatsService
+
+    keys, _ = _stream(n=20000, n_keys=4000, seed=6)
+    cfg = StatsConfig(k=128, ls=(1.0, 16.0), chunk=1024, host_id=0)
+    svc = StreamStatsService(cfg)
+    svc.observe(keys[:13333])  # live sub-chunk remainder in the blob
+    blob = svc.state_dict()
+
+    svc2 = StreamStatsService(cfg)
+    svc2.load_state_dict(blob)
+    svc.observe(keys[13333:])
+    svc2.observe(keys[13333:])
+    for s in (svc, svc2):
+        s.reconcile(keys)
+    for l in cfg.ls:
+        e1, e2 = svc.exact_sketches()[l], svc2.exact_sketches()[l]
+        np.testing.assert_array_equal(e1.keys, e2.keys)
+        np.testing.assert_array_equal(e1.counts, e2.counts)
+        assert e1.tau == e2.tau

@@ -86,6 +86,45 @@ def test_multiobjective_estimator_unbiased(zipf_stream, zipf_truth):
         assert abs(m - truth) < 4 * se + 0.02 * truth, f"T={T}: {m} vs {truth}"
 
 
+def test_estimate_multi_exact_when_keys_at_most_k():
+    """<= k distinct keys: every tau_l^{-x} is inf, Phi == 1, and the
+    estimate IS the exact statistic (the sample is the data set)."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 40, size=3000)  # 40 distinct keys, k = 64
+    _, cnts = np.unique(keys, return_counts=True)
+    ls = [1.0, 8.0, 64.0]
+    union_keys, wx, taus_per_key, _ = M.multiobjective_sample(keys, None, 64, ls, salt=1)
+    assert len(union_keys) == len(cnts)
+    assert all(math.isinf(t) for taus in taus_per_key for t in taus.values())
+    for T in (1, 4, 16):
+        truth = F.exact_statistic(F.cap(T), cnts)
+        est = M.estimate_multi(F.cap(T), union_keys, wx, taus_per_key)
+        np.testing.assert_allclose(est, truth, rtol=1e-9)
+
+
+def test_multiobjective_estimator_unbiased_near_k_boundary():
+    """Monte-Carlo unbiasedness right at the tau_l^{-x} exclusion edge: the
+    number of distinct keys barely exceeds k, so every estimate exercises
+    the s_sorted[k-1] / s_sorted[k] k-th-smallest-of-others indexing (the
+    off-by-one audited in multiobjective.multiobjective_sample)."""
+    rng = np.random.default_rng(8)
+    k = 60
+    keys = (rng.zipf(1.5, size=8000) % 70).astype(np.int64)  # ~70 distinct
+    _, cnts = np.unique(keys, return_counts=True)
+    assert k < len(cnts) <= k + 12  # the edge regime under test
+    ls = [1.0, 8.0, 64.0]
+    ests = {T: [] for T in (1, 8, 64)}
+    for salt in range(30):
+        union_keys, wx, taus_per_key, _ = M.multiobjective_sample(
+            keys, None, k, ls, salt=salt)
+        for T in ests:
+            ests[T].append(M.estimate_multi(F.cap(T), union_keys, wx, taus_per_key))
+    for T, es in ests.items():
+        truth = F.exact_statistic(F.cap(T), cnts)
+        m, se = np.mean(es), np.std(es) / math.sqrt(len(es))
+        assert abs(m - truth) < 4 * se + 0.02 * truth, f"T={T}: {m} vs {truth}"
+
+
 def test_multi_beats_single_when_off_grid(zipf_stream, zipf_truth):
     """The union estimator's variance is <= the single-sample variance
     (inclusion probability dominates each individual Phi_l)."""
