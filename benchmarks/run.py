@@ -10,6 +10,7 @@ Sections:
   5. service        — incremental StreamStatsService vs buffer-and-replay
   6. merge          — cross-host merge cost, exact vs approximate mode
   7. roofline       — summary of the dry-run roofline records (if present)
+  8. query-plane    — batched query_batch vs per-query host estimation
 """
 from __future__ import annotations
 
@@ -128,6 +129,16 @@ def main() -> None:
 
     section("7. Roofline summary (from dry-run records)")
     roofline_summary()
+
+    section("8. Query plane: batched engine vs per-query host path")
+    from benchmarks.query_throughput import main as query_main
+
+    if args.full:
+        query_main()
+    else:
+        query_main(n=100_000, k=1024, ls=(1.0, 8.0, 64.0),
+                   batch_sizes=(1, 64), rounds=3, n_keys=50_000,
+                   audience=10_000, check_target=False)
 
     print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "
           f"{'ALL VALIDATIONS PASS' if ok else 'SOME VALIDATIONS FAILED'}")

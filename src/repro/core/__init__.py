@@ -7,9 +7,12 @@ Public API:
     discrete     — SH_l discrete-spectrum estimator machinery (§4)
     continuous   — SH_l continuous-spectrum machinery (§5)
     estimators   — unified Qhat(f, H) over any SampleResult
+    segments     — first-class query Segments (the H in Q(f, H)) + the
+                   sort/segment-reduce substrate of the vectorized samplers
     multiobjective — coordinated multi-l samples (§6)
     distributed  — shard_map samplers + mergeable-state collectives
 """
 from . import continuous, discrete, estimators, freqfns, hashing, multiobjective, samplers, segments, vectorized  # noqa: F401
 from .freqfns import cap, distinct, exact_statistic, moment, total  # noqa: F401
 from .samplers import SampleResult  # noqa: F401
+from .segments import AllKeys, HashBucket, IdSet, Predicate, Segment, as_segment  # noqa: F401

@@ -46,11 +46,44 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64 as _enable_x64
 
 from ..kernels.capscore.ops import capscore_multi
 from .samplers import SampleResult
 from .segments import EMPTY
 from . import vectorized as VZ
+
+_EMPTY_INT = int(EMPTY)
+
+
+def normalize_keys(keys) -> np.ndarray:
+    """Validate and convert stream keys to the canonical int32 form.
+
+    Every ingestion surface (``observe``, ``reconcile``) funnels through
+    this one helper so keys can never be *silently* wrapped by an
+    ``np.asarray(keys, np.int32)`` cast: non-integer dtypes, values outside
+    int32 range, and the reserved padding id ``EMPTY`` (int32 max) all raise
+    instead of corrupting the per-key randomness.
+    """
+    arr = np.asarray(keys).reshape(-1)
+    if arr.dtype == np.int32:
+        out = arr
+    else:
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise TypeError(
+                f"stream keys must be integers, got dtype {arr.dtype} — "
+                "casting floats/objects would silently truncate key ids")
+        if arr.size and (arr.min() < -_EMPTY_INT - 1 or arr.max() > _EMPTY_INT):
+            bad = arr[(arr < -_EMPTY_INT - 1) | (arr > _EMPTY_INT)][0]
+            raise ValueError(
+                f"stream key {bad} outside int32 range — int32 is the key "
+                "domain of the sketches; remap ids before ingestion")
+        out = arr.astype(np.int32)
+    if out.size and out.max() == _EMPTY_INT:
+        raise ValueError(
+            f"stream key {_EMPTY_INT} is the reserved EMPTY padding id — "
+            "remap it before ingestion")
+    return out
 
 
 @jax.tree_util.register_pytree_node_class
@@ -295,6 +328,64 @@ def finalize_multi(state: SamplerState, spec: SamplerSpec,
 
 
 # ---------------------------------------------------------------------------
+# Jitted multi-lane pass II: exact-weight accumulation over stacked bottom-k
+# ---------------------------------------------------------------------------
+
+
+def init_pass2(lane_keys: list[np.ndarray], cap: int | None = None):
+    """Device-resident pass-II accumulator over per-lane sorted sample keys.
+
+    ``lane_keys``: one *sorted* int32 key array per lane (each <= k long, no
+    EMPTY).  Returns (stacked_keys [L, cap] jnp int32 EMPTY-padded,
+    acc [L, cap] jnp float64 zeros).  Run every shard of the stream through
+    ``pass2_accumulate``; slice ``acc[j, :len(lane_keys[j])]`` at the end.
+    """
+    L = len(lane_keys)
+    cap = max(1, cap if cap is not None else max((len(k) for k in lane_keys),
+                                                 default=1))
+    keys = np.full((L, cap), _EMPTY_INT, np.int32)
+    for j, kk in enumerate(lane_keys):
+        keys[j, : len(kk)] = kk
+    with _enable_x64():
+        return jnp.asarray(keys), jnp.zeros((L, cap), jnp.float64)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _pass2_accum_impl(skeys, acc, keys, w):
+    def lane(sk, a):
+        loc = jnp.clip(jnp.searchsorted(sk, keys), 0, sk.shape[0] - 1)
+        match = sk[loc] == keys
+        return a.at[loc].add(jnp.where(match, w, 0.0))
+
+    return jax.vmap(lane)(skeys, acc)
+
+
+def pass2_accumulate(skeys, acc, keys, weights=None, *, pad_to: int = 256):
+    """Advance every lane's exact-weight accumulator by one stream batch in a
+    single jitted dispatch (the device form of the paper's pass II).
+
+    Replaces the historical per-lane host loop of ``np.searchsorted`` +
+    ``np.add.at``: all lanes share one device dispatch, the scatter-add is
+    bit-identical to ``np.add.at`` on CPU, and the donated accumulator makes
+    steady-state reconciliation copy-free.  Batches are padded to power-of-
+    two buckets (>= ``pad_to``) with EMPTY keys / zero weights so arbitrary
+    batch sizes reuse a handful of compiled shapes.
+    """
+    keys = normalize_keys(keys)
+    n = len(keys)
+    w = (np.ones(n, np.float64) if weights is None
+         else np.asarray(weights, np.float64).reshape(-1))
+    if len(w) != n:
+        raise ValueError(f"weights length {len(w)} != keys length {n}")
+    m = max(pad_to, 1 << max(0, (n - 1).bit_length()))
+    if m != n:
+        keys = np.concatenate([keys, np.full(m - n, _EMPTY_INT, np.int32)])
+        w = np.concatenate([w, np.zeros(m - n, np.float64)])
+    with _enable_x64():
+        return _pass2_accum_impl(skeys, acc, jnp.asarray(keys), jnp.asarray(w))
+
+
+# ---------------------------------------------------------------------------
 # Host-side wrappers: remainder buffering for unaligned batches
 # ---------------------------------------------------------------------------
 
@@ -309,7 +400,11 @@ class _RemainderBuffer:
         self.weights = np.zeros(0, np.float32)
 
     def add(self, keys, weights):
-        """Append; return the chunk-aligned prefix ready for dispatch."""
+        """Append; return the chunk-aligned prefix ready for dispatch.
+
+        ``keys`` must already be normalized (``normalize_keys``) — both
+        stateful samplers do this in ``observe``.
+        """
         keys = np.concatenate([self.keys, np.asarray(keys, np.int32).reshape(-1)])
         if weights is None:
             weights = np.ones(len(keys) - len(self.weights), np.float32)
@@ -366,7 +461,7 @@ class IncrementalSampler:
         self._rem = _RemainderBuffer(chunk)
 
     def observe(self, keys, weights=None) -> None:
-        bk, bw = self._rem.add(keys, weights)
+        bk, bw = self._rem.add(normalize_keys(keys), weights)
         if bk is not None:
             self.state = update(self.state, bk, bw, self.spec)
 
@@ -406,7 +501,8 @@ class MultiSampler:
         self._n_real = 0  # real (non-padding) elements, incl. merged-in hosts
 
     def observe(self, keys, weights=None) -> None:
-        self._n_real += int(np.asarray(keys).reshape(-1).shape[0])
+        keys = normalize_keys(keys)
+        self._n_real += len(keys)
         bk, bw = self._rem.add(keys, weights)
         if bk is not None:
             self.state = update_multi(self.state, bk, bw, self.spec)

@@ -1,20 +1,203 @@
-"""Sort-and-segment utilities: the TPU-native replacement for hash tables.
+"""Sort-and-segment utilities + first-class query ``Segment`` objects.
 
-The sequential algorithms probe a dict per element; the vectorized samplers
-instead sort a chunk by key and reduce with ``jax.ops.segment_*``.  These
-helpers are shared by the samplers, the GNN message passing and the recsys
-EmbeddingBag (JAX has no native EmbeddingBag/CSR — segment ops ARE the
-substrate, per the assignment notes).
+Two related meanings of "segment" live here on purpose:
+
+1. **Sorted-run segments** (the original contents): the TPU-native
+   replacement for hash tables.  The sequential algorithms probe a dict per
+   element; the vectorized samplers instead sort a chunk by key and reduce
+   with ``jax.ops.segment_*``.  These helpers are shared by the samplers,
+   the GNN message passing and the recsys EmbeddingBag (JAX has no native
+   EmbeddingBag/CSR — segment ops ARE the substrate).
+
+2. **Query segments** (the H in Q(f, H), paper §2): first-class,
+   *hashable* predicates over key ids.  Every query surface
+   (``estimators.estimate``, ``freqfns.exact_statistic``, the batched
+   ``stats.query.QueryEngine``) coerces its ``segment`` argument through
+   ``as_segment`` so id-lists, Python predicates, boolean masks and hash
+   buckets all mean the same thing everywhere — and so the query engine can
+   compile a segment ONCE per sketch lane into a device mask and cache it by
+   ``Segment`` identity instead of re-running ``np.isin`` per query.
 
 Conventions: padding key is ``EMPTY = int32 max`` so padded slots sort last;
 all shapes are static (chunk size / capacity are compile-time constants).
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
+from . import hashing as H
+
 EMPTY = jnp.int32(2**31 - 1)
+
+# salt lane for HashBucket segments (disjoint from the sampler salt lanes in
+# core.samplers, which start at 0x01)
+SALT_SEGMENT = 0x5E
+
+
+# ---------------------------------------------------------------------------
+# Query segments: the H in Q(f, H)
+# ---------------------------------------------------------------------------
+
+
+class Segment:
+    """A set of key ids, evaluable as a boolean mask over any key array.
+
+    Subclasses implement ``mask_np(keys) -> bool[len(keys)]`` and are
+    hashable/equatable by *content* (or by held-object identity for opaque
+    predicates), so compiled per-lane masks can be cached with the Segment
+    itself as the cache key — holding the Segment in the cache keeps any
+    captured callable alive, which keeps identity-based keys valid.
+    """
+
+    def mask_np(self, keys: np.ndarray) -> np.ndarray:  # pragma: no cover
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+class AllKeys(Segment):
+    """H = all keys (segment=None everywhere coerces to this)."""
+
+    def mask_np(self, keys):
+        return np.ones(len(keys), dtype=bool)
+
+    def __eq__(self, other):
+        return type(other) is AllKeys
+
+    def __hash__(self):
+        return hash(AllKeys)
+
+    def describe(self):
+        return "all"
+
+
+class IdSet(Segment):
+    """Membership in an explicit id set (kept sorted; content-hashed)."""
+
+    def __init__(self, ids):
+        self.ids = np.unique(np.asarray(ids).reshape(-1))
+        self._digest = hash((len(self.ids), self.ids.tobytes()))
+
+    def mask_np(self, keys):
+        # np.isin == the historical estimators._segment_mask id-list semantics
+        return np.isin(keys, self.ids)
+
+    def __eq__(self, other):
+        return (type(other) is IdSet and self._digest == other._digest
+                and np.array_equal(self.ids, other.ids))
+
+    def __hash__(self):
+        return self._digest
+
+    def describe(self):
+        return f"ids[{len(self.ids)}]"
+
+
+class Mask(Segment):
+    """A precomputed boolean mask aligned with a specific key array.
+
+    This is the historical ``freqfns.exact_statistic`` calling convention;
+    the mask length must match the key array it is applied to.
+    """
+
+    def __init__(self, mask):
+        self.mask = np.asarray(mask, dtype=bool).reshape(-1)
+        self._digest = hash((len(self.mask), self.mask.tobytes()))
+
+    def mask_np(self, keys):
+        if len(self.mask) != len(keys):
+            raise ValueError(
+                f"Mask segment of length {len(self.mask)} applied to "
+                f"{len(keys)} keys — mask segments are positional; use IdSet/"
+                "Predicate/HashBucket for key-id semantics")
+        return self.mask
+
+    def __eq__(self, other):
+        return (type(other) is Mask and self._digest == other._digest
+                and np.array_equal(self.mask, other.mask))
+
+    def __hash__(self):
+        return self._digest
+
+    def describe(self):
+        return f"mask[{int(self.mask.sum())}/{len(self.mask)}]"
+
+
+class Predicate(Segment):
+    """An arbitrary vectorized predicate over key ids (host-evaluated).
+
+    Equality/hash are by callable identity: two Predicates wrapping the same
+    function object compare equal (and hit the same compiled-mask cache);
+    distinct lambdas are distinct segments even if textually identical.
+    """
+
+    def __init__(self, fn, name: str | None = None):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "predicate")
+
+    def mask_np(self, keys):
+        return np.asarray(self.fn(keys), dtype=bool).reshape(len(keys))
+
+    def __eq__(self, other):
+        return type(other) is Predicate and self.fn is other.fn
+
+    def __hash__(self):
+        return hash(self.fn)
+
+    def describe(self):
+        return self.name
+
+
+class HashBucket(Segment):
+    """H = keys hashing into bucket ``bucket`` of ``n_buckets`` (A/B slices).
+
+    Uses the shared counter-based hashing substrate (core.hashing), so the
+    same (n_buckets, bucket, salt) triple selects the same keys on every
+    host and backend.
+    """
+
+    def __init__(self, n_buckets: int, bucket: int, salt: int = 0):
+        if not 0 <= bucket < n_buckets:
+            raise ValueError(f"bucket {bucket} not in [0, {n_buckets})")
+        self.n_buckets, self.bucket, self.salt = int(n_buckets), int(bucket), int(salt)
+
+    def mask_np(self, keys):
+        h = H.hash_combine_np(np.asarray(keys), np.uint32(SALT_SEGMENT),
+                              np.uint32(self.salt))
+        return (h % np.uint32(self.n_buckets)) == np.uint32(self.bucket)
+
+    def __eq__(self, other):
+        return (type(other) is HashBucket
+                and (self.n_buckets, self.bucket, self.salt)
+                == (other.n_buckets, other.bucket, other.salt))
+
+    def __hash__(self):
+        return hash((HashBucket, self.n_buckets, self.bucket, self.salt))
+
+    def describe(self):
+        return f"bucket {self.bucket}/{self.n_buckets}"
+
+
+def as_segment(segment) -> Segment:
+    """Coerce every historical ``segment=`` convention to a Segment.
+
+    None -> AllKeys; Segment -> itself; callable -> Predicate; boolean
+    array -> positional Mask; any other array-like -> IdSet membership.
+    """
+    if segment is None:
+        return AllKeys()
+    if isinstance(segment, Segment):
+        return segment
+    if callable(segment):
+        return Predicate(segment)
+    arr = np.asarray(segment)
+    if arr.dtype == bool:
+        return Mask(arr)
+    return IdSet(arr)
 
 
 def sort_by_key(keys, *arrays):

@@ -7,6 +7,15 @@ SH_l sketch per configured l over the stream of keys flowing through
 training/serving and answers
 
     service.query_cap(T, segment)  ~=  Q(cap_T, segment)
+    service.query_batch([(fn, segment), ...])   # many (T x segment) cells,
+                                                # ONE jitted device dispatch
+
+Queries ride the batched query plane (stats/query.py, DESIGN.md §7): the
+whole batch is answered in one jitted dispatch over the stacked lane
+arrays — bit-identical to looping the scalar estimators — with per-query
+variance/CI diagnostics; segment masks and estimator coefficient tables
+are compiled once per sketch and cached device-resident.
+``launch.stats_serve`` wraps this in a request-batching server loop.
 
 **State is O(k * |ls|), independent of stream length.**  ``observe()``
 advances every sketch of the l-grid in a single jitted device dispatch with
@@ -52,15 +61,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from pathlib import Path
 from typing import Sequence
 
 import numpy as np
 
 from ..checkpoint import manager as ckpt_manager
-from ..core import estimators, freqfns, incremental
+from ..core import freqfns, incremental
 from ..core.samplers import SampleResult
 from ..core.segments import EMPTY
+from .query import BatchResult, Query, QueryEngine
 
 
 @dataclasses.dataclass
@@ -74,12 +85,12 @@ class StatsConfig:
 
 @dataclasses.dataclass
 class _LaneSample:
-    """Frozen pass-1 outcome of one l lane + its pass-2 accumulator."""
+    """Frozen pass-1 outcome of one l lane (the pass-2 exact-weight
+    accumulators live stacked on device, see ``reconcile``)."""
 
     l: float
     keys: np.ndarray       # sorted sampled keys (<= k)
     tau: float             # (k+1)-smallest seed, inf if everything sampled
-    weights: np.ndarray    # exact-weight accumulator (float64)
 
 
 class StreamStatsService:
@@ -98,10 +109,15 @@ class StreamStatsService:
             chunk=config.chunk, salt=config.salt, host_id=config.host_id,
         )
         self._results: dict[float, SampleResult] | None = None
-        self._lanes: list[_LaneSample] | None = None  # reconcile accumulators
+        self._engines: dict[bool, QueryEngine] = {}  # query plane, per path
+        self._lanes: list[_LaneSample] | None = None  # frozen pass-1 samples
+        self._recon_keys = None  # [L, kmax] device sorted sample keys
+        self._recon_acc = None   # [L, kmax] device f64 exact-weight accs
         self._recon_n = 0  # elements re-scanned by the current reconcile
         self._recon_discarded = False  # a begun reconcile was invalidated
         self._exact_ok = True  # summaries valid (invalidated by approx merge)
+        self._l_grid_warned = False  # pick_l out-of-grid warning (once)
+        self._pick_l_cache: dict[float, float] = {}
         # every host whose stream this service has absorbed (exact mode must
         # never merge two streams sharing an element-id namespace)
         self._host_ids: set[int] = (
@@ -113,10 +129,13 @@ class StreamStatsService:
         """Feed a batch of stream elements (host arrays ok).
 
         One jitted dispatch advances all |ls| sketches; only the sub-chunk
-        remainder stays on host until the next batch aligns it.
+        remainder stays on host until the next batch aligns it.  Keys are
+        validated through the same ``incremental.normalize_keys`` helper as
+        ``reconcile`` — never silently wrapped to int32.
         """
-        self._sampler.observe(np.asarray(keys).reshape(-1), weights)
+        self._sampler.observe(keys, weights)
         self._results = None
+        self._engines.clear()
         self._invalidate_reconcile()
 
     def _invalidate_reconcile(self) -> None:
@@ -124,7 +143,9 @@ class StreamStatsService:
         pass-II weights refer to a stale sample and must be discarded."""
         if self._lanes is not None:
             self._lanes = None
+            self._recon_keys = self._recon_acc = None
             self._recon_discarded = True
+            self._engines.pop(True, None)
 
     @property
     def n_observed(self) -> int:
@@ -142,9 +163,31 @@ class StreamStatsService:
 
     # -- queries -------------------------------------------------------------
 
+    # the paper's guidance (preceding §6.1): a geometric l-grid with ratio
+    # sqrt(2)^2 = 2 keeps every T within sqrt(2) of a lane in log space
+    _L_GRID_FACTOR = 0.5 * math.log(2.0)  # log(sqrt(2))
+
     def pick_l(self, T: float) -> float:
+        cached = self._pick_l_cache.get(T)
+        if cached is not None:
+            return cached
         ls = np.asarray(self.config.ls, dtype=np.float64)
-        return float(ls[np.argmin(np.abs(np.log(ls) - math.log(max(T, 1e-9))))])
+        dist = np.abs(np.log(ls) - math.log(max(T, 1e-9)))
+        j = int(np.argmin(dist))
+        if dist[j] > self._L_GRID_FACTOR + 1e-9 and not self._l_grid_warned:
+            self._l_grid_warned = True
+            warnings.warn(
+                f"cap T={T:g} is {math.exp(float(dist[j])):.2f}x away from the "
+                f"nearest configured lane l={ls[j]:g} — beyond the paper's "
+                "sqrt(2) log-space factor, so the estimate's CV degrades with "
+                "the disparity max(T/l, l/T) (Thm 5.4).  Densify StatsConfig.ls "
+                "toward a geometric grid of ratio <= 2 over the queried T range "
+                "(and extend its ends if T falls outside).  "
+                "(warning shown once per service)",
+                RuntimeWarning, stacklevel=2)
+        l = float(ls[j])
+        self._pick_l_cache[T] = l
+        return l
 
     @property
     def _reconcile_complete(self) -> bool:
@@ -152,37 +195,75 @@ class StreamStatsService:
         (each shard exactly once re-scans the whole logical stream)."""
         return self._lanes is not None and self._recon_n >= self.n_observed
 
-    def _result_for(self, l: float, exact: bool | None) -> SampleResult:
+    def _use_exact(self, exact: bool | None) -> bool:
         # auto mode only trusts the exact path once pass II covered the whole
         # stream — a half-reconciled accumulator would silently report
         # partial sums (or 0/0 = nan for zero-weight keys)
         use_exact = exact if exact is not None else self._reconcile_complete
-        if use_exact:
-            if not self._reconcile_complete:
-                raise ValueError(
-                    f"exact query before reconcile completed: {self._recon_n} "
-                    f"of {self.n_observed} observed elements re-scanned — "
-                    "stream every shard through reconcile() first")
-            return self.exact_sketches()[l]
-        return self._materialize()[l]
+        if use_exact and not self._reconcile_complete:
+            raise ValueError(
+                f"exact query before reconcile completed: {self._recon_n} "
+                f"of {self.n_observed} observed elements re-scanned — "
+                "stream every shard through reconcile() first")
+        return use_exact
+
+    def _engine(self, exact: bool | None) -> QueryEngine:
+        """The batched query plane over the current sketches (lazily built,
+        cached until the underlying sample changes)."""
+        use_exact = self._use_exact(exact)
+        engine = self._engines.get(use_exact)
+        if engine is None:
+            sketches = (self.exact_sketches() if use_exact
+                        else self._materialize())
+            engine = self._engines[use_exact] = QueryEngine(sketches)
+        return engine
+
+    def _resolve_lane(self, q: Query) -> Query:
+        if q.l is not None:
+            return q
+        kind = q.fn.kind
+        if kind in ("cap", "threshold"):
+            l = self.pick_l(q.fn.param)
+        elif kind == "distinct":
+            l = self.pick_l(1.0)
+        else:  # total / moment / log1p / custom: weight-proportional regime
+            l = max(self.config.ls)
+        return Query(q.fn, q.segment, l)
+
+    def query_batch(self, queries, *, exact: bool | None = None) -> BatchResult:
+        """Answer a whole batch of (FreqFn, segment[, lane]) queries in one
+        jitted device dispatch over the stacked lane arrays.
+
+        Each element of ``queries`` is a ``stats.query.Query`` or an
+        ``(fn, segment)`` / ``(fn, segment, l)`` tuple; unresolved lanes are
+        picked per statistic exactly like the scalar wrappers (``cap_T`` /
+        ``threshold_T`` -> nearest-in-log lane, ``distinct`` -> pick_l(1),
+        everything else -> max l).  Answers are bit-identical to looping
+        ``estimators.estimate`` over the same sketches, and arrive with
+        per-query variance/CI diagnostics (see stats.query).
+        """
+        qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        engine = self._engine(exact)
+        return engine.query_batch([self._resolve_lane(q) for q in qs])
 
     def query_cap(self, T: float, segment=None, *, exact: bool | None = None) -> float:
         """Estimate Q(cap_T, segment).
 
         ``exact=None`` (default) uses the reconciled 2-pass estimates when a
         reconcile pass has run, else the resident 1-pass sketches; force one
-        path with True/False.
+        path with True/False.  Thin wrapper over ``query_batch`` (one-query
+        batch), bit-compatible with the scalar estimator path.
         """
-        res = self._result_for(self.pick_l(T), exact)
-        return estimators.estimate(res, freqfns.cap(T), segment)
+        r = self.query_batch([Query(freqfns.cap(T), segment)], exact=exact)
+        return float(r.estimates[0])
 
     def query_distinct(self, segment=None, *, exact: bool | None = None) -> float:
-        res = self._result_for(self.pick_l(1.0), exact)
-        return estimators.estimate(res, freqfns.distinct(), segment)
+        r = self.query_batch([Query(freqfns.distinct(), segment)], exact=exact)
+        return float(r.estimates[0])
 
     def query_total(self, segment=None, *, exact: bool | None = None) -> float:
-        res = self._result_for(max(self.config.ls), exact)
-        return estimators.estimate(res, freqfns.total(), segment)
+        r = self.query_batch([Query(freqfns.total(), segment)], exact=exact)
+        return float(r.estimates[0])
 
     def campaign_forecast(self, cap_per_user: float, segment=None, *,
                           exact: bool | None = None) -> float:
@@ -247,6 +328,7 @@ class StreamStatsService:
         if mode == "approx":
             self._exact_ok = False
         self._results = None
+        self._engines.clear()
         self._invalidate_reconcile()
 
     # -- exact second pass (paper pass II) -----------------------------------
@@ -261,6 +343,7 @@ class StreamStatsService:
                 "exact pass unavailable after a mode='approx' merge")
         self._recon_discarded = False
         self._recon_n = 0
+        self._engines.pop(True, None)
         bk_keys, bk_seeds = self._sampler.bottomk_summaries()
         k = self.config.k
         self._lanes = []
@@ -275,17 +358,24 @@ class StreamStatsService:
             else:
                 tau = math.inf
             kk = np.sort(kk)
-            self._lanes.append(_LaneSample(
-                l=float(l), keys=kk, tau=tau,
-                weights=np.zeros(len(kk), np.float64)))
+            self._lanes.append(_LaneSample(l=float(l), keys=kk, tau=tau))
+        # stacked device accumulators: every lane advances per reconcile
+        # batch in one jitted dispatch (core.incremental.pass2_accumulate)
+        self._recon_keys, self._recon_acc = incremental.init_pass2(
+            [lane.keys for lane in self._lanes])
 
     def reconcile(self, keys, weights=None) -> None:
         """Accumulate exact weights of the sampled keys from a batch of the
         original stream (pass II).  Stream EVERY shard's elements through
         this (any batch sizes, any order) before exact queries; weights of
         un-reconciled elements are simply missing from the estimates.
-        On a mesh, core.distributed.pass2_shard_multi + psum is the
-        equivalent collective form."""
+
+        All |ls| lanes advance in a single jitted device dispatch over the
+        stacked bottom-k keys, with the accumulator buffers donated between
+        batches.  Keys are validated (dtype / int32 range / reserved EMPTY)
+        by the same helper as ``observe`` — never silently wrapped.  On a
+        mesh, core.distributed.pass2_shard_multi + psum is the equivalent
+        collective form."""
         if self._lanes is None:
             if self._recon_discarded:
                 # an observe()/merge() changed the pass-1 sample after a
@@ -296,17 +386,11 @@ class StreamStatsService:
                     "accumulated pass-II weights were discarded — call "
                     "begin_reconcile() and re-stream EVERY shard")
             self.begin_reconcile()
-        keys = np.asarray(keys, np.int32).reshape(-1)
-        w = (np.ones(len(keys), np.float64) if weights is None
-             else np.asarray(weights, np.float64).reshape(-1))
+        keys = incremental.normalize_keys(keys)
+        self._recon_acc = incremental.pass2_accumulate(
+            self._recon_keys, self._recon_acc, keys, weights)
         self._recon_n += len(keys)
-        for lane in self._lanes:
-            if not len(lane.keys):
-                continue
-            loc = np.searchsorted(lane.keys, keys)
-            loc = np.clip(loc, 0, len(lane.keys) - 1)
-            match = lane.keys[loc] == keys
-            np.add.at(lane.weights, loc[match], w[match])
+        self._engines.pop(True, None)
 
     def exact_sketches(self) -> dict[float, SampleResult]:
         """Per-lane 2-pass SampleResults (exact weights) from the reconciled
@@ -318,11 +402,12 @@ class StreamStatsService:
                 f"no complete exact sample: {self._recon_n} of "
                 f"{self.n_observed} observed elements re-scanned — run "
                 "reconcile(keys, weights) over every shard of the stream")
+        acc = np.asarray(self._recon_acc, dtype=np.float64)
         return {
             lane.l: SampleResult(
-                keys=lane.keys, counts=lane.weights.copy(), tau=lane.tau,
-                l=lane.l, kind="continuous", exact_weights=True)
-            for lane in self._lanes
+                keys=lane.keys, counts=acc[j, : len(lane.keys)].copy(),
+                tau=lane.tau, l=lane.l, kind="continuous", exact_weights=True)
+            for j, lane in enumerate(self._lanes)
         }
 
     # -- checkpointing --------------------------------------------------------
@@ -344,7 +429,9 @@ class StreamStatsService:
         # pre-summary blobs load with empty summaries: exact mode stays off
         self._exact_ok = ("bk_keys" in d) and bool(d.get("exact_ok", True))
         self._results = None
+        self._engines.clear()
         self._lanes = None
+        self._recon_keys = self._recon_acc = None
         self._recon_n = 0
         self._recon_discarded = False
         self._host_ids = (set() if self.config.host_id is None
