@@ -112,10 +112,13 @@ def main() -> None:
     section("3. Multi-objective samples (Lemma 6.1)")
     ok &= multiobjective_bench()
 
-    section("4. Sampler throughput")
+    section("4. Sampler throughput (+ multi-lane ingest -> BENCH_ingest.json)")
     from benchmarks.sampler_throughput import main as tp_main
 
-    tp_main(n=200_000 if not args.full else 2_000_000)
+    tp_main(n=200_000 if not args.full else 2_000_000,
+            ingest_kw=(dict(L=8, k=4096, chunk=4096) if args.full
+                       else dict(L=8, k=1024, chunk=2048, n_chunks=2)),
+            json_path="BENCH_ingest.json")
 
     section("5. StreamStatsService: incremental vs buffer-and-replay")
     from benchmarks.service_throughput import main as svc_main

@@ -3,20 +3,33 @@
 The paper's own evaluation skips runtime ("similar to widely applied distinct
 counting algorithms"); for a framework the element-rate IS the product, so we
 measure it: elements/second for the oracle (Algorithm 5), the vectorized
-fixed-k sampler at several chunk sizes, and the capscore elementwise stage
-alone (XLA vs Pallas-interpret is correctness-only on CPU; on TPU the Pallas
-path replaces the XLA scoring inside the chunk step).
+fixed-k sampler at several chunk sizes, the capscore elementwise stage alone,
+and — the headline since the single-sort ingest restructure — the multi-lane
+``update_multi`` path against its pre-restructure reference, with per-stage
+timings (score / order / aggregate / merge / evict) that show where the
+L+1 redundant sorts went.
+
+    PYTHONPATH=src python -m benchmarks.sampler_throughput [--smoke] [--json PATH]
+
+``--json`` (default ``BENCH_ingest.json`` when given no value via run.py)
+emits a machine-readable record of elements/s per path so CI can track the
+perf trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import incremental as I
 from repro.core import samplers as S
 from repro.core import vectorized as V
-from repro.kernels.capscore.ops import capscore
+from repro.core.segments import chunk_order
+from repro.kernels.capscore.ops import capscore, capscore_multi
 
 
 def bench(fn, *args, reps=3, **kw):
@@ -28,7 +41,125 @@ def bench(fn, *args, reps=3, **kw):
     return (time.time() - t0) / reps
 
 
-def main(n=200_000, k=256, l=20.0):
+def _zipf(n, n_keys=50000, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.zipf(1.3, size=n) % n_keys).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Multi-lane ingest: single-sort path vs pre-restructure reference
+# ---------------------------------------------------------------------------
+
+
+def _stage_timings(L, k, chunk, reps=5):
+    """Time each pipeline stage of one chunk step, new vs legacy form.
+
+    Demonstrates the sort-count reduction: the legacy step pays L chunk sorts
+    (aggregate) + 1 chunk sort (summary) + L table sorts of k+2*chunk (merge)
+    + L capacity sorts (evict) per chunk; the restructured step pays ONE
+    chunk sort total, O(N) searchsorted merges and a top_k partial select.
+    """
+    rng = np.random.default_rng(7)
+    ls = jnp.asarray(np.geomspace(1.0, 2.0 ** (L - 1), L), jnp.float32)
+    ck = jnp.asarray(_zipf(chunk, seed=3)[:chunk], jnp.int32)
+    cw = jnp.ones(chunk, jnp.float32)
+    eids = jnp.arange(chunk, dtype=jnp.int32)
+    salt = jnp.uint32(1)
+
+    # a warmed, representative state: ingest a few chunks so tau is finite
+    state, spec = I.init_multi_state(np.asarray(ls), k=k, chunk=chunk, salt=1)
+    warm = _zipf(chunk * 4, seed=5).astype(np.int32)
+    state = I.update_multi(state, warm, np.ones(len(warm), np.float32), spec,
+                           donate=False)
+    table = state.table
+
+    score, delta, entry, kb = capscore_multi(ck, eids, cw, ls, table.tau, salt)
+
+    j_order = jax.jit(chunk_order)
+    order = j_order(ck)
+
+    def agg_shared(sc, dl, en, kb_l):
+        return jax.vmap(
+            lambda s_, d_, e_, b_: V.aggregate_continuous_scored(
+                ck, cw, s_, d_, e_, b_, order)
+        )(sc, dl, en, kb_l)
+
+    def agg_legacy(sc, dl, en, kb_l):
+        return jax.vmap(
+            lambda s_, d_, e_, b_: V.aggregate_continuous_scored(
+                ck, cw, s_, d_, e_, b_)
+        )(sc, dl, en, kb_l)
+
+    j_agg_shared = jax.jit(agg_shared)
+    j_agg_legacy = jax.jit(agg_legacy)
+    aggs = j_agg_shared(score, delta, entry, kb)
+
+    j_merge_sorted = jax.jit(lambda t, a: jax.vmap(V.fixed_k_merge)(t, a))
+    j_merge_legacy = jax.jit(lambda t, a: jax.vmap(
+        lambda tt, aa: V._merge_table(tt, aa)[:4])(t, a))
+    merged = j_merge_sorted(table, aggs)
+
+    j_evict_topk = jax.jit(lambda t: jax.vmap(
+        lambda tt, l: V.evict_table(tt, k=k, l=l, salt=salt, max_evict=chunk)
+    )(t, ls))
+    j_evict_sort = jax.jit(lambda t: jax.vmap(
+        lambda tt, l: V._evict_to_k_ref(tt.keys, tt.counts, tt.kb, tt.seed,
+                                        tt.tau, k, l, salt, tt.step)
+    )(t, ls))
+
+    stages = {
+        "score(capscore_multi)": lambda: capscore_multi(ck, eids, cw, ls, table.tau, salt),
+        "order(1 shared chunk sort)": lambda: j_order(ck),
+        "aggregate[shared order, L lanes]": lambda: j_agg_shared(score, delta, entry, kb),
+        "aggregate[legacy: L chunk sorts]": lambda: j_agg_legacy(score, delta, entry, kb),
+        "merge[sorted-runs, L lanes]": lambda: j_merge_sorted(table, aggs),
+        "merge[legacy: L table re-sorts]": lambda: j_merge_legacy(table, aggs),
+        "evict[top_k, L lanes]": lambda: j_evict_topk(merged),
+        "evict[legacy: L full sorts]": lambda: j_evict_sort(merged),
+    }
+    return {name: bench(fn, reps=reps) * 1e3 for name, fn in stages.items()}
+
+
+def multi_lane_ingest(L=8, k=4096, chunk=4096, n_chunks=4, reps=3, stage_reps=5):
+    """Elements/s of update_multi: single-sort path vs pre-restructure path."""
+    ls = np.geomspace(1.0, 2.0 ** (L - 1), L)
+    n = n_chunks * chunk
+    keys = _zipf(n, seed=11).astype(np.int32)
+    w = np.ones(n, np.float32)
+
+    def run(reference):
+        state, spec = I.init_multi_state(ls, k=k, chunk=chunk, salt=2)
+        # warm tau so steady-state (evicting) chunks are what gets timed
+        state = I.update_multi(state, keys, w, spec, donate=False,
+                               reference=reference)
+        return bench(I.update_multi, state, keys, w, spec, donate=False,
+                     reference=reference, reps=reps)
+
+    t_ref = run(reference=True)
+    t_new = run(reference=False)
+    out = {
+        "L": L, "k": k, "chunk": chunk, "n": n,
+        "reference_eps": n / t_ref,
+        "sorted_eps": n / t_new,
+        "speedup": t_ref / t_new,
+        "stages_ms": _stage_timings(L, k, chunk, reps=stage_reps),
+    }
+    return out
+
+
+def print_ingest(res):
+    print(f"\n-- multi-lane ingest (L={res['L']}, k={res['k']}, "
+          f"chunk={res['chunk']}, n={res['n']}):")
+    print(f"{'path':36s} {'elements/s':>14s}")
+    print(f"{'update_multi[reference pre-PR]':36s} {res['reference_eps']:14.0f}")
+    print(f"{'update_multi[single-sort]':36s} {res['sorted_eps']:14.0f}")
+    print(f"speedup: {res['speedup']:.2f}x")
+    print(f"\n{'per-stage (one chunk step)':36s} {'ms':>10s}")
+    for name, ms in res["stages_ms"].items():
+        print(f"{name:36s} {ms:10.3f}")
+
+
+def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None):
     rng = np.random.default_rng(0)
     keys = (rng.zipf(1.3, size=n) % 50000).astype(np.int64)
     rows = []
@@ -43,19 +174,49 @@ def main(n=200_000, k=256, l=20.0):
     t = bench(V.sample_two_pass, keys, None, k=k, l=l, salt=1, chunk=4096)
     rows.append(("vectorized_two_pass", n / t, t * 1e6 / n))
 
-    import jax.numpy as jnp
-
-    kk = jnp.asarray(keys[:131072], jnp.int32)
-    ee = jnp.arange(131072, dtype=jnp.int32)
-    ww = jnp.ones(131072, jnp.float32)
+    m = min(131072, n)
+    kk = jnp.asarray(keys[:m], jnp.int32)
+    ee = jnp.arange(m, dtype=jnp.int32)
+    ww = jnp.ones(m, jnp.float32)
     t = bench(lambda: capscore(kk, ee, ww, l, 0.01, 3, backend="xla"))
-    rows.append(("capscore_stage_xla", 131072 / t, t * 1e6 / 131072))
+    rows.append(("capscore_stage_xla", m / t, t * 1e6 / m))
 
     print(f"{'path':36s} {'elements/s':>14s} {'us/element':>12s}")
     for name, eps, us in rows:
         print(f"{name:36s} {eps:14.0f} {us:12.4f}")
-    return rows
+
+    ingest = multi_lane_ingest(**(ingest_kw or {}))
+    print_ingest(ingest)
+
+    if json_path:
+        record = {
+            "bench": "sampler_throughput",
+            "single_lane": {name: {"elements_per_s": eps} for name, eps, _ in rows},
+            "multi_lane_ingest": {
+                k_: v for k_, v in ingest.items() if k_ != "stages_ms"
+            },
+            "multi_lane_stages_ms": ingest["stages_ms"],
+        }
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\n[sampler_throughput] wrote {json_path}")
+    return rows, ingest
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small L/k/chunk, still emits JSON)")
+    ap.add_argument("--json", default="BENCH_ingest.json",
+                    help="machine-readable output path")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        main(n=50_000, k=128,
+             ingest_kw=dict(L=4, k=512, chunk=1024, n_chunks=2, reps=2,
+                            stage_reps=2),
+             json_path=args.json)
+    else:
+        main(n=2_000_000 if args.full else 200_000,
+             ingest_kw=dict(L=8, k=4096, chunk=4096),
+             json_path=args.json)

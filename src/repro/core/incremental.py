@@ -50,40 +50,14 @@ from jax.experimental import enable_x64 as _enable_x64
 
 from ..kernels.capscore.ops import capscore_multi
 from .samplers import SampleResult
-from .segments import EMPTY
+from .segments import EMPTY, chunk_order, normalize_keys  # noqa: F401 (re-export)
 from . import vectorized as VZ
 
 _EMPTY_INT = int(EMPTY)
 
-
-def normalize_keys(keys) -> np.ndarray:
-    """Validate and convert stream keys to the canonical int32 form.
-
-    Every ingestion surface (``observe``, ``reconcile``) funnels through
-    this one helper so keys can never be *silently* wrapped by an
-    ``np.asarray(keys, np.int32)`` cast: non-integer dtypes, values outside
-    int32 range, and the reserved padding id ``EMPTY`` (int32 max) all raise
-    instead of corrupting the per-key randomness.
-    """
-    arr = np.asarray(keys).reshape(-1)
-    if arr.dtype == np.int32:
-        out = arr
-    else:
-        if not np.issubdtype(arr.dtype, np.integer):
-            raise TypeError(
-                f"stream keys must be integers, got dtype {arr.dtype} — "
-                "casting floats/objects would silently truncate key ids")
-        if arr.size and (arr.min() < -_EMPTY_INT - 1 or arr.max() > _EMPTY_INT):
-            bad = arr[(arr < -_EMPTY_INT - 1) | (arr > _EMPTY_INT)][0]
-            raise ValueError(
-                f"stream key {bad} outside int32 range — int32 is the key "
-                "domain of the sketches; remap ids before ingestion")
-        out = arr.astype(np.int32)
-    if out.size and out.max() == _EMPTY_INT:
-        raise ValueError(
-            f"stream key {_EMPTY_INT} is the reserved EMPTY padding id — "
-            "remap it before ingestion")
-    return out
+# normalize_keys lives in core.segments now (so the one-shot samplers'
+# ``vectorized._prep`` shares it without an import cycle); re-exported here
+# because this module was its historical home.
 
 
 @jax.tree_util.register_pytree_node_class
@@ -133,12 +107,21 @@ class SamplerSpec:
     the precondition for both merge modes of stats.service.  ``None`` (the
     default) keeps raw positions, preserving bit-exact equivalence with the
     one-shot samplers.
+
+    ``evict_every`` (fixed-k only) amortizes the batched eviction: the table
+    capacity grows to ``k + evict_every * chunk`` and the eviction pass runs
+    only every ``evict_every``-th chunk, so steady-state chunks pay merge
+    cost alone.  E=1 (default) is bit-compatible with the one-shot samplers;
+    E>1 changes the eviction randomness *schedule* — the sample stays a valid
+    fixed-k SH_l sample (count law / unbiasedness are Monte-Carlo validated
+    in tests/test_ingest_order.py) but is no longer per-run identical to E=1.
     """
 
     kind: str = "continuous"
     k: int | None = None          # fixed-k mode when set, else fixed-tau
     chunk: int = 2048
     host_id: int | None = None    # element-id namespace for multi-host runs
+    evict_every: int = 1          # fixed-k eviction period E (chunks)
 
     @property
     def mode(self) -> str:
@@ -153,21 +136,26 @@ class SamplerSpec:
 
 
 def init_state(l, *, k=None, tau=None, kind="continuous", chunk=2048,
-               capacity=8192, salt=0) -> tuple[SamplerState, SamplerSpec]:
+               capacity=8192, salt=0, evict_every=1) -> tuple[SamplerState, SamplerSpec]:
     """Fresh O(k)/O(capacity) sampler state + its static spec.
 
-    Fixed-k (``k`` set): capacity is k + chunk so a chunk merge never
-    overflows before eviction (only ``kind="continuous"`` supports one-pass
-    fixed-k, as in the one-shot sampler).  Fixed-tau (``tau`` set): table of
-    ``capacity`` slots, overflow counted and raised at finalize.
+    Fixed-k (``k`` set): capacity is k + evict_every*chunk so the merges of a
+    whole eviction period never overflow before the scheduled eviction (only
+    ``kind="continuous"`` supports one-pass fixed-k, as in the one-shot
+    sampler).  Fixed-tau (``tau`` set): table of ``capacity`` slots, overflow
+    counted and raised at finalize.
     """
     if (k is None) == (tau is None):
         raise ValueError("exactly one of k= / tau= must be given")
+    if evict_every < 1:
+        raise ValueError(f"evict_every must be >= 1, got {evict_every}")
     if k is not None:
         if kind != "continuous":
             raise ValueError("one-pass fixed-k requires kind='continuous'")
-        table = VZ.init_table(k + chunk)
+        table = VZ.init_table(k + evict_every * chunk)
     else:
+        if evict_every != 1:
+            raise ValueError("evict_every applies to fixed-k samplers only")
         table = VZ.init_table(capacity, tau)
     state = SamplerState(
         table=table,
@@ -175,7 +163,21 @@ def init_state(l, *, k=None, tau=None, kind="continuous", chunk=2048,
         l=jnp.float32(l),
         salt=jnp.asarray(salt, jnp.uint32),
     )
-    return state, SamplerSpec(kind=kind, k=k, chunk=chunk)
+    return state, SamplerSpec(kind=kind, k=k, chunk=chunk, evict_every=evict_every)
+
+
+def _scheduled_evict(table, spec: SamplerSpec, evict_fn):
+    """Run ``evict_fn`` on the merged table at the spec's eviction cadence.
+
+    E=1 calls it unconditionally (bit-compatible fast path, no cond); E>1
+    evicts only when the chunk counter hits a multiple of E — the lazy
+    partition-based schedule.  ``table.step`` may be scalar or [L] (all lanes
+    advance in lockstep, so lane 0 decides)."""
+    if spec.evict_every == 1:
+        return evict_fn(table)
+    step = table.step if table.step.ndim == 0 else table.step[0]
+    return jax.lax.cond(step % spec.evict_every == 0, evict_fn,
+                        lambda t: t, table)
 
 
 def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
@@ -185,13 +187,20 @@ def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> Sampl
         raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
     kc = keys.reshape(n // chunk, chunk)
     wc = weights.reshape(n // chunk, chunk)
+    max_evict = spec.evict_every * chunk
 
     def body(carry, xs):
         table, pos = carry
         ck, cw = xs
         eids = spec.eids(pos)
         if spec.mode == "fixed_k":
-            table = VZ.fixed_k_step(table, ck, cw, eids, state.l, state.salt, k=spec.k)
+            order = chunk_order(ck)
+            agg = VZ.aggregate_continuous(ck, cw, eids, table.tau, state.l,
+                                          state.salt, order)
+            table = _scheduled_evict(
+                VZ.fixed_k_merge(table, agg), spec,
+                lambda t: VZ.evict_table(t, k=spec.k, l=state.l,
+                                         salt=state.salt, max_evict=max_evict))
         else:
             table = VZ.fixed_tau_step(table, ck, cw, eids, state.l, state.salt,
                                       kind=spec.kind)
@@ -218,6 +227,27 @@ def update(state: SamplerState, keys, weights, spec: SamplerSpec, *,
     return fn(state, jnp.asarray(keys), jnp.asarray(weights), spec)
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _final_evict(table, l, salt, spec: SamplerSpec):
+    """Project a lazily-evicted table down to <= k for extraction.
+
+    With ``evict_every > 1`` the resident table may hold up to
+    ``k + E*chunk`` keys between scheduled evictions; finalize runs one
+    (non-persisted) eviction round at the current step so the extracted
+    sample is a valid fixed-k sample.  Deterministic in the state, so
+    repeated finalize calls agree; no-op whenever the table is <= k."""
+    return VZ.evict_table(table, k=spec.k, l=l, salt=salt,
+                          max_evict=spec.evict_every * spec.chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _final_evict_multi(table, ls, salt, spec: SamplerSpec):
+    return jax.vmap(
+        lambda t, l: VZ.evict_table(t, k=spec.k, l=l, salt=salt,
+                                    max_evict=spec.evict_every * spec.chunk)
+    )(table, ls)
+
+
 def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
     """Extract the SampleResult; the state remains usable for more updates."""
     st = state.table
@@ -225,6 +255,8 @@ def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
     if overflow > 0:
         raise RuntimeError(
             f"fixed-tau capacity overflow ({overflow}); raise capacity")
+    if spec.mode == "fixed_k" and spec.evict_every > 1:
+        st = _final_evict(st, state.l, state.salt, spec)
     return VZ._to_result(st, l=float(state.l), kind=spec.kind, tau=float(st.tau))
 
 
@@ -233,13 +265,19 @@ def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
 # ---------------------------------------------------------------------------
 
 
-def init_multi_state(ls, *, k, chunk=2048, salt=0,
-                     host_id=None) -> tuple[SamplerState, SamplerSpec]:
+def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
+                     evict_every=1) -> tuple[SamplerState, SamplerSpec]:
     """One fixed-k continuous sketch per l, stacked on a leading axis, plus a
-    lossless per-lane bottom-(k+1) summary for exact cross-host merging."""
+    lossless per-lane bottom-(k+1) summary for exact cross-host merging.
+
+    ``evict_every=E`` opts into amortized eviction: capacity k + E*chunk,
+    eviction every E chunks (see SamplerSpec; E=1 is bit-compatible with
+    the one-shot samplers)."""
+    if evict_every < 1:
+        raise ValueError(f"evict_every must be >= 1, got {evict_every}")
     ls = np.asarray(ls, np.float32)
     L = len(ls)
-    capacity = k + chunk
+    capacity = k + evict_every * chunk
     table = VZ.TableState(
         keys=jnp.full((L, capacity), EMPTY, dtype=jnp.int32),
         counts=jnp.zeros((L, capacity), jnp.float32),
@@ -257,22 +295,27 @@ def init_multi_state(ls, *, k, chunk=2048, salt=0,
         bk_keys=jnp.full((L, k + 1), EMPTY, dtype=jnp.int32),
         bk_seeds=jnp.full((L, k + 1), jnp.inf, jnp.float32),
     )
-    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk, host_id=host_id)
+    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk,
+                              host_id=host_id, evict_every=evict_every)
 
 
 def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
+    """The single-sort multi-l chunk step.
+
+    Per chunk, the keys are sorted exactly ONCE (``chunk_order``); the shared
+    ``ChunkOrder`` feeds every consumer — all L per-lane continuous
+    aggregates, the L sorted-runs table merges, and the per-lane bottom-(k+1)
+    summary advance.  Eviction runs on the spec's cadence with a top_k
+    threshold selection.  Bit-identical per lane to the pre-single-sort path
+    (``_update_multi_reference_impl``) at evict_every=1.
+    """
     chunk = spec.chunk
     n = keys.shape[0]
     if n % chunk:
         raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
     kc = keys.reshape(n // chunk, chunk)
     wc = weights.reshape(n // chunk, chunk)
-
-    def lane_step(table, ck, cw, score, delta, entry, kb, l):
-        return VZ.fixed_k_step_scored(table, ck, cw, score, delta, entry, kb,
-                                      k=spec.k, l=l, salt=state.salt)
-
-    vstep = jax.vmap(lane_step, in_axes=(0, None, None, 0, 0, 0, 0, 0))
+    max_evict = spec.evict_every * chunk
 
     cap_bk = state.bk_keys.shape[1]
 
@@ -283,9 +326,67 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
         # one fused pass scores every l lane under its current threshold
         score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
                                                  state.salt)
+        # ... and one shared sort orders the chunk for every consumer below
+        order = chunk_order(ck)
+
+        def lane_merge(tab, sc, dl, en, kb_l):
+            # l is already baked into the per-lane capscore outputs; the
+            # merge itself is l-independent
+            agg = VZ.aggregate_continuous_scored(ck, cw, sc, dl, en, kb_l, order)
+            return VZ.fixed_k_merge(tab, agg)
+
+        table = jax.vmap(lane_merge)(table, score, delta, entry, kb)
+        table = _scheduled_evict(
+            table, spec,
+            lambda t: jax.vmap(
+                lambda tab, l: VZ.evict_table(tab, k=spec.k, l=l,
+                                              salt=state.salt,
+                                              max_evict=max_evict)
+            )(t, state.l))
+        # the same scores + the same chunk sort advance the lossless per-lane
+        # bottom-(k+1) summary (scores are tau-independent, so this is the
+        # exact pass-1 summary)
+        bk_keys, bk_seeds = VZ.pass1_step_multi(
+            (bk_keys, bk_seeds), ck, score, cap=cap_bk, order=order)
+        return (table, bk_keys, bk_seeds, pos + chunk), None
+
+    (table, bk_keys, bk_seeds, pos), _ = jax.lax.scan(
+        body, (state.table, state.bk_keys, state.bk_seeds, state.n_seen), (kc, wc))
+    return SamplerState(table, pos, state.l, state.salt, bk_keys, bk_seeds)
+
+
+def _update_multi_reference_impl(state: SamplerState, keys, weights,
+                                 spec: SamplerSpec) -> SamplerState:
+    """The pre-PR multi-l chunk step, verbatim: every lane re-sorts the chunk
+    inside its aggregate, re-sorts the whole table in its merge, and
+    full-sorts the eviction race; the summary advance sorts the chunk once
+    more.  L+1 chunk sorts + L table sorts per chunk.  Kept as the
+    bit-identity oracle (tests/test_ingest_order.py) and the baseline of
+    benchmarks/sampler_throughput.py — supports evict_every=1 only."""
+    if spec.evict_every != 1:
+        raise ValueError("reference path supports evict_every=1 only")
+    chunk = spec.chunk
+    n = keys.shape[0]
+    if n % chunk:
+        raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
+    kc = keys.reshape(n // chunk, chunk)
+    wc = weights.reshape(n // chunk, chunk)
+
+    def lane_step(table, ck, cw, score, delta, entry, kb, l):
+        return VZ.fixed_k_step_scored_ref(table, ck, cw, score, delta, entry, kb,
+                                          k=spec.k, l=l, salt=state.salt)
+
+    vstep = jax.vmap(lane_step, in_axes=(0, None, None, 0, 0, 0, 0, 0))
+
+    cap_bk = state.bk_keys.shape[1]
+
+    def body(carry, xs):
+        table, bk_keys, bk_seeds, pos = carry
+        ck, cw = xs
+        eids = spec.eids(pos)
+        score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
+                                                 state.salt)
         table = vstep(table, ck, cw, score, delta, entry, kb, state.l)
-        # the same scores advance the lossless per-lane bottom-(k+1) summary
-        # (scores are tau-independent, so this is the exact pass-1 summary)
         bk_keys, bk_seeds = VZ.pass1_step_multi(
             (bk_keys, bk_seeds), ck, score, cap=cap_bk)
         return (table, bk_keys, bk_seeds, pos + chunk), None
@@ -298,12 +399,23 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
 _update_multi_donated = functools.partial(jax.jit, static_argnames=("spec",),
                                           donate_argnums=(0,))(_update_multi_impl)
 _update_multi_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_multi_impl)
+_update_multi_ref_donated = functools.partial(
+    jax.jit, static_argnames=("spec",), donate_argnums=(0,))(_update_multi_reference_impl)
+_update_multi_ref_fresh = functools.partial(
+    jax.jit, static_argnames=("spec",))(_update_multi_reference_impl)
 
 
 def update_multi(state: SamplerState, keys, weights, spec: SamplerSpec, *,
-                 donate: bool = True) -> SamplerState:
-    """Advance every l-lane sketch over a chunk-aligned batch: one dispatch."""
-    fn = _update_multi_donated if donate else _update_multi_fresh
+                 donate: bool = True, reference: bool = False) -> SamplerState:
+    """Advance every l-lane sketch over a chunk-aligned batch: one dispatch.
+
+    ``reference=True`` routes through the pre-single-sort step (bit-identical
+    results at evict_every=1, strictly slower) — benchmarking/testing only.
+    """
+    if reference:
+        fn = _update_multi_ref_donated if donate else _update_multi_ref_fresh
+    else:
+        fn = _update_multi_donated if donate else _update_multi_fresh
     return fn(state, jnp.asarray(keys), jnp.asarray(weights), spec)
 
 
@@ -316,7 +428,10 @@ def finalize_multi(state: SamplerState, spec: SamplerSpec,
     configured grid so lookups like ``results[3.3]`` don't miss on f32
     rounding.
     """
-    tables = jax.device_get(state.table)
+    table = state.table
+    if spec.evict_every > 1:
+        table = _final_evict_multi(table, state.l, state.salt, spec)
+    tables = jax.device_get(table)
     if ls is None:
         ls = np.asarray(state.l)
     out = {}
@@ -453,9 +568,10 @@ class IncrementalSampler:
     """
 
     def __init__(self, l, *, k=None, tau=None, kind="continuous", chunk=2048,
-                 capacity=8192, salt=0, host_id=None):
+                 capacity=8192, salt=0, host_id=None, evict_every=1):
         self.state, self.spec = init_state(
-            l, k=k, tau=tau, kind=kind, chunk=chunk, capacity=capacity, salt=salt)
+            l, k=k, tau=tau, kind=kind, chunk=chunk, capacity=capacity, salt=salt,
+            evict_every=evict_every)
         if host_id is not None:
             self.spec = dataclasses.replace(self.spec, host_id=host_id)
         self._rem = _RemainderBuffer(chunk)
@@ -493,10 +609,11 @@ class MultiSampler:
     randomness never aliases across shards.
     """
 
-    def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None):
+    def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None, evict_every=1):
         self.ls = tuple(float(l) for l in ls)  # full-precision query keys
         self.state, self.spec = init_multi_state(
-            ls, k=k, chunk=chunk, salt=salt, host_id=host_id)
+            ls, k=k, chunk=chunk, salt=salt, host_id=host_id,
+            evict_every=evict_every)
         self._rem = _RemainderBuffer(chunk)
         self._n_real = 0  # real (non-padding) elements, incl. merged-in hosts
 
@@ -579,9 +696,26 @@ class MultiSampler:
         return d
 
     def load_state_dict(self, d: dict) -> None:
+        # re-canonicalize the table layout: blobs written before the
+        # single-sort ingest path stored eviction holes in place, while the
+        # sorted-runs merge requires ascending keys with EMPTY compacted last
+        # (a stable per-lane key sort is a no-op on current-format blobs)
+        blob_keys = np.asarray(d["keys"], np.int32)
+        if blob_keys.shape[-1] != self.state.capacity:
+            # capacity is k + evict_every*chunk: a blob written under a
+            # different evict_every would silently truncate merges (E too
+            # small) or overflow the top_k eviction window (E too large)
+            raise ValueError(
+                f"state blob table capacity {blob_keys.shape[-1]} != configured "
+                f"capacity {self.state.capacity} (k + evict_every*chunk) — "
+                "restore with the same (k, chunk, evict_every) the blob was "
+                "written with")
+        ord_ = np.argsort(blob_keys, axis=1, kind="stable")
+        tab = lambda name, dt: jnp.asarray(
+            np.take_along_axis(np.asarray(d[name], dt), ord_, axis=1))
         table = VZ.TableState(
-            keys=jnp.asarray(d["keys"]), counts=jnp.asarray(d["counts"]),
-            kb=jnp.asarray(d["kb"]), seed=jnp.asarray(d["seed"]),
+            keys=tab("keys", np.int32), counts=tab("counts", np.float32),
+            kb=tab("kb", np.float32), seed=tab("seed", np.float32),
             tau=jnp.asarray(d["tau"]),
             step=jnp.asarray(d["step"]), overflow=jnp.asarray(d["overflow"]),
         )

@@ -23,6 +23,8 @@ all shapes are static (chunk size / capacity are compile-time constants).
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import numpy as np
 
 import jax
@@ -31,6 +33,7 @@ import jax.numpy as jnp
 from . import hashing as H
 
 EMPTY = jnp.int32(2**31 - 1)
+_EMPTY_INT = int(EMPTY)
 
 # salt lane for HashBucket segments (disjoint from the sampler salt lanes in
 # core.samplers, which start at 0x01)
@@ -200,10 +203,107 @@ def as_segment(segment) -> Segment:
     return IdSet(arr)
 
 
+def normalize_keys(keys) -> np.ndarray:
+    """Validate and convert stream keys to the canonical int32 form.
+
+    Every ingestion surface — the stateful ``observe``/``reconcile`` AND the
+    one-shot samplers (``vectorized._prep``) — funnels through this one helper
+    so keys can never be *silently* wrapped by an ``np.asarray(keys, np.int32)``
+    cast: non-integer dtypes, values outside int32 range, and the reserved
+    padding id ``EMPTY`` (int32 max) all raise instead of corrupting the
+    per-key randomness.
+    """
+    arr = np.asarray(keys).reshape(-1)
+    if arr.dtype == np.int32:
+        out = arr
+    else:
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise TypeError(
+                f"stream keys must be integers, got dtype {arr.dtype} — "
+                "casting floats/objects would silently truncate key ids")
+        if arr.size and (arr.min() < -_EMPTY_INT - 1 or arr.max() > _EMPTY_INT):
+            bad = arr[(arr < -_EMPTY_INT - 1) | (arr > _EMPTY_INT)][0]
+            raise ValueError(
+                f"stream key {bad} outside int32 range — int32 is the key "
+                "domain of the sketches; remap ids before ingestion")
+        out = arr.astype(np.int32)
+    if out.size and out.max() == _EMPTY_INT:
+        raise ValueError(
+            f"stream key {_EMPTY_INT} is the reserved EMPTY padding id — "
+            "remap it before ingestion")
+    return out
+
+
 def sort_by_key(keys, *arrays):
     """Stable-sort ``keys`` ascending; apply the permutation to all arrays."""
     order = jnp.argsort(keys, stable=True)
     return keys[order], tuple(a[order] for a in arrays)
+
+
+class ChunkOrder(NamedTuple):
+    """The shared sort of one stream chunk: computed ONCE per chunk, consumed
+    by every per-lane reduction (aggregate, bottom-k summary, merge).
+
+    The key insight behind the single-sort ingest path: the permutation that
+    sorts a chunk by key depends only on the keys, never on the per-lane
+    payloads, so L lanes can share it.  ``ks = keys[perm]`` is ascending with
+    EMPTY (int32 max) last; ``seg`` are its segment ids; ``ukeys`` the unique
+    keys compacted to the front (ascending, EMPTY padded) — exactly what
+    ``sort_by_key`` + ``segment_ids`` + ``scatter_unique`` produce, shared.
+    """
+
+    ks: jax.Array     # [C] keys sorted ascending (stable; EMPTY last)
+    perm: jax.Array   # [C] permutation: ks == keys[perm]
+    seg: jax.Array    # [C] segment ids of ks (0..n_seg-1)
+    ukeys: jax.Array  # [C] unique keys, ascending, EMPTY padded
+
+
+def chunk_order(keys) -> ChunkOrder:
+    """Sort a chunk by key once; derive (permutation, segments, uniques)."""
+    perm = jnp.argsort(keys, stable=True)
+    ks = keys[perm]
+    seg, _ = segment_ids(ks)
+    ukeys, _ = scatter_unique(ks, seg, 0.0)
+    return ChunkOrder(ks=ks, perm=perm, seg=seg, ukeys=ukeys)
+
+
+def merge_sorted_runs(a, b):
+    """Positions of two sorted runs in their stable merged order.
+
+    ``a`` and ``b`` must each be sorted ascending.  Returns ``(pos_a, pos_b)``
+    — a permutation of ``0..len(a)+len(b)-1`` such that scattering ``a`` to
+    ``pos_a`` and ``b`` to ``pos_b`` yields exactly the array a stable sort of
+    ``concatenate([a, b])`` would produce (ties: all of ``a``'s entries before
+    ``b``'s, internal order preserved).  Cost is two ``searchsorted`` passes —
+    O((|a|+|b|) log) comparisons with tiny constants — instead of a full
+    O(N log N) sort, which is the point: the sampler table is already sorted,
+    so merging a C-sized chunk aggregate into it never re-sorts the table.
+    """
+    na, nb = a.shape[0], b.shape[0]
+    pos_a = jnp.arange(na) + jnp.searchsorted(b, a, side="left")
+    pos_b = jnp.arange(nb) + jnp.searchsorted(a, b, side="right")
+    return pos_a, pos_b
+
+
+def merge_sorted_runs_gather(a, b):
+    """Gather-form of ``merge_sorted_runs``: per merged slot, which run and
+    which index feeds it.
+
+    Returns ``(from_b, ia, ib)`` with merged[p] = b[ib[p]] if from_b[p] else
+    a[ia[p]] — the exact inverse of the scatter positions above, recovered
+    with one extra ``searchsorted`` over the (strictly increasing) insertion
+    positions of ``b``.  The point: applying a merge to many payload columns
+    costs one cheap gather per column, where the scatter form pays a scatter
+    per column — and XLA CPU executes gathers ~50x faster than scatters.
+    """
+    na, nb = a.shape[0], b.shape[0]
+    pos_b = jnp.arange(nb) + jnp.searchsorted(a, b, side="right")
+    p = jnp.arange(na + nb)
+    nb_before = jnp.searchsorted(pos_b, p, side="right")  # b slots at pos <= p
+    ib = jnp.clip(nb_before - 1, 0, nb - 1)
+    from_b = (nb_before > 0) & (pos_b[ib] == p)
+    ia = jnp.clip(p - nb_before, 0, na - 1)
+    return from_b, ia, ib
 
 
 def segment_ids(sorted_keys):
@@ -230,13 +330,26 @@ def scatter_unique(sorted_keys, seg, fill, values=None):
 
 
 def compact_valid(valid, *arrays, fills):
-    """Move entries with valid=True to the front (stable), padding the rest."""
-    order = jnp.argsort(~valid, stable=True)
+    """Move entries with valid=True to the front (stable), padding the rest.
+
+    Implemented as cumsum + searchsorted + gather: the p-th output slot reads
+    the first index whose inclusive valid-count reaches p+1 (slots past the
+    last valid entry take the fill).  O(n log n) comparisons but pure gathers
+    — no sort, and crucially no scatter (XLA CPU scatters are ~50x slower
+    than gathers, and this helper sits on the per-chunk hot path).
+    Bit-identical to the historical stable-argsort form, and
+    order-preserving: compacting an ascending array yields an ascending
+    array, which is what maintains the sorted-table invariant of
+    core.vectorized.
+    """
+    n = valid.shape[0]
+    cs = jnp.cumsum(valid)
+    src = jnp.clip(jnp.searchsorted(cs, jnp.arange(1, n + 1), side="left"),
+                   0, n - 1)
+    keep = jnp.arange(n) < cs[-1]
     out = []
     for a, fill in zip(arrays, fills):
-        b = a[order]
-        v = valid[order]
-        out.append(jnp.where(v, b, jnp.asarray(fill, dtype=b.dtype)))
+        out.append(jnp.where(keep, a[src], jnp.asarray(fill, dtype=a.dtype)))
     return tuple(out)
 
 

@@ -41,7 +41,18 @@ from .samplers import (
     SALT_SHARD,
     SampleResult,
 )
-from .segments import EMPTY, bottom_k_by, compact_valid, scatter_unique, segment_ids, sort_by_key
+from .segments import (
+    EMPTY,
+    ChunkOrder,
+    bottom_k_by,
+    chunk_order,
+    compact_valid,
+    merge_sorted_runs_gather,
+    normalize_keys,
+    scatter_unique,
+    segment_ids,
+    sort_by_key,
+)
 
 INF = jnp.float32(jnp.inf)
 
@@ -106,15 +117,60 @@ class ChunkAgg(NamedTuple):
     min_score: jax.Array  # [C] min element score (for seed/bottom-k schemes)
 
 
-def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem):
-    """Shared segment machinery: group a chunk by key and reduce.
+def _aggregate_ordered(order: ChunkOrder, weights, entry, at_entry_count,
+                       scores, kb_elem) -> ChunkAgg:
+    """Shared segment machinery on a precomputed chunk sort (``ChunkOrder``).
 
     ``entry``: per-element entry-event flag; ``at_entry_count``: count value
     contributed by the entry element itself (w - Delta for continuous, 1 for
     discrete); elements after the first entry contribute their full weight.
+    All per-element arrays arrive in *stream order*; the shared permutation
+    gathers them into key order (O(C) gathers — the sort itself was paid once
+    per chunk, not once per lane).  Bit-identical to sorting inline.
     """
+    C = order.ks.shape[0]
+    p = order.perm
+    ks, seg = order.ks, order.seg
+    ws, es, aec = weights[p], entry[p], at_entry_count[p]
+    sc, kbe = scores[p], kb_elem[p]
+    idx = jnp.arange(C)
+    entry_idx = jnp.where(es, idx, C)
+    first_entry = jax.ops.segment_min(entry_idx, seg, num_segments=C)
+    fe = first_entry[seg]
+    after = idx > fe
+    at = (idx == fe) & es
+    contrib_elem = jnp.where(after, ws, 0.0) + jnp.where(at, aec, 0.0)
+    live = ks != EMPTY
+    w_live = jnp.where(live, ws, 0.0)
+    contrib = jax.ops.segment_sum(jnp.where(live, contrib_elem, 0.0), seg, num_segments=C)
+    w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)
+    entered = jax.ops.segment_max(jnp.where(live, es, False).astype(jnp.int32), seg, num_segments=C) > 0
+    min_score = jax.ops.segment_min(jnp.where(live, sc, INF), seg, num_segments=C)
+    kb_min = jax.ops.segment_min(jnp.where(live, kbe, INF), seg, num_segments=C)
+    return ChunkAgg(
+        ukeys=order.ukeys,
+        w_total=w_total,
+        entered=entered,
+        contrib=contrib,
+        kb=kb_min,
+        min_score=min_score,
+    )
+
+
+def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem,
+               order: ChunkOrder | None = None):
+    """Group a chunk by key and reduce (sorts inline unless ``order`` given)."""
+    if order is None:
+        order = chunk_order(keys)
+    return _aggregate_ordered(order, weights, entry, at_entry_count, scores, kb_elem)
+
+
+def _aggregate_ref(keys, weights, entry, at_entry_count, scores, kb_elem):
+    """The pre-ChunkOrder aggregate, verbatim (inline ``sort_by_key`` of the
+    payload columns) — the bit-identity oracle for ``_aggregate_ordered``,
+    used only by the reference chunk step.  Not on any production path."""
     C = keys.shape[0]
-    ks, (ws, es, aec, sc, kbe, pos) = sort_by_key(
+    ks, (ws, es, aec, sc, kbe, _pos) = sort_by_key(
         keys, weights, entry, at_entry_count, scores, kb_elem, jnp.arange(C)
     )
     seg, _ = segment_ids(ks)
@@ -133,18 +189,13 @@ def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem):
     min_score = jax.ops.segment_min(jnp.where(live, sc, INF), seg, num_segments=C)
     kb_min = jax.ops.segment_min(jnp.where(live, kbe, INF), seg, num_segments=C)
     ukeys, _ = scatter_unique(ks, seg, 0.0)
-    return ChunkAgg(
-        ukeys=ukeys,
-        w_total=w_total,
-        entered=entered,
-        contrib=contrib,
-        kb=kb_min,
-        min_score=min_score,
-    )
+    return ChunkAgg(ukeys=ukeys, w_total=w_total, entered=entered,
+                    contrib=contrib, kb=kb_min, min_score=min_score)
 
 
-def aggregate_continuous(keys, weights, eids, tau, l, salt) -> ChunkAgg:
-    """Entry semantics of Algorithm 4 under the *current* threshold tau."""
+def _continuous_entry(keys, weights, eids, tau, l, salt):
+    """Per-element entry/at-entry-count/score/kb of Algorithm 4 under the
+    *current* threshold tau (shared by the fast and reference aggregates)."""
     u = elem_uniform(eids, salt)
     rate = jnp.maximum(jnp.float32(1.0 / l), tau)
     delta = -jnp.log1p(-u) / rate  # rate=inf (tau=inf) -> delta=0
@@ -154,26 +205,51 @@ def aggregate_continuous(keys, weights, eids, tau, l, salt) -> ChunkAgg:
     v = -jnp.log1p(-u) / weights
     scores = jnp.where(v <= 1.0 / l, kb, v)
     scores = jnp.where(keys == EMPTY, INF, scores)
-    return _aggregate(keys, weights, entry, weights - delta, scores, kb)
+    return entry, weights - delta, scores, kb
 
 
-def aggregate_discrete(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
+def aggregate_continuous(keys, weights, eids, tau, l, salt,
+                         order: ChunkOrder | None = None) -> ChunkAgg:
+    """Entry semantics of Algorithm 4 under the *current* threshold tau."""
+    entry, aec, scores, kb = _continuous_entry(keys, weights, eids, tau, l, salt)
+    return _aggregate(keys, weights, entry, aec, scores, kb, order)
+
+
+def aggregate_continuous_ref(keys, weights, eids, tau, l, salt) -> ChunkAgg:
+    """``aggregate_continuous`` through the verbatim pre-ChunkOrder reducer
+    (bit-identity oracle; tests only)."""
+    entry, aec, scores, kb = _continuous_entry(keys, weights, eids, tau, l, salt)
+    return _aggregate_ref(keys, weights, entry, aec, scores, kb)
+
+
+def aggregate_discrete(keys, weights, eids, tau, kind, l, salt,
+                       order: ChunkOrder | None = None) -> ChunkAgg:
     """Entry semantics of Algorithm 2: first element whose score < tau."""
     scores = element_scores(kind, keys, eids, weights, l, salt)
     entry = (scores < tau) & (keys != EMPTY)
-    return _aggregate(keys, weights, entry, weights, scores, scores)
+    return _aggregate(keys, weights, entry, weights, scores, scores, order)
 
 
-def aggregate_continuous_scored(keys, weights, score, delta, entry, kb) -> ChunkAgg:
+def aggregate_discrete_ref(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
+    """``aggregate_discrete`` through the verbatim pre-ChunkOrder reducer
+    (bit-identity oracle; tests only)."""
+    scores = element_scores(kind, keys, eids, weights, l, salt)
+    entry = (scores < tau) & (keys != EMPTY)
+    return _aggregate_ref(keys, weights, entry, weights, scores, scores)
+
+
+def aggregate_continuous_scored(keys, weights, score, delta, entry, kb,
+                                order: ChunkOrder | None = None) -> ChunkAgg:
     """``aggregate_continuous`` on precomputed per-element scoring outputs.
 
     ``score/delta/entry`` are exactly what the fused capscore kernel emits
     (kernels/capscore), so the multi-l update can score every l lane in one
-    device pass and feed each lane through the same segment machinery.
+    device pass and feed each lane through the same segment machinery.  Pass
+    the chunk's shared ``order`` so the L lanes reuse one key sort.
     """
     entry = entry.astype(bool) & (keys != EMPTY)
     score = jnp.where(keys == EMPTY, INF, score)
-    return _aggregate(keys, weights, entry, weights - delta, score, kb)
+    return _aggregate(keys, weights, entry, weights - delta, score, kb, order)
 
 
 # ---------------------------------------------------------------------------
@@ -193,28 +269,15 @@ class TableState(NamedTuple):
     overflow: jax.Array  # scalar int32 (fixed-tau capacity overflow count)
 
 
-def _merge_table(state: TableState, agg: ChunkAgg):
-    """Combine the cached table with chunk aggregates.
+def _merge_reduce(ks, st, cn, wt, en, ct, kb, sd):
+    """Shared tail of both table merges: segment-reduce the key-ordered union
+    columns and compact the combined entries to the front.
 
     cached key:   count += chunk total weight (Alg 2/4/5 cached branch)
     new key:      insert iff an entry event happened, count = contrib
     seed:         running min element score (both branches)
     """
-    cap = state.keys.shape[0]
-    C = agg.ukeys.shape[0]
-    N = cap + C
-    keys2 = jnp.concatenate([state.keys, agg.ukeys])
-    is_state = jnp.concatenate([state.keys != EMPTY, jnp.zeros((C,), bool)])
-    cnt2 = jnp.concatenate([state.counts, jnp.zeros((C,), state.counts.dtype)])
-    wtot2 = jnp.concatenate([jnp.zeros((cap,)), agg.w_total])
-    ent2 = jnp.concatenate([jnp.zeros((cap,), bool), agg.entered])
-    ctr2 = jnp.concatenate([jnp.zeros((cap,)), agg.contrib])
-    kb2 = jnp.concatenate([state.kb, agg.kb])
-    sd2 = jnp.concatenate([state.seed, agg.min_score])
-
-    ks, (st, cn, wt, en, ct, kb, sd) = sort_by_key(
-        keys2, is_state, cnt2, wtot2, ent2, ctr2, kb2, sd2
-    )
+    N = ks.shape[0]
     seg, _ = segment_ids(ks)
     present = jax.ops.segment_max(st.astype(jnp.int32), seg, num_segments=N) > 0
     s_count = jax.ops.segment_sum(cn, seg, num_segments=N)
@@ -233,6 +296,89 @@ def _merge_table(state: TableState, agg: ChunkAgg):
     )
     n_valid = jnp.sum(valid.astype(jnp.int32))
     return keys_c, counts_c, kb_c, seed_c, n_valid
+
+
+def _merge_table(state: TableState, agg: ChunkAgg):
+    """Combine the cached table with chunk aggregates (reference form).
+
+    Concatenates table + aggregate and re-sorts all ``cap + C`` entries per
+    call.  Makes no assumption about the table's key order, so it remains the
+    bit-identity oracle for ``_merge_table_sorted`` (tests/test_ingest_order)
+    and the baseline of the ingest benchmark; the hot paths use the
+    sorted-runs form below.
+    """
+    cap = state.keys.shape[0]
+    C = agg.ukeys.shape[0]
+    keys2 = jnp.concatenate([state.keys, agg.ukeys])
+    is_state = jnp.concatenate([state.keys != EMPTY, jnp.zeros((C,), bool)])
+    cnt2 = jnp.concatenate([state.counts, jnp.zeros((C,), state.counts.dtype)])
+    wtot2 = jnp.concatenate([jnp.zeros((cap,)), agg.w_total])
+    ent2 = jnp.concatenate([jnp.zeros((cap,), bool), agg.entered])
+    ctr2 = jnp.concatenate([jnp.zeros((cap,)), agg.contrib])
+    kb2 = jnp.concatenate([state.kb, agg.kb])
+    sd2 = jnp.concatenate([state.seed, agg.min_score])
+
+    ks, (st, cn, wt, en, ct, kb, sd) = sort_by_key(
+        keys2, is_state, cnt2, wtot2, ent2, ctr2, kb2, sd2
+    )
+    return _merge_reduce(ks, st, cn, wt, en, ct, kb, sd)
+
+
+def _merge_table_sorted(state: TableState, agg: ChunkAgg):
+    """``_merge_table`` as a pairwise two-sorted-runs merge — no sort, no
+    segment ops.
+
+    Requires the **sorted-table invariant**: ``state.keys`` ascending, unique,
+    with all EMPTY slots compacted to the back (established at init, preserved
+    by every step function below), and ``agg.ukeys`` ascending unique
+    EMPTY-padded (which ``scatter_unique`` guarantees by construction).
+
+    Because BOTH runs hold unique keys, every "segment" of the merged union
+    has at most two members — one table entry, one chunk aggregate — so the
+    general segment-reduce machinery of ``_merge_reduce`` collapses to a
+    gather-and-combine: match the runs against each other with two
+    ``searchsorted`` rank passes, add/min the matched payloads directly,
+    compact the genuinely new keys, and scatter both runs into their merged
+    positions.  O(N) gathers/scatters + O(C log cap) binary searches per lane
+    per chunk, versus the reference's O(N log N) sort + seven scatter-based
+    segment reductions.  Bit-identical to ``_merge_table`` (the reductions it
+    replaces touch at most two values per key: float adds against 0.0 and
+    mins against inf are exact).
+    """
+    cap = state.keys.shape[0]
+    C = agg.ukeys.shape[0]
+    inf = jnp.float32(jnp.inf)
+    a_keys, b_keys = state.keys, agg.ukeys
+    a_live = a_keys != EMPTY
+    b_live = b_keys != EMPTY
+
+    # table entries matched against the chunk aggregate (cached-key branch:
+    # count += chunk total weight, kb/seed min with the chunk's)
+    loc_ab = jnp.clip(jnp.searchsorted(b_keys, a_keys), 0, C - 1)
+    hit_a = (b_keys[loc_ab] == a_keys) & a_live
+    counts_a = state.counts + jnp.where(hit_a, agg.w_total[loc_ab], 0.0)
+    kb_a = jnp.minimum(state.kb, jnp.where(hit_a, agg.kb[loc_ab], inf))
+    sd_a = jnp.minimum(state.seed, jnp.where(hit_a, agg.min_score[loc_ab], inf))
+
+    # chunk keys not in the table: inserted iff an entry event happened
+    loc_ba = jnp.clip(jnp.searchsorted(a_keys, b_keys), 0, cap - 1)
+    in_table = a_keys[loc_ba] == b_keys
+    new = b_live & ~in_table & agg.entered
+    newk, newcnt, newkb, newsd = compact_valid(
+        new, b_keys, agg.contrib, agg.kb, agg.min_score,
+        fills=(EMPTY, 0.0, inf, inf))
+
+    # interleave the (still sorted) table run with the compacted new keys —
+    # gather form: one searchsorted, then a cheap gather per payload column
+    from_b, ia, ib = merge_sorted_runs_gather(a_keys, newk)
+    pick = lambda av, bv: jnp.where(from_b, bv[ib], av[ia])
+    keys_c = pick(a_keys, newk)
+    counts_c = pick(counts_a, newcnt)
+    kb_c = pick(kb_a, newkb)
+    sd_c = pick(sd_a, newsd)
+    n_valid = (jnp.sum(a_live.astype(jnp.int32))
+               + jnp.sum(new.astype(jnp.int32)))
+    return keys_c, counts_c, kb_c, sd_c, n_valid
 
 
 # ---------------------------------------------------------------------------
@@ -254,41 +400,95 @@ def init_table(capacity: int, tau=jnp.inf) -> TableState:
     )
 
 
-def fixed_tau_step(state: TableState, keys, weights, eids, l, salt, *, kind) -> TableState:
+def fixed_tau_step(state: TableState, keys, weights, eids, l, salt, *, kind,
+                   order: ChunkOrder | None = None) -> TableState:
     """Advance a fixed-threshold sampler (Alg 2/4) by one chunk of elements."""
     capacity = state.keys.shape[0]
+    if order is None:
+        order = chunk_order(keys)
     if kind == "continuous":
-        agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt)
+        agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt, order)
     else:
-        agg = aggregate_discrete(keys, weights, eids, state.tau, kind, l, salt)
-    keys_c, counts_c, kb_c, seed_c, n_valid = _merge_table(state, agg)
+        agg = aggregate_discrete(keys, weights, eids, state.tau, kind, l, salt, order)
+    keys_c, counts_c, kb_c, seed_c, n_valid = _merge_table_sorted(state, agg)
     over = state.overflow + jnp.maximum(n_valid - capacity, 0)
     return TableState(keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
                       seed_c[:capacity], state.tau, state.step + 1, over)
 
 
-def fixed_k_step(state: TableState, keys, weights, eids, l, salt, *, k) -> TableState:
+def fixed_k_merge(state: TableState, agg: ChunkAgg) -> TableState:
+    """Fold a chunk aggregate into a fixed-k table WITHOUT evicting.
+
+    Increments the eviction-round/step counter; the caller is responsible for
+    running ``evict_table`` before the table's capacity can overflow (the
+    incremental spec sizes capacity as ``k + evict_every * chunk`` for exactly
+    this reason).  Preserves the sorted-table invariant.
+    """
+    capacity = state.keys.shape[0]
+    keys_c, counts_c, kb_c, seed_c, _ = _merge_table_sorted(state, agg)
+    return TableState(keys_c[:capacity], counts_c[:capacity], kb_c[:capacity],
+                      seed_c[:capacity], state.tau, state.step + 1, state.overflow)
+
+
+def evict_table(table: TableState, *, k, l, salt, max_evict=None) -> TableState:
+    """Batched eviction of a merged table back down to <= k valid keys, then
+    re-compaction so the sorted-table invariant survives the EMPTY holes the
+    eviction punches.  ``max_evict`` bounds the eviction count (see
+    ``_evict_to_k``); the round number is the table's step counter."""
+    keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k(
+        table.keys, table.counts, table.kb, table.seed, table.tau, k, l, salt,
+        table.step, max_evict=max_evict)
+    keys_c, counts_c, kb_c, seed_c = compact_valid(
+        keys_e != EMPTY, keys_e, counts_e, kb_e, seed_e,
+        fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
+    )
+    return TableState(keys_c, counts_c, kb_c, seed_c, tau_e, table.step,
+                      table.overflow)
+
+
+def fixed_k_step(state: TableState, keys, weights, eids, l, salt, *, k,
+                 order: ChunkOrder | None = None) -> TableState:
     """Advance a fixed-k continuous sampler (Alg 5) by one chunk: aggregate
-    under the current threshold, merge, batch-evict back down to <= k."""
-    agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt)
-    return _fixed_k_merge_evict(state, agg, k, l, salt)
+    under the current threshold, merge, batch-evict back down to <= k.
+
+    Precondition (holds by construction inside the scan loops): the incoming
+    table carries <= k valid keys, so at most ``chunk`` keys can be evicted.
+    """
+    if order is None:
+        order = chunk_order(keys)
+    agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt, order)
+    merged = fixed_k_merge(state, agg)
+    return evict_table(merged, k=k, l=l, salt=salt, max_evict=keys.shape[0])
 
 
 def fixed_k_step_scored(state: TableState, keys, weights, score, delta, entry, kb,
-                        *, k, l, salt) -> TableState:
+                        *, k, l, salt, order: ChunkOrder | None = None) -> TableState:
     """``fixed_k_step`` on precomputed capscore outputs (multi-l fused path)."""
-    agg = aggregate_continuous_scored(keys, weights, score, delta, entry, kb)
-    return _fixed_k_merge_evict(state, agg, k, l, salt)
+    if order is None:
+        order = chunk_order(keys)
+    agg = aggregate_continuous_scored(keys, weights, score, delta, entry, kb, order)
+    merged = fixed_k_merge(state, agg)
+    return evict_table(merged, k=k, l=l, salt=salt, max_evict=keys.shape[0])
 
 
-def _fixed_k_merge_evict(state: TableState, agg: ChunkAgg, k, l, salt) -> TableState:
+def fixed_k_step_scored_ref(state: TableState, keys, weights, score, delta,
+                            entry, kb, *, k, l, salt) -> TableState:
+    """The pre-single-sort chunk step, kept verbatim as the bit-identity
+    oracle: per-lane inline key sort (``_aggregate_ref``), concat-and-re-sort
+    table merge, and a full descending sort in the eviction.  Used by
+    tests/test_ingest_order and the `reference` path of the ingest benchmark
+    — not by production."""
     capacity = state.keys.shape[0]
+    e = entry.astype(bool) & (keys != EMPTY)
+    s = jnp.where(keys == EMPTY, INF, score)
+    agg = _aggregate_ref(keys, weights, e, weights - delta, s, kb)
     keys_c, counts_c, kb_c, seed_c, _ = _merge_table(state, agg)
-    keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k(
+    keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k_ref(
         keys_c[:capacity], counts_c[:capacity], kb_c[:capacity], seed_c[:capacity],
         state.tau, k, l, salt, state.step + 1,
     )
-    return TableState(keys_e, counts_e, kb_e, seed_e, tau_e, state.step + 1, state.overflow)
+    return TableState(keys_e, counts_e, kb_e, seed_e, tau_e, state.step + 1,
+                      state.overflow)
 
 
 def chunk_bottomk_summary(keys, eids, weights, l, salt, *, kind):
@@ -328,30 +528,30 @@ def pass1_step(carry, keys, weights, eids, l, salt, *, kind, cap):
     return merge_bottomk_summary(skeys, sseeds, ukeys, mins, cap)
 
 
-def chunk_bottomk_summary_scored(keys, scores):
+def chunk_bottomk_summary_scored(keys, scores, order: ChunkOrder | None = None):
     """Per-lane (unique key, min element score) chunk summaries from
     precomputed multi-lane scores [L, C] (the fused capscore pass-1 path).
 
-    One sort of the chunk by key is shared by all lanes; the per-lane work
-    is a single segment_min.  Returns (ukeys [C], mins [L, C]).
+    One sort of the chunk by key is shared by all lanes (pass the chunk's
+    ``ChunkOrder`` to share it with the sketch advance too); the per-lane
+    work is a single segment_min.  Returns (ukeys [C], mins [L, C]).
     """
     C = keys.shape[0]
-    ks, (pos,) = sort_by_key(keys, jnp.arange(C))
-    seg, _ = segment_ids(ks)
-    live = ks != EMPTY
+    if order is None:
+        order = chunk_order(keys)
+    live = order.ks != EMPTY
     mins = jax.vmap(
-        lambda s: jax.ops.segment_min(jnp.where(live, s[pos], INF), seg,
-                                      num_segments=C)
+        lambda s: jax.ops.segment_min(jnp.where(live, s[order.perm], INF),
+                                      order.seg, num_segments=C)
     )(scores)
-    ukeys, _ = scatter_unique(ks, seg, 0.0)
-    return ukeys, jnp.where(ukeys != EMPTY, mins, INF)
+    return order.ukeys, jnp.where(order.ukeys != EMPTY, mins, INF)
 
 
-def pass1_step_multi(carry, keys, scores, *, cap):
+def pass1_step_multi(carry, keys, scores, *, cap, order: ChunkOrder | None = None):
     """Advance stacked per-lane bottom-cap summaries ([L, cap] keys/seeds) by
     one chunk whose multi-lane scores were already computed (capscore_multi)."""
     skeys, sseeds = carry
-    ukeys, mins = chunk_bottomk_summary_scored(keys, scores)
+    ukeys, mins = chunk_bottomk_summary_scored(keys, scores, order)
     return jax.vmap(
         lambda sk, ss, mn: merge_bottomk_summary(sk, ss, ukeys, mn, cap)
     )(skeys, sseeds, mins)
@@ -395,12 +595,10 @@ def sample_fixed_tau(keys, weights=None, *, tau, l, kind="continuous", salt=0,
 # ---------------------------------------------------------------------------
 
 
-def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
-    """Batched eviction (§5.2): tau* = delta-th largest z; drop z >= tau*."""
+def _evict_z(state_keys, counts, kb, tau, l, salt, round_no):
+    """Per-key eviction race scores z (§5.2) + the pieces the survivor-count
+    adjustment needs.  Shared by the top_k and reference eviction forms."""
     valid = state_keys != EMPTY
-    n_valid = jnp.sum(valid.astype(jnp.int32))
-    delta = jnp.maximum(n_valid - k, 0)
-
     ux = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_U),
                                     round_no.astype(jnp.uint32), jnp.uint32(salt)))
     rx = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_R),
@@ -417,9 +615,12 @@ def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
     z_lo = kb                                  # tau*l <= 1 regime (distinct-like)
     z = jnp.where(tau * l > 1.0, z_hi, z_lo)
     z = jnp.where(valid, z, -INF)
+    return valid, z, entry_thresh, ex, inv_l
 
-    z_desc = -jnp.sort(-z)
-    tau_star = jnp.where(delta > 0, z_desc[jnp.maximum(delta - 1, 0)], tau)
+
+def _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
+                 valid, z, entry_thresh, ex, inv_l):
+    """Apply an eviction threshold tau*: drop z >= tau*, adjust survivors."""
     evict = valid & (z >= tau_star) & (delta > 0)
 
     # survivor count adjustment (tau*l>1 regime only; see samplers.py notes)
@@ -434,6 +635,44 @@ def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
     seed_o = jnp.where(evict, INF, seed)
     tau_o = jnp.where(delta > 0, tau_star, tau)
     return keys_o, counts_o, kb_o, seed_o, tau_o
+
+
+def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no, *,
+                max_evict: int | None = None):
+    """Batched eviction (§5.2): tau* = delta-th largest z; drop z >= tau*.
+
+    The threshold is selected with ``jax.lax.top_k`` over the ``max_evict``
+    largest z instead of a full descending sort of the capacity — valid
+    whenever the caller can bound delta = n_valid - k (the chunk steps pass
+    the chunk size: a table that was <= k valid gains at most ``chunk`` keys
+    per merge).  ``max_evict=None`` keeps the full selection (the cross-host
+    merge path, where no tighter bound holds).  Bit-identical to the full
+    sort: the top-``max_evict`` prefix of sorted-descending z is what top_k
+    returns, and only indices < delta <= max_evict are ever read.
+    """
+    n = state_keys.shape[0]
+    valid, z, entry_thresh, ex, inv_l = _evict_z(
+        state_keys, counts, kb, tau, l, salt, round_no)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    delta = jnp.maximum(n_valid - k, 0)
+    top = n if max_evict is None else min(int(max_evict), n)
+    z_top = jax.lax.top_k(z, top)[0]
+    tau_star = jnp.where(delta > 0, z_top[jnp.maximum(delta - 1, 0)], tau)
+    return _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
+                        valid, z, entry_thresh, ex, inv_l)
+
+
+def _evict_to_k_ref(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
+    """Reference eviction: full descending sort for tau* (the pre-top_k form,
+    kept as the bit-identity oracle and benchmark baseline)."""
+    valid, z, entry_thresh, ex, inv_l = _evict_z(
+        state_keys, counts, kb, tau, l, salt, round_no)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    delta = jnp.maximum(n_valid - k, 0)
+    z_desc = -jnp.sort(-z)
+    tau_star = jnp.where(delta > 0, z_desc[jnp.maximum(delta - 1, 0)], tau)
+    return _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
+                        valid, z, entry_thresh, ex, inv_l)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -533,7 +772,10 @@ def sample_two_pass(keys, weights=None, *, k, l, kind="continuous", salt=0, chun
 
 
 def _prep(keys, weights, chunk):
-    keys = np.asarray(keys, dtype=np.int32)
+    # same validation surface as the streaming observe()/reconcile() path:
+    # bad dtypes / out-of-int32 ids / the reserved EMPTY id raise instead of
+    # silently wrapping into another key's randomness
+    keys = normalize_keys(keys)
     n = len(keys)
     if weights is None:
         weights = np.ones(n, dtype=np.float32)

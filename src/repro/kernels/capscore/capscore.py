@@ -18,6 +18,7 @@ blocks (float32 native TPU tile); the grid walks row-blocks.  Scalars
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,25 @@ from ...core.samplers import SALT_ELEM, SALT_KEYBASE
 
 BLOCK_ROWS = 8
 LANES = 128
+
+# env override for the interpret-mode default (CI / debugging): "1"/"true"
+# forces interpret even on TPU, "0"/"false" forces the compiled Mosaic path
+_INTERPRET_ENV = "REPRO_CAPSCORE_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default, derived from the detected backend.
+
+    False on a real TPU (the kernel compiles through Mosaic and actually
+    runs fused), True everywhere else (interpret mode is the only way the
+    TPU kernel executes on CPU/GPU — correctness checking, not speed).
+    ``REPRO_CAPSCORE_INTERPRET=0/1`` overrides either way; the value is read
+    at trace time, so set it before the first capscore call.
+    """
+    env = os.environ.get(_INTERPRET_ENV)
+    if env is not None and env.strip():  # empty string == unset
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
 
 import numpy as np
 
@@ -93,16 +113,20 @@ def _capscore_kernel(scalar_ref, keys_ref, eids_ref, w_ref, score_ref, delta_ref
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool = True):
+def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool | None = None):
     """Fused scoring over a stream chunk.
 
     Args:
       keys, eids: int32 [N] with N % 1024 == 0 (use ops.capscore for padding).
       weights: float32 [N].
       l, tau, salt: scalars (traced ok).
+      interpret: None (default) resolves via ``default_interpret()`` —
+        compiled on TPU, interpret elsewhere, env-overridable.
     Returns:
       (score f32[N], delta f32[N], entry int32[N]).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = keys.shape[0]
     assert n % (BLOCK_ROWS * LANES) == 0, n
     rows = n // LANES
@@ -194,7 +218,7 @@ def _make_capscore_multi_kernel(n_l: int):
 
 @functools.partial(jax.jit, static_argnames=("n_l", "interpret"))
 def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """Fused multi-l scoring over a stream chunk.
 
     Args:
@@ -202,10 +226,13 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
       weights: float32 [N].
       ls, taus: float32 [n_l] per-lane cap parameter / current threshold.
       salt: uint32 scalar shared by all lanes.
+      interpret: None (default) resolves via ``default_interpret()``.
     Returns:
       (score f32[n_l, N], delta f32[n_l, N], entry int32[n_l, N],
        kb f32[n_l, N]) — lane j scored under (ls[j], taus[j]).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = keys.shape[0]
     assert n % (BLOCK_ROWS * LANES) == 0, n
     rows = n // LANES

@@ -5,7 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .capscore import BLOCK_ROWS, LANES, capscore as _kernel, capscore_multi as _kernel_multi
+from .capscore import (
+    BLOCK_ROWS,
+    LANES,
+    capscore as _kernel,
+    capscore_multi as _kernel_multi,
+    default_interpret,
+)
 from .ref import capscore_multi_ref, capscore_ref
 
 _TILE = BLOCK_ROWS * LANES
@@ -31,7 +37,8 @@ def capscore(keys, eids, weights, l, tau, salt, *, backend: str | None = None):
         keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
         eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
         weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
-    s, d, e = _kernel(keys, eids, weights, l, tau, salt, interpret=not _on_tpu())
+    s, d, e = _kernel(keys, eids, weights, l, tau, salt,
+                      interpret=default_interpret())
     if pad:
         s, d, e = s[:n], d[:n], e[:n]
     return s, d, e
@@ -55,7 +62,7 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, backend: str | None =
         eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
         weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
     s, d, e, kb = _kernel_multi(keys, eids, weights, ls, taus, salt,
-                                n_l=int(n_l), interpret=not _on_tpu())
+                                n_l=int(n_l), interpret=default_interpret())
     if pad:
         s, d, e, kb = s[:, :n], d[:, :n], e[:, :n], kb[:, :n]
     return s, d, e, kb

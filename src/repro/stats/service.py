@@ -81,6 +81,14 @@ class StatsConfig:
     chunk: int = 2048
     salt: int = 0x5EED
     host_id: int | None = None         # REQUIRED (distinct) for exact merges
+    # eviction amortization period E (DESIGN.md §8): capacity grows to
+    # k + E*chunk and the sketches evict every E chunks.  E=1 (default) is
+    # bit-compatible with the one-shot samplers; E>1 trades that per-run
+    # identity (NOT correctness — the count law and unbiasedness hold, see
+    # tests/test_ingest_order.py) for skipping eviction work on E-1 of every
+    # E chunks.  The lossless bottom-(k+1) summaries and the exact two-pass
+    # mode are unaffected by E.
+    evict_every: int = 1
 
 
 @dataclasses.dataclass
@@ -107,6 +115,7 @@ class StreamStatsService:
         self._sampler = incremental.MultiSampler(
             tuple(float(l) for l in config.ls), k=config.k,
             chunk=config.chunk, salt=config.salt, host_id=config.host_id,
+            evict_every=config.evict_every,
         )
         self._results: dict[float, SampleResult] | None = None
         self._engines: dict[bool, QueryEngine] = {}  # query plane, per path
@@ -300,10 +309,13 @@ class StreamStatsService:
         if (tuple(other.config.ls) != tuple(self.config.ls)
                 or other.config.k != self.config.k
                 or other.config.salt != self.config.salt
-                or other.config.chunk != self.config.chunk):
+                or other.config.chunk != self.config.chunk
+                or other.config.evict_every != self.config.evict_every):
             # salt especially: kb/seed/tau from different hash functions
-            # would union into a silently biased sketch
-            raise ValueError("merge requires identical (k, ls, chunk, salt) configs")
+            # would union into a silently biased sketch; evict_every because
+            # the lane-wise table merge requires equal capacities
+            raise ValueError(
+                "merge requires identical (k, ls, chunk, salt, evict_every) configs")
         if mode not in ("exact", "approx"):
             raise ValueError(f"unknown merge mode {mode!r}")
         if mode == "exact":

@@ -1,0 +1,389 @@
+"""Single-sort ingest restructure (DESIGN.md §8): bit-identity + eviction law.
+
+Contracts under test:
+
+* ``chunk_order`` / ``merge_sorted_runs`` / the cumsum ``compact_valid``
+  reproduce the historical sort-based forms bit-for-bit;
+* the top_k eviction threshold equals the full-descending-sort form;
+* the restructured chunk steps (shared ChunkOrder + sorted-runs table merge
+  + top_k evict) are bit-identical to the pre-restructure reference path
+  across kinds, chunk sizes, lane counts, and the tau=inf edge;
+* the sorted-table invariant holds after every step;
+* ``evict_every > 1`` (amortized lazy eviction) keeps the sample a valid
+  fixed-k SH_l sample: size <= k, Thm 5.2 count law (PIT + KS), unbiased
+  cap estimates (Monte Carlo);
+* the one-shot samplers validate keys through ``normalize_keys``;
+* the capscore interpret default derives from the backend with env override.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as EST
+from repro.core import freqfns as F
+from repro.core import incremental as I
+from repro.core import vectorized as V
+from repro.kernels.capscore.ops import capscore_multi
+from repro.core.segments import (
+    EMPTY,
+    chunk_order,
+    compact_valid,
+    merge_sorted_runs,
+    segment_ids,
+    sort_by_key,
+)
+
+
+def _stream(n=16000, n_keys=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(1.4, size=n) % n_keys).astype(np.int64)
+    w = (rng.exponential(1.0, n) + 0.1).astype(np.float32)
+    return keys, w
+
+
+# ---------------------------------------------------------------------------
+# primitives: shared order, sorted-runs merge, sort-free compaction
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_order_matches_sort_by_key():
+    rng = np.random.default_rng(1)
+    for n, n_keys in [(64, 7), (256, 300), (1024, 50)]:
+        keys = rng.integers(0, n_keys, n).astype(np.int32)
+        keys[rng.uniform(size=n) < 0.2] = int(EMPTY)  # padding interspersed
+        keys = jnp.asarray(keys)
+        o = chunk_order(keys)
+        ks_ref, (perm_ref,) = sort_by_key(keys, jnp.arange(n))
+        seg_ref, _ = segment_ids(ks_ref)
+        np.testing.assert_array_equal(np.asarray(o.ks), np.asarray(ks_ref))
+        np.testing.assert_array_equal(np.asarray(o.perm), np.asarray(perm_ref))
+        np.testing.assert_array_equal(np.asarray(o.seg), np.asarray(seg_ref))
+        # ukeys: ascending uniques compacted to the front, EMPTY padded
+        uk = np.asarray(o.ukeys)
+        expect = np.unique(np.asarray(keys))
+        np.testing.assert_array_equal(uk[: len(expect)], expect)
+        assert (uk[len(expect):] == int(EMPTY)).all()
+
+
+def test_merge_sorted_runs_matches_stable_concat_sort():
+    rng = np.random.default_rng(2)
+    for na, nb in [(16, 16), (128, 32), (5, 200)]:
+        a = np.sort(rng.integers(0, 60, na)).astype(np.int32)
+        b = np.sort(rng.integers(0, 60, nb)).astype(np.int32)
+        a[-na // 4 or -1:] = int(EMPTY)  # EMPTY tails like real tables
+        b[-nb // 4 or -1:] = int(EMPTY)
+        pos_a, pos_b = merge_sorted_runs(jnp.asarray(a), jnp.asarray(b))
+        merged = np.zeros(na + nb, np.int32)
+        merged[np.asarray(pos_a)] = a
+        merged[np.asarray(pos_b)] = b
+        concat = np.concatenate([a, b])
+        order = np.argsort(concat, kind="stable")
+        np.testing.assert_array_equal(merged, concat[order])
+        # positions form a permutation, and ties keep run-a entries first
+        assert sorted(np.concatenate([np.asarray(pos_a), np.asarray(pos_b)]).tolist()) \
+            == list(range(na + nb))
+
+
+def test_compact_valid_matches_stable_argsort_reference():
+    rng = np.random.default_rng(3)
+    for n in (8, 100, 257):
+        valid = jnp.asarray(rng.uniform(size=n) < 0.6)
+        vals = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+        fvals = jnp.asarray(rng.normal(size=n), jnp.float32)
+        got_i, got_f = compact_valid(valid, vals, fvals,
+                                     fills=(EMPTY, jnp.float32(jnp.inf)))
+        # historical form: stable argsort on ~valid, then fill the tail
+        order = np.argsort(~np.asarray(valid), kind="stable")
+        v = np.asarray(valid)[order]
+        ref_i = np.where(v, np.asarray(vals)[order], int(EMPTY))
+        ref_f = np.where(v, np.asarray(fvals)[order], np.inf)
+        np.testing.assert_array_equal(np.asarray(got_i), ref_i)
+        np.testing.assert_array_equal(np.asarray(got_f), ref_f)
+
+
+def test_evict_topk_matches_full_sort():
+    """tau* from lax.top_k == tau* from the full descending sort, and the
+    whole evicted table agrees bitwise (max_evict both bounded and None)."""
+    rng = np.random.default_rng(4)
+    cap, k = 256, 64
+    for trial in range(5):
+        n_valid = int(rng.integers(k + 1, cap))
+        keys = np.full(cap, int(EMPTY), np.int32)
+        keys[:n_valid] = np.sort(rng.choice(10**6, n_valid, replace=False)).astype(np.int32)
+        counts = np.where(keys != int(EMPTY),
+                          rng.exponential(5.0, cap).astype(np.float32), 0.0)
+        kb = np.where(keys != int(EMPTY),
+                      rng.uniform(0, 0.3, cap).astype(np.float32), np.inf)
+        seed = np.where(keys != int(EMPTY),
+                        rng.uniform(0, 1, cap).astype(np.float32), np.inf)
+        for tau in (np.inf, 0.5, 0.01):
+            args = (jnp.asarray(keys), jnp.asarray(counts, jnp.float32),
+                    jnp.asarray(kb, jnp.float32), jnp.asarray(seed, jnp.float32),
+                    jnp.float32(tau), k, jnp.float32(8.0), jnp.uint32(9),
+                    jnp.int32(trial + 1))
+            ref = V._evict_to_k_ref(*args)
+            for me in (None, cap - k):
+                got = V._evict_to_k(*args, max_evict=me)
+                for g, r in zip(got, ref):
+                    np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+# ---------------------------------------------------------------------------
+# restructured chunk steps == pre-restructure reference, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _extract(table):
+    """Order-independent table content: (sorted keys, their counts/kb/seed, tau)."""
+    keys = np.asarray(table.keys)
+    valid = keys != int(EMPTY)
+    order = np.argsort(keys[valid], kind="stable")
+    return (keys[valid][order], np.asarray(table.counts)[valid][order],
+            np.asarray(table.kb)[valid][order],
+            np.asarray(table.seed)[valid][order], float(table.tau))
+
+
+def _assert_tables_equal(a, b):
+    ka, ca, kba, sda, ta = _extract(a)
+    kb_, cb, kbb, sdb, tb = _extract(b)
+    np.testing.assert_array_equal(ka, kb_)
+    np.testing.assert_array_equal(ca, cb)   # bitwise: same reductions, same order
+    np.testing.assert_array_equal(kba, kbb)
+    np.testing.assert_array_equal(sda, sdb)
+    assert ta == tb
+
+
+def _assert_sorted_invariant(table):
+    keys = np.asarray(table.keys)
+    n_valid = int((keys != int(EMPTY)).sum())
+    assert (keys[n_valid:] == int(EMPTY)).all(), "EMPTY not compacted to back"
+    assert (np.diff(keys[:n_valid]) > 0).all(), "keys not strictly ascending"
+
+
+@pytest.mark.parametrize("chunk,k,l", [(64, 16, 0.5), (256, 32, 16.0), (128, 64, 5.0)])
+def test_fixed_k_step_bit_identity_vs_reference(chunk, k, l):
+    keys, w = _stream(n=chunk * 12, seed=chunk + k)
+    new = V.init_table(k + chunk)
+    ref = V.init_table(k + chunk)
+    for i in range(12):
+        ck = jnp.asarray(keys[i * chunk:(i + 1) * chunk], jnp.int32)
+        cw = jnp.asarray(w[i * chunk:(i + 1) * chunk])
+        eids = jnp.arange(i * chunk, (i + 1) * chunk, dtype=jnp.int32)
+        score, delta, entry, kb = jax.tree.map(
+            lambda x: x[0],
+            capscore_multi(ck, eids, cw, jnp.asarray([l], jnp.float32),
+                           ref.tau[None], jnp.uint32(3)))
+        new = V.fixed_k_step(new, ck, cw, eids, jnp.float32(l), jnp.uint32(3), k=k)
+        ref = V.fixed_k_step_scored_ref(ref, ck, cw, score, delta, entry, kb,
+                                        k=k, l=jnp.float32(l), salt=jnp.uint32(3))
+        _assert_tables_equal(new, ref)
+        _assert_sorted_invariant(new)
+
+
+def test_fixed_k_step_tau_inf_edge():
+    """Stream smaller than k: tau stays inf, nothing ever evicts, and the
+    sorted path still matches the reference merge exactly."""
+    rng = np.random.default_rng(8)
+    chunk, k = 64, 512
+    new = V.init_table(k + chunk)
+    ref = V.init_table(k + chunk)
+    for i in range(6):
+        ck = jnp.asarray(rng.integers(0, 40, chunk), jnp.int32)
+        cw = jnp.ones(chunk, jnp.float32)
+        eids = jnp.arange(i * chunk, (i + 1) * chunk, dtype=jnp.int32)
+        agg = V.aggregate_continuous_ref(ck, cw, eids, ref.tau, jnp.float32(4.0),
+                                         jnp.uint32(1))
+        keys_c, counts_c, kb_c, seed_c, _ = V._merge_table(ref, agg)
+        cap = ref.keys.shape[0]
+        keys_e, counts_e, kb_e, seed_e, tau_e = V._evict_to_k_ref(
+            keys_c[:cap], counts_c[:cap], kb_c[:cap], seed_c[:cap],
+            ref.tau, k, jnp.float32(4.0), jnp.uint32(1), ref.step + 1)
+        ref = V.TableState(keys_e, counts_e, kb_e, seed_e, tau_e,
+                           ref.step + 1, ref.overflow)
+        new = V.fixed_k_step(new, ck, cw, eids, jnp.float32(4.0), jnp.uint32(1), k=k)
+        assert float(new.tau) == math.inf
+        _assert_tables_equal(new, ref)
+
+
+@pytest.mark.parametrize("kind", ["continuous", "discrete", "distinct", "sh"])
+def test_fixed_tau_step_bit_identity_vs_reference(kind):
+    keys, w = _stream(n=4096, seed=17)
+    l = {"continuous": 5.0, "discrete": 5.0, "distinct": 1.0, "sh": 1e9}[kind]
+    chunk, capacity = 256, 4096
+    new = V.init_table(capacity, 0.05)
+    ref = V.init_table(capacity, 0.05)
+    for i in range(16):
+        ck = jnp.asarray(keys[i * chunk:(i + 1) * chunk], jnp.int32)
+        cw = jnp.asarray(w[i * chunk:(i + 1) * chunk])
+        eids = jnp.arange(i * chunk, (i + 1) * chunk, dtype=jnp.int32)
+        # reference: verbatim pre-PR aggregate + legacy concat-and-sort merge
+        if kind == "continuous":
+            agg = V.aggregate_continuous_ref(ck, cw, eids, ref.tau,
+                                             jnp.float32(l), jnp.uint32(5))
+        else:
+            agg = V.aggregate_discrete_ref(ck, cw, eids, ref.tau, kind,
+                                           jnp.float32(l), jnp.uint32(5))
+        keys_c, counts_c, kb_c, seed_c, n_valid = V._merge_table(ref, agg)
+        over = ref.overflow + jnp.maximum(n_valid - capacity, 0)
+        ref = V.TableState(keys_c[:capacity], counts_c[:capacity],
+                           kb_c[:capacity], seed_c[:capacity],
+                           ref.tau, ref.step + 1, over)
+        new = V.fixed_tau_step(new, ck, cw, eids, jnp.float32(l), jnp.uint32(5),
+                               kind=kind)
+        _assert_tables_equal(new, ref)
+        _assert_sorted_invariant(new)
+
+
+@pytest.mark.parametrize("L,chunk", [(1, 1024), (3, 1024), (8, 256)])
+def test_update_multi_bit_identity_vs_reference_path(L, chunk):
+    keys, w = _stream(n=chunk * 10, seed=100 + L)
+    ls = tuple(float(2.0 ** j) for j in range(L))
+    st_new, spec = I.init_multi_state(ls, k=128, chunk=chunk, salt=11)
+    st_ref, _ = I.init_multi_state(ls, k=128, chunk=chunk, salt=11)
+    kk = keys.astype(np.int32)
+    st_new = I.update_multi(st_new, kk, w, spec, donate=False)
+    st_ref = I.update_multi(st_ref, kk, w, spec, donate=False, reference=True)
+    # identical per-lane samples, thresholds, and lossless summaries
+    rn = I.finalize_multi(st_new, spec, ls=ls)
+    rr = I.finalize_multi(st_ref, spec, ls=ls)
+    for l in ls:
+        np.testing.assert_array_equal(rn[l].keys, rr[l].keys)
+        np.testing.assert_array_equal(rn[l].counts, rr[l].counts)
+        assert rn[l].tau == rr[l].tau
+    np.testing.assert_array_equal(np.asarray(st_new.bk_keys), np.asarray(st_ref.bk_keys))
+    np.testing.assert_array_equal(np.asarray(st_new.bk_seeds), np.asarray(st_ref.bk_seeds))
+
+
+# ---------------------------------------------------------------------------
+# amortized eviction (evict_every = E > 1)
+# ---------------------------------------------------------------------------
+
+
+def test_evict_every_capacity_and_schedule():
+    keys, w = _stream(n=8192, seed=31)
+    E, k, chunk = 4, 64, 512
+    s = I.IncrementalSampler(8.0, k=k, chunk=chunk, salt=2, evict_every=E)
+    assert s.state.capacity == k + E * chunk
+    per_chunk_valid = []
+    for i in range(0, len(keys), chunk):
+        s.observe(keys[i:i + chunk], w[i:i + chunk])
+        per_chunk_valid.append(int((np.asarray(s.state.table.keys) != int(EMPTY)).sum()))
+    # between scheduled evictions the table legitimately exceeds k...
+    assert max(per_chunk_valid) > k
+    assert max(per_chunk_valid) <= k + E * chunk
+    # ...and right after each E-th chunk it is back to <= k
+    assert all(v <= k for v in per_chunk_valid[E - 1::E])
+    # finalize projects down to a valid fixed-k sample, repeatably
+    r1, r2 = s.finalize(), s.finalize()
+    assert len(r1.keys) <= k
+    np.testing.assert_array_equal(r1.keys, r2.keys)
+    np.testing.assert_array_equal(r1.counts, r2.counts)
+
+
+def test_evict_every_multi_matches_capacity_contract():
+    keys, _ = _stream(n=6144, seed=32)
+    m = I.MultiSampler((1.0, 16.0), k=64, chunk=512, salt=3, evict_every=3)
+    m.observe(keys)
+    res = m.finalize()
+    for l, r in res.items():
+        assert len(r.keys) <= 64, (l, len(r.keys))
+    # summaries are eviction-independent: identical to an E=1 run
+    m1 = I.MultiSampler((1.0, 16.0), k=64, chunk=512, salt=3, evict_every=1)
+    m1.observe(keys)
+    bkE, bsE = m.bottomk_summaries()
+    bk1, bs1 = m1.bottomk_summaries()
+    np.testing.assert_array_equal(bkE, bk1)
+    np.testing.assert_array_equal(bsE, bs1)
+
+
+def test_load_state_dict_rejects_capacity_mismatch():
+    """A blob written under a different evict_every (hence table capacity)
+    must refuse to load: silently truncated merges / overflowed top_k windows
+    would corrupt the sample with no error."""
+    keys, _ = _stream(n=2048, seed=33)
+    m1 = I.MultiSampler((1.0, 16.0), k=64, chunk=512, salt=4, evict_every=1)
+    m1.observe(keys)
+    blob = m1.state_dict()
+    m4 = I.MultiSampler((1.0, 16.0), k=64, chunk=512, salt=4, evict_every=4)
+    with pytest.raises(ValueError, match="capacity"):
+        m4.load_state_dict(blob)
+
+
+def _ks_uniform(us):
+    us = np.sort(np.asarray(us))
+    n = len(us)
+    grid = np.arange(1, n + 1) / n
+    return max(np.max(np.abs(grid - us)), np.max(np.abs(us - (grid - 1.0 / n))))
+
+
+def test_evict_every_unbiased_and_count_law(zipf_stream):
+    """E>1 changes the eviction randomness *schedule*, not the sampling law:
+    cap estimates stay unbiased (MC over salts) and sampled counts follow the
+    Thm 5.2 conditional law (PIT + KS), exactly like the E=1 path."""
+    ukeys, cnts = np.unique(zipf_stream, return_counts=True)
+    wmap = dict(zip(ukeys.tolist(), cnts.tolist()))
+    truth = F.exact_statistic(F.cap(5), cnts)
+    top = [int(x) for x in ukeys[np.argsort(-cnts)[:30]]]
+    l, k, period = 5.0, 100, 3
+    rate_pit, ests = [], []
+    for r in range(120):
+        s = I.IncrementalSampler(l, k=k, chunk=1024, salt=95000 + r,
+                                 evict_every=period)
+        s.observe(zipf_stream)
+        res = s.finalize()
+        assert len(res.keys) <= k
+        ests.append(EST.estimate(res, F.cap(5)))
+        rate = max(1.0 / l, res.tau)
+        d = res.asdict()
+        for x in top:
+            if x in d:
+                w = wmap[x]
+                phi = w - d[x]
+                u = -np.expm1(-rate * phi) / -np.expm1(-rate * w)
+                rate_pit.append(min(max(u, 0.0), 1.0))
+    m, se = np.mean(ests), np.std(ests) / math.sqrt(len(ests))
+    assert abs(m - truth) < 4 * se + 0.001 * truth, \
+        f"bias {(m-truth)/truth:+.2%} se {se/truth:.2%}"
+    assert len(rate_pit) > 300
+    assert _ks_uniform(rate_pit) < 2.2 / math.sqrt(len(rate_pit)), \
+        f"KS {_ks_uniform(rate_pit):.3f} n={len(rate_pit)}"
+
+
+# ---------------------------------------------------------------------------
+# satellites: one-shot key validation, interpret default
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_samplers_validate_keys():
+    for call in (
+        lambda ks: V.sample_fixed_k(ks, None, k=8, l=2.0, chunk=64),
+        lambda ks: V.sample_fixed_tau(ks, None, tau=0.5, l=2.0, chunk=64),
+        lambda ks: V.sample_two_pass(ks, None, k=8, l=2.0, chunk=64),
+    ):
+        with pytest.raises(TypeError, match="integers"):
+            call(np.asarray([1.5, 2.0]))
+        with pytest.raises(ValueError, match="int32 range"):
+            call(np.asarray([2**40, 3], np.int64))
+        with pytest.raises(ValueError, match="EMPTY"):
+            call(np.asarray([int(EMPTY)], np.int64))
+    # valid int64 ids keep working
+    res = V.sample_fixed_k(np.asarray([1, 2, 3, 1], np.int64), None, k=8,
+                           l=2.0, chunk=64)
+    assert set(res.keys.tolist()) <= {1, 2, 3}
+
+
+def test_default_interpret_backend_and_env(monkeypatch):
+    from repro.kernels.capscore import capscore as K
+
+    monkeypatch.delenv(K._INTERPRET_ENV, raising=False)
+    # this suite runs on CPU: auto must pick interpret mode
+    assert jax.default_backend() != "tpu"
+    assert K.default_interpret() is True
+    monkeypatch.setenv(K._INTERPRET_ENV, "0")
+    assert K.default_interpret() is False
+    monkeypatch.setenv(K._INTERPRET_ENV, "1")
+    assert K.default_interpret() is True
