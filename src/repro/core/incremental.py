@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64 as _enable_x64
 
-from ..kernels.capscore.ops import capscore_multi
+from ..kernels.capscore.ops import capscore_agg, capscore_multi
 from .samplers import SampleResult
 from .segments import EMPTY, chunk_order, normalize_keys  # noqa: F401 (re-export)
 from . import vectorized as VZ
@@ -115,6 +115,12 @@ class SamplerSpec:
     E>1 changes the eviction randomness *schedule* — the sample stays a valid
     fixed-k SH_l sample (count law / unbiasedness are Monte-Carlo validated
     in tests/test_ingest_order.py) but is no longer per-run identical to E=1.
+
+    ``backend`` routes the fused score+aggregate stage of the multi-l update
+    (kernels.capscore.ops.capscore_agg): None auto-picks per detected
+    accelerator (compiled Pallas on TPU, XLA elsewhere); 'xla' | 'pallas'
+    force a path.  The XLA path is bit-identical to the reference pipeline;
+    Pallas reassociates the f32 segment sums in-block (see the kernel).
     """
 
     kind: str = "continuous"
@@ -122,6 +128,7 @@ class SamplerSpec:
     chunk: int = 2048
     host_id: int | None = None    # element-id namespace for multi-host runs
     evict_every: int = 1          # fixed-k eviction period E (chunks)
+    backend: str | None = None    # capscore_agg dispatch: None|'xla'|'pallas'
 
     @property
     def mode(self) -> str:
@@ -194,7 +201,8 @@ def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> Sampl
         ck, cw = xs
         eids = spec.eids(pos)
         if spec.mode == "fixed_k":
-            order = chunk_order(ck)
+            # pre-gathered view: score in key order, reduce in the same pass
+            order = chunk_order(ck, eids, cw)
             agg = VZ.aggregate_continuous(ck, cw, eids, table.tau, state.l,
                                           state.salt, order)
             table = _scheduled_evict(
@@ -266,13 +274,14 @@ def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
 
 
 def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
-                     evict_every=1) -> tuple[SamplerState, SamplerSpec]:
+                     evict_every=1, backend=None) -> tuple[SamplerState, SamplerSpec]:
     """One fixed-k continuous sketch per l, stacked on a leading axis, plus a
     lossless per-lane bottom-(k+1) summary for exact cross-host merging.
 
     ``evict_every=E`` opts into amortized eviction: capacity k + E*chunk,
     eviction every E chunks (see SamplerSpec; E=1 is bit-compatible with
-    the one-shot samplers)."""
+    the one-shot samplers).  ``backend`` routes the fused score+aggregate
+    stage (see SamplerSpec.backend)."""
     if evict_every < 1:
         raise ValueError(f"evict_every must be >= 1, got {evict_every}")
     ls = np.asarray(ls, np.float32)
@@ -296,18 +305,38 @@ def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
         bk_seeds=jnp.full((L, k + 1), jnp.inf, jnp.float32),
     )
     return state, SamplerSpec(kind="continuous", k=k, chunk=chunk,
-                              host_id=host_id, evict_every=evict_every)
+                              host_id=host_id, evict_every=evict_every,
+                              backend=backend)
 
 
 def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
-    """The single-sort multi-l chunk step.
+    """The permute-once / score-ordered / reduce-fused multi-l chunk step.
 
-    Per chunk, the keys are sorted exactly ONCE (``chunk_order``); the shared
-    ``ChunkOrder`` feeds every consumer — all L per-lane continuous
-    aggregates, the L sorted-runs table merges, and the per-lane bottom-(k+1)
-    summary advance.  Eviction runs on the spec's cadence with a top_k
-    threshold selection.  Bit-identical per lane to the pre-single-sort path
-    (``_update_multi_reference_impl``) at evict_every=1.
+    Per chunk:
+
+    1. **Permute once**: the chunk is sorted by key exactly once
+       (``chunk_order``), WITH the pre-gathered (eids, weights) view — the
+       only gathers of the whole step.
+    2. **Score in key order, reduce in the same pass**: ``capscore_agg``
+       scores every l lane on the pre-gathered view (element randomness
+       hangs off (key, eid) values, so scoring is permutation-covariant) and
+       segment-reduces the scores into the per-unique-key ChunkAgg columns
+       [L, C] directly — the [L, N] score/delta/entry/kb intermediates never
+       exist as arrays between stages, and the lane-independent ``w_total``
+       is computed once instead of L times.
+    3. The per-lane sorted-runs table merges consume the already-key-sorted
+       aggregate columns; eviction runs on the spec's cadence with a
+       backend-fastest threshold selection.
+    4. The aggregate's ``min_score`` column IS the pass-1 chunk summary
+       (element scores are tau-independent), so the lossless bottom-(k+1)
+       summaries advance with no re-scoring and no reorder — on a KEY-sorted
+       carry (``pass1_fold_keysorted``: searchsorted/gather/value-sort, no
+       argsort, no TopK, no segment scatters), converted to/from the
+       seed-sorted state layout once per batch at the scan boundary.
+
+    Bit-identical per lane to the pre-restructure path
+    (``_update_multi_reference_impl``) at evict_every=1 — tables, taus, AND
+    summaries (tests/test_ingest_order.py).
     """
     chunk = spec.chunk
     n = keys.shape[0]
@@ -318,24 +347,27 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
     max_evict = spec.evict_every * chunk
 
     cap_bk = state.bk_keys.shape[1]
+    bkk0, bks0 = jax.vmap(VZ.summary_to_keysorted)(state.bk_keys, state.bk_seeds)
 
     def body(carry, xs):
         table, bk_keys, bk_seeds, pos = carry
         ck, cw = xs
         eids = spec.eids(pos)
-        # one fused pass scores every l lane under its current threshold
-        score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
-                                                 state.salt)
-        # ... and one shared sort orders the chunk for every consumer below
-        order = chunk_order(ck)
+        # the ONE chunk sort, with the pre-gathered view for ordered scoring
+        order = chunk_order(ck, eids, cw)
+        # fused: score every l lane AND reduce to per-key columns in one pass
+        w_total, entered, contrib, kb_min, min_score = capscore_agg(
+            order.ks, order.eids, order.ws, order.seg, state.l, table.tau,
+            state.salt, backend=spec.backend)
 
-        def lane_merge(tab, sc, dl, en, kb_l):
-            # l is already baked into the per-lane capscore outputs; the
-            # merge itself is l-independent
-            agg = VZ.aggregate_continuous_scored(ck, cw, sc, dl, en, kb_l, order)
+        def lane_merge(tab, en, ct, kbm, ms):
+            # l is already baked into the per-lane aggregate columns; the
+            # merge itself is l-independent (w_total/ukeys shared by closure)
+            agg = VZ.ChunkAgg(ukeys=order.ukeys, w_total=w_total, entered=en,
+                              contrib=ct, kb=kbm, min_score=ms)
             return VZ.fixed_k_merge(tab, agg)
 
-        table = jax.vmap(lane_merge)(table, score, delta, entry, kb)
+        table = jax.vmap(lane_merge)(table, entered, contrib, kb_min, min_score)
         table = _scheduled_evict(
             table, spec,
             lambda t: jax.vmap(
@@ -343,15 +375,18 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
                                               salt=state.salt,
                                               max_evict=max_evict)
             )(t, state.l))
-        # the same scores + the same chunk sort advance the lossless per-lane
-        # bottom-(k+1) summary (scores are tau-independent, so this is the
-        # exact pass-1 summary)
-        bk_keys, bk_seeds = VZ.pass1_step_multi(
-            (bk_keys, bk_seeds), ck, score, cap=cap_bk, order=order)
+        # min_score doubles as the (already key-ordered) pass-1 chunk
+        # summary; the key-sorted carry folds it in sort-free
+        bk_keys, bk_seeds = jax.vmap(
+            lambda sk, ss, mn: VZ.pass1_fold_keysorted(sk, ss, order.ukeys,
+                                                       mn, cap_bk)
+        )(bk_keys, bk_seeds, min_score)
         return (table, bk_keys, bk_seeds, pos + chunk), None
 
-    (table, bk_keys, bk_seeds, pos), _ = jax.lax.scan(
-        body, (state.table, state.bk_keys, state.bk_seeds, state.n_seen), (kc, wc))
+    (table, bkk, bks, pos), _ = jax.lax.scan(
+        body, (state.table, bkk0, bks0, state.n_seen), (kc, wc))
+    bk_keys, bk_seeds = jax.vmap(
+        lambda kk, ss: VZ.summary_from_keysorted(kk, ss, cap_bk))(bkk, bks)
     return SamplerState(table, pos, state.l, state.salt, bk_keys, bk_seeds)
 
 
@@ -609,11 +644,12 @@ class MultiSampler:
     randomness never aliases across shards.
     """
 
-    def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None, evict_every=1):
+    def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None,
+                 evict_every=1, backend=None):
         self.ls = tuple(float(l) for l in ls)  # full-precision query keys
         self.state, self.spec = init_multi_state(
             ls, k=k, chunk=chunk, salt=salt, host_id=host_id,
-            evict_every=evict_every)
+            evict_every=evict_every, backend=backend)
         self._rem = _RemainderBuffer(chunk)
         self._n_real = 0  # real (non-padding) elements, incl. merged-in hosts
 

@@ -250,21 +250,43 @@ class ChunkOrder(NamedTuple):
     EMPTY (int32 max) last; ``seg`` are its segment ids; ``ukeys`` the unique
     keys compacted to the front (ascending, EMPTY padded) — exactly what
     ``sort_by_key`` + ``segment_ids`` + ``scatter_unique`` produce, shared.
+
+    ``eids``/``ws`` (optional) are the **pre-gathered view**: the chunk's
+    element ids and weights already permuted into key order.  Element
+    randomness depends only on the (key, eid) *values*, never on stream
+    position, so scoring the pre-gathered view emits every per-element score
+    already key-sorted — scoring is permutation-covariant,
+    ``score(x[perm]) == score(x)[perm]`` bit for bit — and the downstream
+    segment reductions need no per-lane gathers at all (the score-in-key-order
+    ingest path; DESIGN.md §9).
     """
 
     ks: jax.Array     # [C] keys sorted ascending (stable; EMPTY last)
     perm: jax.Array   # [C] permutation: ks == keys[perm]
     seg: jax.Array    # [C] segment ids of ks (0..n_seg-1)
     ukeys: jax.Array  # [C] unique keys, ascending, EMPTY padded
+    eids: jax.Array | None = None  # [C] element ids in key order (= eids[perm])
+    ws: jax.Array | None = None    # [C] weights in key order (= weights[perm])
 
 
-def chunk_order(keys) -> ChunkOrder:
-    """Sort a chunk by key once; derive (permutation, segments, uniques)."""
+def chunk_order(keys, eids=None, weights=None) -> ChunkOrder:
+    """Sort a chunk by key once; derive (permutation, segments, uniques).
+
+    Pass ``eids``/``weights`` to also attach the pre-gathered (key-ordered)
+    view — three O(C) gathers paid once per chunk, shared by every lane.
+    """
     perm = jnp.argsort(keys, stable=True)
     ks = keys[perm]
-    seg, _ = segment_ids(ks)
-    ukeys, _ = scatter_unique(ks, seg, 0.0)
-    return ChunkOrder(ks=ks, perm=perm, seg=seg, ukeys=ukeys)
+    seg, first = segment_ids(ks)
+    # gather-form unique compaction: each segment's first element, compacted
+    # to the front — bit-identical to ``scatter_unique(ks, seg, ...)`` (same
+    # keys land on the same slots) without paying an XLA:CPU scatter
+    (ukeys,) = compact_valid(first, ks, fills=(EMPTY,))
+    return ChunkOrder(
+        ks=ks, perm=perm, seg=seg, ukeys=ukeys,
+        eids=None if eids is None else eids[perm],
+        ws=None if weights is None else weights[perm],
+    )
 
 
 def merge_sorted_runs(a, b):
@@ -280,12 +302,12 @@ def merge_sorted_runs(a, b):
     so merging a C-sized chunk aggregate into it never re-sorts the table.
     """
     na, nb = a.shape[0], b.shape[0]
-    pos_a = jnp.arange(na) + jnp.searchsorted(b, a, side="left")
-    pos_b = jnp.arange(nb) + jnp.searchsorted(a, b, side="right")
+    pos_a = jnp.arange(na) + searchsorted(b, a, side="left")
+    pos_b = jnp.arange(nb) + searchsorted(a, b, side="right")
     return pos_a, pos_b
 
 
-def merge_sorted_runs_gather(a, b):
+def merge_sorted_runs_gather(a, b, out_len: int | None = None):
     """Gather-form of ``merge_sorted_runs``: per merged slot, which run and
     which index feeds it.
 
@@ -295,15 +317,68 @@ def merge_sorted_runs_gather(a, b):
     positions of ``b``.  The point: applying a merge to many payload columns
     costs one cheap gather per column, where the scatter form pays a scatter
     per column — and XLA CPU executes gathers ~50x faster than scatters.
+
+    ``out_len`` truncates the merged view to its first ``out_len`` positions
+    (callers that immediately slice the merge — the fixed-capacity table and
+    summary folds — skip building rank information for slots they drop).
+
+    The inverse rank map (``nb_before``: how many b-slots land at or before
+    each merged position) is a unit-scatter + cumsum rather than a second
+    ``searchsorted``: the insertion positions are strictly increasing and
+    unique, so marking them and prefix-summing yields exactly the same
+    integers — and XLA:CPU runs the scatter+cumsum ~4x faster than a binary
+    search whose queries are the full iota.
     """
     na, nb = a.shape[0], b.shape[0]
-    pos_b = jnp.arange(nb) + jnp.searchsorted(a, b, side="right")
-    p = jnp.arange(na + nb)
-    nb_before = jnp.searchsorted(pos_b, p, side="right")  # b slots at pos <= p
+    m = na + nb if out_len is None else min(out_len, na + nb)
+    pos_b = jnp.arange(nb) + searchsorted(a, b, side="right")
+    # out-of-window positions pile onto the sacrificial slot m (sliced off);
+    # clipped positions stay non-decreasing, so the scatter-add is sorted
+    ind = jnp.zeros((m + 1,), jnp.int32).at[
+        jnp.minimum(pos_b, m)].add(1, indices_are_sorted=True)[:m]
+    nb_before = jnp.cumsum(ind)  # == count of pos_b <= p, bit for bit
     ib = jnp.clip(nb_before - 1, 0, nb - 1)
-    from_b = (nb_before > 0) & (pos_b[ib] == p)
-    ia = jnp.clip(p - nb_before, 0, na - 1)
+    from_b = ind > 0
+    ia = jnp.clip(jnp.arange(m) - nb_before, 0, na - 1)
     return from_b, ia, ib
+
+
+def searchsorted(a, v, side: str = "left"):
+    """``jnp.searchsorted`` pinned to ``method='scan_unrolled'``.
+
+    Identical indices to the default ``'scan'`` lowering — the method only
+    picks the loop form — but the unrolled binary search avoids XLA:CPU's
+    per-iteration while-loop thunk overhead (~20% on the rank passes that
+    dominate the sorted-runs merges).  All hot-path rank computations go
+    through here.
+    """
+    return jnp.searchsorted(a, v, side=side, method="scan_unrolled")
+
+
+def kth_smallest(x, r):
+    """Exact r-th smallest value (0-indexed; ``r`` may be traced) of a float32
+    array — without sorting.
+
+    XLA:CPU lowers a full f32 sort at ~250ns/element, which made order-
+    statistic thresholds (the eviction tau*, the bottom-cap seed threshold)
+    the single hottest primitive of the ingest step.  A threshold does not
+    need a sort: map f32 to uint32 by the standard monotone total-order
+    bijection (negatives bit-flipped, non-negatives sign-bit set) and build
+    the r-th smallest key bit by bit — 32 branchless rounds of
+    compare-and-count, each a vectorized reduction.  ~15x faster than the
+    sort at 8k elements and exact: the returned bits are the element's own
+    bits (ties share bits; no NaNs expected — -0.0/+0.0 straddles are the
+    only bit ambiguity, and every caller compares, never hashes, the result).
+    """
+    u = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    key = jnp.where(u >> 31 == 1, ~u, u | jnp.uint32(0x80000000))
+    res = jnp.uint32(0)
+    for bit in range(31, -1, -1):
+        cand = res | (jnp.uint32(1) << bit)
+        cnt = jnp.sum((key < cand).astype(jnp.int32))
+        res = jnp.where(cnt <= r, cand, res)
+    back = jnp.where(res >> 31 == 1, res ^ jnp.uint32(0x80000000), ~res)
+    return jax.lax.bitcast_convert_type(back, jnp.float32)
 
 
 def segment_ids(sorted_keys):
@@ -332,20 +407,22 @@ def scatter_unique(sorted_keys, seg, fill, values=None):
 def compact_valid(valid, *arrays, fills):
     """Move entries with valid=True to the front (stable), padding the rest.
 
-    Implemented as cumsum + searchsorted + gather: the p-th output slot reads
-    the first index whose inclusive valid-count reaches p+1 (slots past the
-    last valid entry take the fill).  O(n log n) comparisons but pure gathers
-    — no sort, and crucially no scatter (XLA CPU scatters are ~50x slower
-    than gathers, and this helper sits on the per-chunk hot path).
-    Bit-identical to the historical stable-argsort form, and
-    order-preserving: compacting an ascending array yields an ascending
-    array, which is what maintains the sorted-table invariant of
-    core.vectorized.
+    The source map (p-th output slot <- index of the (p+1)-th valid entry) is
+    one unit int scatter: valid entry ``i`` owns output slot ``cs[i]-1``, and
+    those slots are unique, so ``src.at[cs-1].set(i)`` builds the map
+    directly — bit-identical to the historical ``searchsorted(cs, iota)``
+    form (both compute the same stable ranks) but ~2x faster on XLA:CPU,
+    where iota-query binary searches lower poorly.  Payload columns then pay
+    one cheap gather each.  Order-preserving: compacting an ascending array
+    yields an ascending array, which is what maintains the sorted-table
+    invariant of core.vectorized.
     """
     n = valid.shape[0]
     cs = jnp.cumsum(valid)
-    src = jnp.clip(jnp.searchsorted(cs, jnp.arange(1, n + 1), side="left"),
-                   0, n - 1)
+    # invalid entries target the sacrificial slot n (sliced off), keeping
+    # every target in-bounds — valid targets are unique by construction
+    src = jnp.zeros((n + 1,), cs.dtype).at[
+        jnp.where(valid, cs - 1, n)].set(jnp.arange(n))[:n]
     keep = jnp.arange(n) < cs[-1]
     out = []
     for a, fill in zip(arrays, fills):

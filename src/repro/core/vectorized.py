@@ -47,8 +47,10 @@ from .segments import (
     bottom_k_by,
     chunk_order,
     compact_valid,
+    kth_smallest,
     merge_sorted_runs_gather,
     normalize_keys,
+    searchsorted,
     scatter_unique,
     segment_ids,
     sort_by_key,
@@ -126,13 +128,38 @@ def _aggregate_ordered(order: ChunkOrder, weights, entry, at_entry_count,
     discrete); elements after the first entry contribute their full weight.
     All per-element arrays arrive in *stream order*; the shared permutation
     gathers them into key order (O(C) gathers — the sort itself was paid once
-    per chunk, not once per lane).  Bit-identical to sorting inline.
+    per chunk, not once per lane) and the reduction proper is shared with the
+    pre-ordered path below.  Bit-identical to sorting inline.
+    """
+    p = order.perm
+    return _aggregate_preordered(
+        order._replace(ws=weights[p]), entry[p], at_entry_count[p],
+        scores[p], kb_elem[p])
+
+
+def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem,
+               order: ChunkOrder | None = None):
+    """Group a chunk by key and reduce (sorts inline unless ``order`` given)."""
+    if order is None:
+        order = chunk_order(keys)
+    return _aggregate_ordered(order, weights, entry, at_entry_count, scores, kb_elem)
+
+
+def _aggregate_preordered(order: ChunkOrder, entry, at_entry_count, scores,
+                          kb_elem) -> ChunkAgg:
+    """``_aggregate_ordered`` when the per-element columns are ALREADY in key
+    order — i.e. they were computed on the pre-gathered ``ChunkOrder`` view
+    (``order.ks/eids/ws``), so the per-lane gathers vanish entirely.
+
+    Bit-identical to ``_aggregate_ordered`` on the stream-order columns:
+    element scoring is elementwise in (key, eid, weight), hence permutation-
+    covariant, so the segment reductions receive exactly the same values in
+    exactly the same (sorted) positions.
     """
     C = order.ks.shape[0]
-    p = order.perm
-    ks, seg = order.ks, order.seg
-    ws, es, aec = weights[p], entry[p], at_entry_count[p]
-    sc, kbe = scores[p], kb_elem[p]
+    ks, seg, ws = order.ks, order.seg, order.ws
+    es, aec = entry, at_entry_count
+    sc, kbe = scores, kb_elem
     idx = jnp.arange(C)
     entry_idx = jnp.where(es, idx, C)
     first_entry = jax.ops.segment_min(entry_idx, seg, num_segments=C)
@@ -155,14 +182,6 @@ def _aggregate_ordered(order: ChunkOrder, weights, entry, at_entry_count,
         kb=kb_min,
         min_score=min_score,
     )
-
-
-def _aggregate(keys, weights, entry, at_entry_count, scores, kb_elem,
-               order: ChunkOrder | None = None):
-    """Group a chunk by key and reduce (sorts inline unless ``order`` given)."""
-    if order is None:
-        order = chunk_order(keys)
-    return _aggregate_ordered(order, weights, entry, at_entry_count, scores, kb_elem)
 
 
 def _aggregate_ref(keys, weights, entry, at_entry_count, scores, kb_elem):
@@ -210,7 +229,20 @@ def _continuous_entry(keys, weights, eids, tau, l, salt):
 
 def aggregate_continuous(keys, weights, eids, tau, l, salt,
                          order: ChunkOrder | None = None) -> ChunkAgg:
-    """Entry semantics of Algorithm 4 under the *current* threshold tau."""
+    """Entry semantics of Algorithm 4 under the *current* threshold tau.
+
+    When ``order`` carries the pre-gathered view (or is omitted, in which
+    case it is built with one), the elements are scored directly in key order
+    and reduced in the same pass — the score-in-key-order path (DESIGN.md
+    §9), bit-identical to score-then-gather by permutation covariance.  An
+    ``order`` without the view falls back to gathering the scored columns.
+    """
+    if order is None:
+        order = chunk_order(keys, eids, weights)
+    if order.eids is not None:
+        entry, aec, scores, kb = _continuous_entry(
+            order.ks, order.ws, order.eids, tau, l, salt)
+        return _aggregate_preordered(order, entry, aec, scores, kb)
     entry, aec, scores, kb = _continuous_entry(keys, weights, eids, tau, l, salt)
     return _aggregate(keys, weights, entry, aec, scores, kb, order)
 
@@ -224,7 +256,18 @@ def aggregate_continuous_ref(keys, weights, eids, tau, l, salt) -> ChunkAgg:
 
 def aggregate_discrete(keys, weights, eids, tau, kind, l, salt,
                        order: ChunkOrder | None = None) -> ChunkAgg:
-    """Entry semantics of Algorithm 2: first element whose score < tau."""
+    """Entry semantics of Algorithm 2: first element whose score < tau.
+
+    Scores in key order when the pre-gathered view is available (every
+    ``element_scores`` kind is elementwise, hence permutation-covariant);
+    see ``aggregate_continuous``.
+    """
+    if order is None:
+        order = chunk_order(keys, eids, weights)
+    if order.eids is not None:
+        scores = element_scores(kind, order.ks, order.eids, order.ws, l, salt)
+        entry = (scores < tau) & (order.ks != EMPTY)
+        return _aggregate_preordered(order, entry, order.ws, scores, scores)
     scores = element_scores(kind, keys, eids, weights, l, salt)
     entry = (scores < tau) & (keys != EMPTY)
     return _aggregate(keys, weights, entry, weights, scores, scores, order)
@@ -354,14 +397,14 @@ def _merge_table_sorted(state: TableState, agg: ChunkAgg):
 
     # table entries matched against the chunk aggregate (cached-key branch:
     # count += chunk total weight, kb/seed min with the chunk's)
-    loc_ab = jnp.clip(jnp.searchsorted(b_keys, a_keys), 0, C - 1)
+    loc_ab = jnp.clip(searchsorted(b_keys, a_keys), 0, C - 1)
     hit_a = (b_keys[loc_ab] == a_keys) & a_live
     counts_a = state.counts + jnp.where(hit_a, agg.w_total[loc_ab], 0.0)
     kb_a = jnp.minimum(state.kb, jnp.where(hit_a, agg.kb[loc_ab], inf))
     sd_a = jnp.minimum(state.seed, jnp.where(hit_a, agg.min_score[loc_ab], inf))
 
     # chunk keys not in the table: inserted iff an entry event happened
-    loc_ba = jnp.clip(jnp.searchsorted(a_keys, b_keys), 0, cap - 1)
+    loc_ba = jnp.clip(searchsorted(a_keys, b_keys), 0, cap - 1)
     in_table = a_keys[loc_ba] == b_keys
     new = b_live & ~in_table & agg.entered
     newk, newcnt, newkb, newsd = compact_valid(
@@ -369,8 +412,11 @@ def _merge_table_sorted(state: TableState, agg: ChunkAgg):
         fills=(EMPTY, 0.0, inf, inf))
 
     # interleave the (still sorted) table run with the compacted new keys —
-    # gather form: one searchsorted, then a cheap gather per payload column
-    from_b, ia, ib = merge_sorted_runs_gather(a_keys, newk)
+    # gather form: one searchsorted, then a cheap gather per payload column.
+    # Only the first ``cap`` merged positions are built: every caller slices
+    # the merge to table capacity anyway (fixed-k capacity never overflows by
+    # construction; fixed-tau counts the overflow separately from n_valid).
+    from_b, ia, ib = merge_sorted_runs_gather(a_keys, newk, out_len=cap)
     pick = lambda av, bv: jnp.where(from_b, bv[ib], av[ia])
     keys_c = pick(a_keys, newk)
     counts_c = pick(counts_a, newcnt)
@@ -405,7 +451,7 @@ def fixed_tau_step(state: TableState, keys, weights, eids, l, salt, *, kind,
     """Advance a fixed-threshold sampler (Alg 2/4) by one chunk of elements."""
     capacity = state.keys.shape[0]
     if order is None:
-        order = chunk_order(keys)
+        order = chunk_order(keys, eids, weights)
     if kind == "continuous":
         agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt, order)
     else:
@@ -430,14 +476,16 @@ def fixed_k_merge(state: TableState, agg: ChunkAgg) -> TableState:
                       seed_c[:capacity], state.tau, state.step + 1, state.overflow)
 
 
-def evict_table(table: TableState, *, k, l, salt, max_evict=None) -> TableState:
+def evict_table(table: TableState, *, k, l, salt, max_evict=None,
+                select: str = "auto") -> TableState:
     """Batched eviction of a merged table back down to <= k valid keys, then
     re-compaction so the sorted-table invariant survives the EMPTY holes the
-    eviction punches.  ``max_evict`` bounds the eviction count (see
-    ``_evict_to_k``); the round number is the table's step counter."""
+    eviction punches.  ``max_evict`` bounds the eviction count and ``select``
+    the threshold-selection lowering (see ``_evict_to_k``); the round number
+    is the table's step counter."""
     keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k(
         table.keys, table.counts, table.kb, table.seed, table.tau, k, l, salt,
-        table.step, max_evict=max_evict)
+        table.step, max_evict=max_evict, select=select)
     keys_c, counts_c, kb_c, seed_c = compact_valid(
         keys_e != EMPTY, keys_e, counts_e, kb_e, seed_e,
         fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
@@ -455,7 +503,7 @@ def fixed_k_step(state: TableState, keys, weights, eids, l, salt, *, k,
     table carries <= k valid keys, so at most ``chunk`` keys can be evicted.
     """
     if order is None:
-        order = chunk_order(keys)
+        order = chunk_order(keys, eids, weights)
     agg = aggregate_continuous(keys, weights, eids, state.tau, l, salt, order)
     merged = fixed_k_merge(state, agg)
     return evict_table(merged, k=k, l=l, salt=salt, max_evict=keys.shape[0])
@@ -557,6 +605,127 @@ def pass1_step_multi(carry, keys, scores, *, cap, order: ChunkOrder | None = Non
     )(skeys, sseeds, mins)
 
 
+# -- key-sorted summary carry: the in-scan form of the bottom-cap summaries --
+#
+# ``merge_bottomk_summary`` pays an argsort of (cap + C) keys plus three
+# scatter-shaped segment ops and a TopK per lane per chunk — the single most
+# expensive stage of the multi-lane ingest step on CPU.  Inside a scan the
+# summary can instead be carried KEY-sorted (ascending, unique, EMPTY last —
+# the same invariant as the sampler table), which turns the whole advance
+# into searchsorted + gather/cumsum primitives:
+#
+#   * duplicate keys min-merge by two searchsorted rank passes (pairwise,
+#     since both runs are unique — exactly the _merge_table_sorted trick);
+#   * the bottom-cap truncation selects the cap-th smallest seed with a
+#     plain VALUE sort (no TopK, no argsort) and compacts survivors in key
+#     order.
+#
+# Bit-identity with the seed-sorted iterated form (property-tested): bottom-k
+# sketches are exactly composable (paper §3.1) — any entry dropped by a
+# truncation can never re-enter the final bottom-cap, and a surviving key's
+# stored seed is its true min — so the final bottom-cap (set, seeds) is
+# invariant to the carry layout.  Ties at the truncation threshold break the
+# same way too: ``bottom_k_by``'s top_k prefers lower indices, and its input
+# array is key-ascending, so tied entries survive smallest-key-first — which
+# is precisely what compacting a key-sorted carry keeps.  Converting the
+# final carry through ``summary_from_keysorted`` therefore reproduces the
+# reference arrays bit for bit (same multiset, same seed-ascending order,
+# same index tie-break).
+
+
+def summary_to_keysorted(skeys, sseeds):
+    """Re-lay a bottom-cap summary (seed-sorted, the state/checkpoint form)
+    as the key-sorted scan carry: ascending unique keys, EMPTY (+inf) last."""
+    o = jnp.argsort(skeys, stable=True)
+    return skeys[o], sseeds[o]
+
+
+def summary_from_keysorted(skeys, sseeds, cap):
+    """Back to the state/checkpoint layout: seed-ascending via the same
+    ``bottom_k_by`` selection every ``merge_bottomk_summary`` call ends with
+    (a no-op selection here — the carry already holds <= cap entries)."""
+    sd_k, uk_k = bottom_k_by(sseeds, cap, skeys, fills=(EMPTY,))
+    return uk_k, sd_k
+
+
+def pass1_fold_keysorted(skeys, sseeds, ukeys, mins, cap):
+    """One chunk of bottom-cap summary advance on the key-sorted carry.
+
+    ``skeys``/``sseeds``: the [cap] key-sorted carry.  ``ukeys``/``mins``:
+    the chunk's unique keys (ascending, EMPTY-padded — ``ChunkOrder.ukeys``)
+    and their per-key min element scores (e.g. the fused aggregate's
+    ``min_score`` column, which equals the pass-1 chunk summary because
+    element scores are tau-independent).  No sort of the union, no TopK, no
+    segment ops — see the block comment above for the bit-identity argument.
+    """
+    C = ukeys.shape[0]
+    cap_s = skeys.shape[0]
+    a_keys, a_live = skeys, skeys != EMPTY
+    b_keys, b_live = ukeys, ukeys != EMPTY
+
+    # rank passes (kept UNclipped: the raw rank is also the count of
+    # other-run keys below, which the position formulas below need even at
+    # the array-end edge)
+    loc_ab_raw = searchsorted(b_keys, a_keys)
+    loc_ba_raw = searchsorted(a_keys, b_keys)
+
+    # carried keys matched against the chunk summary: seed = min of both
+    loc_ab = jnp.minimum(loc_ab_raw, C - 1)
+    hit_a = (b_keys[loc_ab] == a_keys) & a_live
+    sd_a = jnp.minimum(sseeds, jnp.where(hit_a, mins[loc_ab], INF))
+
+    # chunk keys not yet carried: candidate insertions
+    loc_ba = jnp.minimum(loc_ba_raw, cap_s - 1)
+    new = b_live & ~(a_keys[loc_ba] == b_keys)
+
+    # bottom-cap threshold: cap-th smallest seed of the union, by rank
+    # selection (``kth_smallest`` — no sort, no argsort, no TopK, all of
+    # which XLA:CPU lowers as scalar comparator loops)
+    sd_a_live = jnp.where(a_live, sd_a, INF)
+    sd_b_new = jnp.where(new, mins, INF)
+    thr = kth_smallest(jnp.concatenate([sd_a_live, sd_b_new]), cap - 1)
+
+    # selection must match ``bottom_k_by`` exactly under seed TIES at thr:
+    # every seed strictly below thr survives (value order dominates), and
+    # the remaining quota goes to thr-tied entries smallest-key-first
+    # (top_k's lowest-index tie-break on a key-ascending array).  The tied
+    # key-order rank is assembled from the same cross-run prefix counts as
+    # the merge positions below.
+    below_a = a_live & (sd_a < thr)
+    below_b = new & (mins < thr)
+    tied_a = a_live & (sd_a == thr)
+    tied_b = new & (mins == thr)
+    quota = cap - (jnp.sum(below_a.astype(jnp.int32))
+                   + jnp.sum(below_b.astype(jnp.int32)))
+    cst_a = jnp.cumsum(tied_a)
+    cst_b = jnp.cumsum(tied_b)
+    tb_lt = jnp.where(loc_ab_raw > 0, cst_b[jnp.maximum(loc_ab_raw - 1, 0)], 0)
+    ta_lt = jnp.where(loc_ba_raw > 0, cst_a[jnp.maximum(loc_ba_raw - 1, 0)], 0)
+    keep_a = below_a | (tied_a & (cst_a - 1 + tb_lt < quota))
+    keep_b = below_b | (tied_b & (cst_b - 1 + ta_lt < quota))
+
+    # every survivor's merged position is already determined by the ranks in
+    # hand (kept keys of the two runs are disjoint and each run is sorted):
+    #   pos = (kept same-run entries before it) + (kept other-run keys below
+    #   it, read off the loc_ab/loc_ba ranks) — so the merged carry
+    # assembles with two direct scatters per column, no compaction passes
+    # and no interleave rank pass.  Overflow survivors (the > cap tail that
+    # only a seed tie at thr can produce) land on the sacrificial slot.
+    csa = jnp.cumsum(keep_a)
+    csb = jnp.cumsum(keep_b)
+    nb_lt = jnp.where(loc_ab_raw > 0, csb[jnp.maximum(loc_ab_raw - 1, 0)], 0)
+    na_lt = jnp.where(loc_ba_raw > 0, csa[jnp.maximum(loc_ba_raw - 1, 0)], 0)
+    pos_a = jnp.where(keep_a, csa - 1 + nb_lt, cap_s)
+    pos_b = jnp.where(keep_b, csb - 1 + na_lt, cap_s)
+    pos_a = jnp.minimum(pos_a, cap_s)
+    pos_b = jnp.minimum(pos_b, cap_s)
+    kk = (jnp.full((cap_s + 1,), EMPTY, a_keys.dtype)
+          .at[pos_a].set(a_keys).at[pos_b].set(b_keys)[:cap_s])
+    ss = (jnp.full((cap_s + 1,), INF, sd_a.dtype)
+          .at[pos_a].set(sd_a).at[pos_b].set(mins)[:cap_s])
+    return kk, ss
+
+
 # ---------------------------------------------------------------------------
 # Fixed-threshold samplers (exact Algorithm 2 / 4)
 # ---------------------------------------------------------------------------
@@ -638,26 +807,44 @@ def _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
 
 
 def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no, *,
-                max_evict: int | None = None):
+                max_evict: int | None = None, select: str = "auto"):
     """Batched eviction (§5.2): tau* = delta-th largest z; drop z >= tau*.
 
-    The threshold is selected with ``jax.lax.top_k`` over the ``max_evict``
-    largest z instead of a full descending sort of the capacity — valid
-    whenever the caller can bound delta = n_valid - k (the chunk steps pass
-    the chunk size: a table that was <= k valid gains at most ``chunk`` keys
-    per merge).  ``max_evict=None`` keeps the full selection (the cross-host
-    merge path, where no tighter bound holds).  Bit-identical to the full
-    sort: the top-``max_evict`` prefix of sorted-descending z is what top_k
-    returns, and only indices < delta <= max_evict are ever read.
+    Only the THRESHOLD is needed, so the selection is a pure lowering
+    decision — every route returns the same value:
+
+    * ``'topk'``: ``jax.lax.top_k`` over the ``max_evict`` largest z (native
+      partial selection on TPU; valid whenever the caller can bound
+      delta = n_valid - k — the chunk steps pass the chunk size, since a
+      table that was <= k valid gains at most ``chunk`` keys per merge;
+      ``max_evict=None`` keeps the full width, the cross-host merge path).
+    * ``'rank'``: ``segments.kth_smallest`` bit-prefix rank selection — no
+      sort at all.  XLA:CPU lowers both TopK and full sorts at ~250ns/elem
+      (scalar comparator loops), which made threshold selection the
+      hottest primitive of the whole ingest step; the rank select is ~15x
+      cheaper there.
+    * ``'auto'``: backend-derived at trace time (top_k on TPU, rank
+      elsewhere).
+
+    Bit-identical across routes and to the reference full descending sort:
+    the delta-th largest z is the same multiset order statistic however it
+    is found (tests/test_ingest_order.py pins all three).
     """
     n = state_keys.shape[0]
     valid, z, entry_thresh, ex, inv_l = _evict_z(
         state_keys, counts, kb, tau, l, salt, round_no)
     n_valid = jnp.sum(valid.astype(jnp.int32))
     delta = jnp.maximum(n_valid - k, 0)
-    top = n if max_evict is None else min(int(max_evict), n)
-    z_top = jax.lax.top_k(z, top)[0]
-    tau_star = jnp.where(delta > 0, z_top[jnp.maximum(delta - 1, 0)], tau)
+    if select == "auto":
+        select = "topk" if jax.default_backend() == "tpu" else "rank"
+    if select == "rank":
+        # delta-th largest == (n - delta)-th smallest (0-indexed)
+        z_sel = kth_smallest(z, jnp.clip(n - delta, 0, n - 1))
+    else:
+        top = n if max_evict is None else min(int(max_evict), n)
+        z_top = jax.lax.top_k(z, top)[0]
+        z_sel = z_top[jnp.maximum(delta - 1, 0)]
+    tau_star = jnp.where(delta > 0, z_sel, tau)
     return _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
                         valid, z, entry_thresh, ex, inv_l)
 

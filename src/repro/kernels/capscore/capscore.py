@@ -271,3 +271,196 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
     )(scalars, keys2, eids2, w2)
     return (score.reshape(n_l, n), delta.reshape(n_l, n),
             entry.reshape(n_l, n), kb.reshape(n_l, n))
+
+
+# ---------------------------------------------------------------------------
+# Fused score + segment-reduce: the [n_l, N] intermediates never leave VMEM
+# ---------------------------------------------------------------------------
+
+# elements per grid step of the fused-aggregate kernel; the block-local
+# one-hot (AGG_WINDOW x AGG_BN) and the masked reductions over it are the
+# per-block working set (~0.5 MB at 256), the embedding_bag segment-sum idiom
+AGG_BN = 256
+# output row window per block: AGG_BN segments + sublane alignment slack (the
+# dynamic row start is rounded down to a multiple of 8 so the store stays
+# tile-aligned; a block of AGG_BN sorted elements spans < AGG_BN segments)
+AGG_WINDOW = AGG_BN + 8
+
+_EMPTY_KEY = np.int32(2**31 - 1)  # == core.segments.EMPTY (int32 max)
+_NO_ENTRY = np.int32(2**30)       # > any element index: "no entry event"
+
+
+def _make_capscore_agg_kernel(n_l: int):
+    """Kernel closure for the fused multi-lane score + per-key aggregate.
+
+    Consumes the chunk in KEY-SORTED order (the pre-gathered ``ChunkOrder``
+    view): per grid step, one block of ``AGG_BN`` elements is scored for all
+    ``n_l`` lanes entirely in VMEM, then segment-reduced into the per-key
+    output columns through a block-local one-hot — sums ride the MXU
+    (``onehot @ vals``, the embedding_bag idiom), mins/maxes ride the VPU as
+    masked reductions.  Because ``seg`` is sorted, a block's segments span a
+    contiguous id range, so each block touches one ``AGG_WINDOW``-row slice
+    of the (fully VMEM-resident) outputs; the slice is read-modify-written,
+    which is the **cross-block carry**: the boundary segment shared with the
+    previous block combines via +/min/max, and the entered-before flag
+    carried in ``ent`` decides the contrib recurrence
+    ``contrib = entered_before ? contrib + block_w : block_contrib``
+    (the first-entry-onward count semantics of Algorithm 4, folded left
+    block by block).
+
+    Contract vs the XLA path (``ref.capscore_agg_ref``): min/max columns and
+    ``entered`` are bit-identical; the float sums (``w_total``, ``contrib``)
+    are reassociated by the in-block matmul reduce, so they agree up to
+    f32 summation order (tests pin mins exactly and sums to tight rtol).
+    """
+
+    def kernel(scalar_ref, keys_ref, eids_ref, w_ref, seg_ref,
+               wt_ref, ent_ref, ctr_ref, kbm_ref, msc_ref):
+        step = pl.program_id(0)
+
+        @pl.when(step == 0)
+        def _init():
+            wt_ref[...] = jnp.zeros_like(wt_ref)
+            ent_ref[...] = jnp.zeros_like(ent_ref)
+            ctr_ref[...] = jnp.zeros_like(ctr_ref)
+            kbm_ref[...] = jnp.full_like(kbm_ref, jnp.inf)
+            msc_ref[...] = jnp.full_like(msc_ref, jnp.inf)
+
+        keys = keys_ref[...].astype(jnp.uint32)    # (1, BN)
+        eids = eids_ref[...].astype(jnp.uint32)
+        w = w_ref[...]
+        seg = seg_ref[...]                         # (1, BN) int32, sorted
+        salt = scalar_ref[2 * n_l].astype(jnp.uint32)
+
+        # shared element randomness (independent of l and tau)
+        h = _combine(jnp.full_like(eids, _SEED0), eids)
+        h = _combine(h, np.uint32(SALT_ELEM))
+        h = _combine(h, salt)
+        u = _u01(h)
+        e = -jnp.log1p(-u)
+        v = e / w
+
+        hk = _combine(jnp.full_like(keys, _SEED0), keys)
+        hk = _combine(hk, np.uint32(SALT_KEYBASE))
+        hk = _combine(hk, salt)
+        ku = _u01(hk)  # Hash(x) in (0,1); KeyBase = ku / l
+
+        live = keys_ref[...] != _EMPTY_KEY         # (1, BN)
+        w_live = jnp.where(live, w, 0.0)
+
+        # block-local one-hot over the (sublane-aligned) segment window
+        s0 = seg_ref[0, 0]
+        s0a = (s0 // 8) * 8
+        local = seg - s0a                          # (1, BN) in [0, AGG_WINDOW)
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (AGG_WINDOW, AGG_BN), 0)
+              == local)                            # (W, BN) bool
+        ohf = oh.astype(jnp.float32)
+        rows = pl.ds(s0a, AGG_WINDOW)
+
+        seg_sum = lambda vals: jax.lax.dot_general(  # (1, BN) -> (W, 1)
+            ohf, vals, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        seg_min = lambda vals: jnp.min(jnp.where(oh, vals, jnp.inf), axis=1,
+                                       keepdims=True)
+
+        bw = seg_sum(w_live)                       # (W, 1) block weight/segment
+        wt_ref[rows, :] += bw
+
+        idx = step * AGG_BN + jax.lax.broadcasted_iota(
+            jnp.int32, (1, AGG_BN), 1)
+
+        for j in range(n_l):
+            l = jax.lax.bitcast_convert_type(scalar_ref[j], jnp.float32)
+            tau = jax.lax.bitcast_convert_type(scalar_ref[n_l + j], jnp.float32)
+            inv_l = 1.0 / l
+            kb = ku / l  # division, not *inv_l: bit-identical to the XLA path
+            score = jnp.where(v <= inv_l, kb, v)
+            rate = jnp.maximum(inv_l, tau)
+            delta = e / rate
+            gate = jnp.where(tau * l > 1.0, True, kb < tau)
+            es = (delta < w) & gate & live
+
+            # first entry event per segment, then back to per-element form
+            # via the same one-hot (no data-dependent gathers in VMEM)
+            entry_idx = jnp.where(es, idx, _NO_ENTRY)
+            fe_loc = jnp.min(jnp.where(oh, entry_idx, _NO_ENTRY), axis=1,
+                             keepdims=True)                     # (W, 1)
+            fe_elem = jnp.min(jnp.where(oh, fe_loc, _NO_ENTRY), axis=0,
+                              keepdims=True)                    # (1, BN)
+            at = (idx == fe_elem) & es
+            after = (idx > fe_elem) & live
+            contrib_elem = (jnp.where(after, w, 0.0)
+                            + jnp.where(at, w - delta, 0.0))
+
+            bc = seg_sum(contrib_elem)                          # (W, 1)
+            be = jnp.max(jnp.where(oh, es.astype(jnp.int32), 0), axis=1,
+                         keepdims=True)
+            ms = seg_min(jnp.where(live, score, jnp.inf))
+            bkb = seg_min(jnp.where(live, kb, jnp.inf))
+
+            # cross-block carry: read the window BEFORE updating `ent` so the
+            # contrib recurrence sees "entered in an earlier block"
+            prev_ent = ent_ref[rows, j:j + 1]
+            prev_ctr = ctr_ref[rows, j:j + 1]
+            ctr_ref[rows, j:j + 1] = jnp.where(prev_ent > 0, prev_ctr + bw, bc)
+            ent_ref[rows, j:j + 1] = jnp.maximum(prev_ent, be)
+            kbm_ref[rows, j:j + 1] = jnp.minimum(kbm_ref[rows, j:j + 1], bkb)
+            msc_ref[rows, j:j + 1] = jnp.minimum(msc_ref[rows, j:j + 1], ms)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_l", "interpret"))
+def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, n_l: int,
+                 interpret: bool | None = None):
+    """Fused multi-l scoring + per-key chunk aggregation (Pallas TPU).
+
+    Args:
+      ks, eids: int32 [C] in KEY-SORTED order (the ChunkOrder pre-gathered
+        view), C % AGG_BN == 0 (use ops.capscore_agg for padding); ``ks``
+        ascending with EMPTY last.
+      ws: float32 [C] weights, same order.
+      seg: int32 [C] sorted segment ids of ``ks`` (0..n_seg-1).
+      ls, taus: float32 [n_l] per-lane cap parameter / current threshold.
+      salt: uint32 scalar shared by all lanes.
+    Returns:
+      (w_total f32 [C + AGG_WINDOW, 1],
+       entered i32 / contrib f32 / kb_min f32 / min_score f32, each
+       [C + AGG_WINDOW, n_l]) — segment-id-indexed columns; rows past the
+      real segment count hold the reduction identities (the wrapper slices
+      and transposes).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    C = ks.shape[0]
+    assert C % AGG_BN == 0, C
+    scalars = jnp.concatenate(
+        [
+            jax.lax.bitcast_convert_type(jnp.asarray(ls, jnp.float32), jnp.int32).reshape(n_l),
+            jax.lax.bitcast_convert_type(jnp.asarray(taus, jnp.float32), jnp.int32).reshape(n_l),
+            jnp.asarray(salt, jnp.uint32).astype(jnp.int32).reshape(1),
+        ]
+    )
+    view = lambda a: a.reshape(1, C)
+    rows_out = C + AGG_WINDOW
+    in_blk = lambda: pl.BlockSpec((1, AGG_BN), lambda i, s: (0, i))
+    out_blk = lambda cols: pl.BlockSpec((rows_out, cols), lambda i, s: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((rows_out, 1), jnp.float32),
+        jax.ShapeDtypeStruct((rows_out, n_l), jnp.int32),
+        jax.ShapeDtypeStruct((rows_out, n_l), jnp.float32),
+        jax.ShapeDtypeStruct((rows_out, n_l), jnp.float32),
+        jax.ShapeDtypeStruct((rows_out, n_l), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _make_capscore_agg_kernel(n_l),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(C // AGG_BN,),
+            in_specs=[in_blk(), in_blk(), in_blk(), in_blk()],
+            out_specs=[out_blk(1), out_blk(n_l), out_blk(n_l), out_blk(n_l),
+                       out_blk(n_l)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, view(ks), view(eids), view(ws), view(seg))

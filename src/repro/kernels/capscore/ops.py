@@ -5,14 +5,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core.segments import EMPTY
 from .capscore import (
+    AGG_BN,
+    AGG_WINDOW,
     BLOCK_ROWS,
     LANES,
     capscore as _kernel,
+    capscore_agg as _kernel_agg,
     capscore_multi as _kernel_multi,
     default_interpret,
 )
-from .ref import capscore_multi_ref, capscore_ref
+from .ref import capscore_agg_ref, capscore_multi_ref, capscore_ref
 
 _TILE = BLOCK_ROWS * LANES
 
@@ -21,22 +25,50 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve_backend(backend: str | None) -> str:
+    """Validate + default the kernel dispatch.  Raising on unknown strings
+    matters now that the knob is user-facing (StatsConfig.ingest_backend /
+    SamplerSpec.backend): a typo like 'XLA' must not silently select the
+    interpret-mode Pallas path."""
+    if backend is None:
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"unknown capscore backend {backend!r}: use None (auto), 'xla' "
+            "or 'pallas'")
+    return backend
+
+
+def _pad_tile(tile, *cols):
+    """Pad 1-D arrays to a multiple of ``tile`` with per-array fill values.
+
+    ``cols`` are (array, fill) pairs; returns (padded_arrays..., pad).  The
+    no-op case (already tile-aligned — every ``SamplerSpec.chunk`` in
+    practice) skips the concatenates entirely, so the aligned hot path traces
+    zero extra ops; tests/test_ingest_order.py pins padded-vs-aligned outputs
+    slice-bit-identical.
+    """
+    n = cols[0][0].shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return tuple(a for a, _ in cols) + (0,)
+    return tuple(
+        jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)]) for a, fill in cols
+    ) + (pad,)
+
+
 def capscore(keys, eids, weights, l, tau, salt, *, backend: str | None = None):
     """Fused element scoring.  backend: 'pallas' | 'xla' | None (auto).
 
     On CPU the Pallas path runs in interpret mode (correctness only); 'xla'
     is the fast CPU path and the differentiation-friendly fallback.
     """
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "xla"
+    backend = _resolve_backend(backend)
     if backend == "xla":
         return capscore_ref(keys, eids, weights, l, tau, salt)
     n = keys.shape[0]
-    pad = (-n) % _TILE
-    if pad:
-        keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
-        eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
-        weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
+    keys, eids, weights, pad = _pad_tile(
+        _TILE, (keys, 0), (eids, 0), (weights, 1.0))
     s, d, e = _kernel(keys, eids, weights, l, tau, salt,
                       interpret=default_interpret())
     if pad:
@@ -50,19 +82,47 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, backend: str | None =
 
     Returns (score, delta, entry, kb), each shaped [len(ls), N].
     """
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "xla"
+    backend = _resolve_backend(backend)
     if backend == "xla":
         return capscore_multi_ref(keys, eids, weights, ls, taus, salt)
     n = keys.shape[0]
     n_l = ls.shape[0] if hasattr(ls, "shape") else len(ls)
-    pad = (-n) % _TILE
-    if pad:
-        keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
-        eids = jnp.concatenate([eids, jnp.zeros((pad,), eids.dtype)])
-        weights = jnp.concatenate([weights, jnp.ones((pad,), weights.dtype)])
+    keys, eids, weights, pad = _pad_tile(
+        _TILE, (keys, 0), (eids, 0), (weights, 1.0))
     s, d, e, kb = _kernel_multi(keys, eids, weights, ls, taus, salt,
                                 n_l=int(n_l), interpret=default_interpret())
     if pad:
         s, d, e, kb = s[:, :n], d[:, :n], e[:, :n], kb[:, :n]
     return s, d, e, kb
+
+
+def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, backend: str | None = None):
+    """Fused multi-l scoring + per-key chunk aggregation over a KEY-ORDERED
+    chunk (the ChunkOrder pre-gathered view).  backend: 'pallas'|'xla'|None.
+
+    One pass over the elements scores every (ls[j], taus[j]) lane AND reduces
+    the scores into the per-unique-key ChunkAgg columns, so the [L, N]
+    score/delta/entry/kb intermediates are never materialized between stages.
+
+    Returns (w_total [C], entered bool [L, C], contrib [L, C], kb_min [L, C],
+    min_score [L, C]); ``w_total`` is lane-independent and computed once.
+    The 'xla' path (CPU/GPU production) is bit-identical to scoring then
+    aggregating; the Pallas path reassociates the f32 sums in-block (mins,
+    maxes and ``entered`` stay exact) — see the kernel docstring.
+    """
+    backend = _resolve_backend(backend)
+    if backend == "xla":
+        return capscore_agg_ref(ks, eids, ws, seg, ls, taus, salt)
+    n = ks.shape[0]
+    n_l = ls.shape[0] if hasattr(ls, "shape") else len(ls)
+    # padding: EMPTY keys are masked to the reduction identities inside the
+    # kernel, and segment id ``n`` (one past the last real segment) parks
+    # them on output rows the slice below drops
+    ks, eids, ws, seg, pad = _pad_tile(
+        AGG_BN, (ks, int(EMPTY)), (eids, 0), (ws, 1.0), (seg, n))
+    wt, ent, ctr, kbm, msc = _kernel_agg(ks, eids, ws, seg, ls, taus, salt,
+                                         n_l=int(n_l),
+                                         interpret=default_interpret())
+    lane_cols = lambda a: a[:n].T  # [rows, n_l] -> [n_l, C]
+    return (wt[:n, 0], lane_cols(ent) > 0, lane_cols(ctr), lane_cols(kbm),
+            lane_cols(msc))

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 
 from ...core import hashing as H
 from ...core.samplers import SALT_ELEM, SALT_KEYBASE
+from ...core.segments import EMPTY
+
+_INF = jnp.float32(jnp.inf)
 
 
 def capscore_ref(keys, eids, weights, l, tau, salt):
@@ -47,3 +50,53 @@ def capscore_multi_ref(keys, eids, weights, ls, taus, salt):
         return score, delta, entry, kb
 
     return jax.vmap(lane)(ls, taus)
+
+
+def capscore_agg_ref(ks, eids, ws, seg, ls, taus, salt):
+    """Fused score + per-key segment reduce over a KEY-ORDERED chunk (XLA).
+
+    Inputs are the chunk's (keys, eids, weights) pre-gathered by the shared
+    ``ChunkOrder`` permutation (``ks`` ascending, EMPTY last, ``seg`` its
+    segment ids).  Because element scoring is elementwise in (key, eid,
+    weight) — permutation-covariant — the per-lane scores emerge already
+    key-sorted, and the continuous-scheme chunk aggregation reduces them in
+    the same pass: the [L, N] score/delta/entry/kb intermediates exist only
+    as fusion-local values, never as materialized arrays handed between
+    stages.
+
+    Returns the per-unique-key ChunkAgg columns
+        (w_total f32 [C], entered bool [L, C], contrib f32 [L, C],
+         kb_min f32 [L, C], min_score f32 [L, C])
+    with ``w_total`` computed once (it is lane-independent) instead of once
+    per lane.  Bit-identical to ``capscore_multi_ref`` +
+    ``vectorized.aggregate_continuous_scored`` on the unordered chunk: the
+    segment reductions see exactly the values the gather-then-reduce path
+    sees, in exactly the same order.
+    """
+    C = ks.shape[0]
+    score, delta, entry, kb = capscore_multi_ref(ks, eids, ws, ls, taus, salt)
+    live = ks != EMPTY
+    idx = jnp.arange(C)
+    w_live = jnp.where(live, ws, 0.0)
+    w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)
+
+    def lane(sc, dl, en, kbe):
+        es = en.astype(bool) & live
+        sc = jnp.where(live, sc, _INF)
+        entry_idx = jnp.where(es, idx, C)
+        first_entry = jax.ops.segment_min(entry_idx, seg, num_segments=C)
+        fe = first_entry[seg]
+        after = idx > fe
+        at = (idx == fe) & es
+        contrib_elem = jnp.where(after, ws, 0.0) + jnp.where(at, ws - dl, 0.0)
+        contrib = jax.ops.segment_sum(jnp.where(live, contrib_elem, 0.0), seg,
+                                      num_segments=C)
+        entered = jax.ops.segment_max(es.astype(jnp.int32), seg,
+                                      num_segments=C) > 0
+        min_score = jax.ops.segment_min(sc, seg, num_segments=C)
+        kb_min = jax.ops.segment_min(jnp.where(live, kbe, _INF), seg,
+                                     num_segments=C)
+        return entered, contrib, kb_min, min_score
+
+    entered, contrib, kb_min, min_score = jax.vmap(lane)(score, delta, entry, kb)
+    return w_total, entered, contrib, kb_min, min_score

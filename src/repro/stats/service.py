@@ -19,9 +19,12 @@ are compiled once per sketch and cached device-resident.
 
 **State is O(k * |ls|), independent of stream length.**  ``observe()``
 advances every sketch of the l-grid in a single jitted device dispatch with
-donated state buffers (core.incremental.MultiSampler): the fused multi-l
-capscore kernel scores all lanes in one VMEM-resident pass over the batch,
-then the merge/evict step runs vmapped across lanes.  Nothing is buffered
+donated state buffers (core.incremental.MultiSampler): each chunk is
+permuted into key order once, then the fused multi-l ``capscore_agg``
+kernel scores all lanes AND segment-reduces them to per-key aggregate
+columns in the same pass (the per-element [L, chunk] scores never
+materialize; DESIGN.md §9), then the sorted-runs merge/evict step runs
+vmapped across lanes.  Nothing is buffered
 except the sub-chunk remainder (< chunk elements) awaiting alignment;
 queries finalize the resident sketches lazily (cached until the next
 ``observe``) — no replay, no recompute.
@@ -89,6 +92,12 @@ class StatsConfig:
     # E chunks.  The lossless bottom-(k+1) summaries and the exact two-pass
     # mode are unaffected by E.
     evict_every: int = 1
+    # backend of the fused score+aggregate ingest stage (capscore_agg):
+    # None auto-picks per accelerator (compiled Pallas on TPU, XLA
+    # elsewhere); 'xla' | 'pallas' force a path.  Does not gate merging —
+    # the XLA path is bit-identical everywhere, Pallas only reassociates
+    # in-block f32 sums.
+    ingest_backend: str | None = None
 
 
 @dataclasses.dataclass
@@ -115,7 +124,7 @@ class StreamStatsService:
         self._sampler = incremental.MultiSampler(
             tuple(float(l) for l in config.ls), k=config.k,
             chunk=config.chunk, salt=config.salt, host_id=config.host_id,
-            evict_every=config.evict_every,
+            evict_every=config.evict_every, backend=config.ingest_backend,
         )
         self._results: dict[float, SampleResult] | None = None
         self._engines: dict[bool, QueryEngine] = {}  # query plane, per path

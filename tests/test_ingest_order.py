@@ -1,19 +1,30 @@
-"""Single-sort ingest restructure (DESIGN.md §8): bit-identity + eviction law.
+"""Single-sort + score-in-key-order ingest (DESIGN.md §8-§9): bit-identity.
 
 Contracts under test:
 
-* ``chunk_order`` / ``merge_sorted_runs`` / the cumsum ``compact_valid``
-  reproduce the historical sort-based forms bit-for-bit;
-* the top_k eviction threshold equals the full-descending-sort form;
-* the restructured chunk steps (shared ChunkOrder + sorted-runs table merge
-  + top_k evict) are bit-identical to the pre-restructure reference path
-  across kinds, chunk sizes, lane counts, and the tau=inf edge;
+* ``chunk_order`` / ``merge_sorted_runs`` / the scatter-form
+  ``compact_valid`` reproduce the historical sort-based forms bit-for-bit;
+* eviction threshold selection (top_k / rank-select / full sort) is one
+  order statistic however it is lowered;
+* the restructured chunk steps (shared ChunkOrder + ordered scoring +
+  sorted-runs table merge + selected-threshold evict) are bit-identical to
+  the pre-restructure reference path across kinds, chunk sizes, lane
+  counts, and the tau=inf edge;
+* the fused ``capscore_agg`` (score in key order, reduce in the same pass)
+  equals score-then-gather-then-reduce: exactly on the XLA path, exactly on
+  min/max/entered and to f32-reassociation on sums for the Pallas kernel;
+* element scoring is permutation-covariant (the keystone of ordered
+  scoring): scoring a permuted chunk with permuted eids == permuting the
+  scores;
+* the key-sorted bottom-(k+1) summary carry reproduces the seed-sorted
+  iterated merge bit-for-bit (tables AND summaries, all L lanes);
 * the sorted-table invariant holds after every step;
 * ``evict_every > 1`` (amortized lazy eviction) keeps the sample a valid
   fixed-k SH_l sample: size <= k, Thm 5.2 count law (PIT + KS), unbiased
   cap estimates (Monte Carlo);
 * the one-shot samplers validate keys through ``normalize_keys``;
-* the capscore interpret default derives from the backend with env override.
+* the capscore interpret default derives from the backend with env override;
+* the kernel pad helper: padded-vs-aligned outputs slice bit-identically.
 """
 import math
 
@@ -27,12 +38,14 @@ from repro.core import estimators as EST
 from repro.core import freqfns as F
 from repro.core import incremental as I
 from repro.core import vectorized as V
-from repro.kernels.capscore.ops import capscore_multi
+from repro.kernels.capscore.ops import _pad_tile, capscore, capscore_agg, capscore_multi
 from repro.core.segments import (
     EMPTY,
     chunk_order,
     compact_valid,
+    kth_smallest,
     merge_sorted_runs,
+    merge_sorted_runs_gather,
     segment_ids,
     sort_by_key,
 )
@@ -105,9 +118,10 @@ def test_compact_valid_matches_stable_argsort_reference():
         np.testing.assert_array_equal(np.asarray(got_f), ref_f)
 
 
-def test_evict_topk_matches_full_sort():
-    """tau* from lax.top_k == tau* from the full descending sort, and the
-    whole evicted table agrees bitwise (max_evict both bounded and None)."""
+def test_evict_threshold_selection_routes_agree():
+    """tau* from lax.top_k == rank-select == the full descending sort, and
+    the whole evicted table agrees bitwise (max_evict both bounded and
+    None) — the selection is one order statistic however it is lowered."""
     rng = np.random.default_rng(4)
     cap, k = 256, 64
     for trial in range(5):
@@ -127,9 +141,24 @@ def test_evict_topk_matches_full_sort():
                     jnp.int32(trial + 1))
             ref = V._evict_to_k_ref(*args)
             for me in (None, cap - k):
-                got = V._evict_to_k(*args, max_evict=me)
-                for g, r in zip(got, ref):
-                    np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+                for select in ("auto", "topk", "rank"):
+                    got = V._evict_to_k(*args, max_evict=me, select=select)
+                    for g, r in zip(got, ref):
+                        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_kth_smallest_matches_sort():
+    """Rank selection == np.sort order statistic, incl. infinities, ties and
+    a traced rank."""
+    rng = np.random.default_rng(44)
+    for n, r in [(1, 0), (7, 3), (100, 0), (100, 99), (513, 200), (4096, 2048)]:
+        x = rng.normal(size=n).astype(np.float32)
+        if n > 8:
+            x[rng.integers(0, n, 3)] = np.inf
+            x[rng.integers(0, n, 2)] = -np.inf
+            x[rng.integers(0, n, 2)] = x[0]  # duplicates
+        got = jax.jit(kth_smallest)(jnp.asarray(x), jnp.int32(r))
+        assert np.asarray(got) == np.sort(x)[r], (n, r)
 
 
 # ---------------------------------------------------------------------------
@@ -238,7 +267,167 @@ def test_fixed_tau_step_bit_identity_vs_reference(kind):
         _assert_sorted_invariant(new)
 
 
-@pytest.mark.parametrize("L,chunk", [(1, 1024), (3, 1024), (8, 256)])
+def test_merge_sorted_runs_gather_out_len_prefix():
+    """Truncated interleave == the first out_len slots of the full merge."""
+    rng = np.random.default_rng(21)
+    for na, nb, ol in [(16, 16, 8), (128, 32, 128), (5, 200, 60), (64, 64, 128)]:
+        a = np.sort(rng.integers(0, 300, na)).astype(np.int32)
+        b = np.sort(rng.integers(0, 300, nb)).astype(np.int32)
+        concat = np.concatenate([a, b])
+        ref = concat[np.argsort(concat, kind="stable")]
+        for out_len in (None, ol):
+            fb, ia, ib = merge_sorted_runs_gather(jnp.asarray(a), jnp.asarray(b),
+                                                  out_len)
+            merged = np.where(np.asarray(fb), b[np.asarray(ib)], a[np.asarray(ia)])
+            np.testing.assert_array_equal(merged, ref[: len(merged)])
+
+
+# ---------------------------------------------------------------------------
+# score-in-key-order: covariance, the fused aggregate, ordered fixed-tau
+# ---------------------------------------------------------------------------
+
+
+def test_element_scoring_permutation_covariance():
+    """The keystone of ordered scoring: element randomness hangs off the
+    (key, eid, weight) VALUES, so scoring a permuted chunk with permuted
+    eids equals permuting the scores — bitwise, for every lane and output."""
+    rng = np.random.default_rng(23)
+    C, L = 1024, 5
+    keys = jnp.asarray(rng.integers(0, 200, C), jnp.int32)
+    eids = jnp.asarray(rng.permutation(C * 7)[:C], jnp.int32)
+    w = jnp.asarray(rng.exponential(1.0, C) + 0.1, jnp.float32)
+    ls = jnp.asarray(np.geomspace(1.0, 16.0, L), jnp.float32)
+    taus = jnp.asarray(rng.uniform(0.05, 2.0, L), jnp.float32)
+    perm = jnp.asarray(rng.permutation(C))
+    base = capscore_multi(keys, eids, w, ls, taus, jnp.uint32(9))
+    permuted = capscore_multi(keys[perm], eids[perm], w[perm], ls, taus,
+                              jnp.uint32(9))
+    for b, p in zip(base, permuted):
+        np.testing.assert_array_equal(np.asarray(b)[:, np.asarray(perm)],
+                                      np.asarray(p))
+
+
+def _agg_via_gather_path(keys, eids, w, ls, taus, salt, order):
+    """The score-then-gather-then-reduce chain the fused op replaces."""
+    score, delta, entry, kb = capscore_multi(keys, eids, w, ls, taus, salt)
+    return jax.vmap(
+        lambda s_, d_, e_, b_: V.aggregate_continuous_scored(
+            keys, w, s_, d_, e_, b_, order)
+    )(score, delta, entry, kb)
+
+
+@pytest.mark.parametrize("C,n_keys,L", [(300, 40, 3), (1024, 5000, 1),
+                                        (2048, 150, 8)])
+def test_capscore_agg_xla_bit_identity(C, n_keys, L):
+    """Fused score+aggregate == score, gather x4L, segment-reduce — bitwise,
+    EMPTY padding and tau=inf lanes included."""
+    rng = np.random.default_rng(C + L)
+    keys = rng.integers(0, n_keys, C).astype(np.int32)
+    keys[rng.uniform(size=C) < 0.2] = int(EMPTY)
+    keys = jnp.asarray(keys)
+    eids = jnp.asarray(rng.permutation(10 * C)[:C], jnp.int32)
+    w = jnp.asarray(rng.exponential(1.0, C) + 0.1, jnp.float32)
+    ls = jnp.asarray(np.geomspace(1.0, 2.0 ** (L - 1), L), jnp.float32)
+    taus = jnp.asarray(rng.uniform(0.05, 2.0, L), jnp.float32)
+    taus = taus.at[0].set(jnp.inf)  # tau=inf lane rides along
+    salt = jnp.uint32(7)
+    order = chunk_order(keys, eids, w)
+    w_total, entered, contrib, kb_min, min_score = capscore_agg(
+        order.ks, order.eids, order.ws, order.seg, ls, taus, salt,
+        backend="xla")
+    ref = _agg_via_gather_path(keys, eids, w, ls, taus, salt, order)
+    np.testing.assert_array_equal(np.asarray(order.ukeys), np.asarray(ref.ukeys[0]))
+    np.testing.assert_array_equal(np.asarray(w_total), np.asarray(ref.w_total[0]))
+    np.testing.assert_array_equal(np.asarray(entered), np.asarray(ref.entered))
+    np.testing.assert_array_equal(np.asarray(contrib), np.asarray(ref.contrib))
+    np.testing.assert_array_equal(np.asarray(kb_min), np.asarray(ref.kb))
+    np.testing.assert_array_equal(np.asarray(min_score), np.asarray(ref.min_score))
+
+
+def test_capscore_agg_pallas_matches_xla():
+    """The Pallas kernel (interpret mode on CPU) agrees with the XLA path:
+    exactly on entered/min/max columns, to f32-reassociation on the sums
+    (the in-block one-hot matmul reduces in a different order)."""
+    rng = np.random.default_rng(31)
+    for C, n_keys, n_l in [(300, 40, 3), (1024, 200, 1), (2048, 3000, 4)]:
+        keys = rng.integers(0, n_keys, C).astype(np.int32)
+        keys[rng.uniform(size=C) < 0.15] = int(EMPTY)
+        w = jnp.asarray(rng.exponential(1.0, C) + 0.1, jnp.float32)
+        eids = jnp.asarray(np.arange(C), jnp.int32)
+        ls = jnp.asarray(np.geomspace(1.0, 8.0, n_l), jnp.float32)
+        taus = jnp.asarray(rng.uniform(0.05, 2.0, n_l), jnp.float32)
+        o = chunk_order(jnp.asarray(keys), eids, w)
+        args = (o.ks, o.eids, o.ws, o.seg, ls, taus, jnp.uint32(7))
+        ref = capscore_agg(*args, backend="xla")
+        got = capscore_agg(*args, backend="pallas")
+        for nm, g, r in zip(("w_total", "entered", "contrib", "kb", "min_score"),
+                            got, ref):
+            if nm in ("w_total", "contrib"):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                           rtol=2e-6, atol=1e-6, err_msg=nm)
+            else:
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(r), nm)
+
+
+@pytest.mark.parametrize("kind", ["continuous", "discrete", "distinct", "sh"])
+def test_ordered_discrete_continuous_aggregates_match_ref(kind):
+    """aggregate_continuous/_discrete on the pre-gathered view == the
+    verbatim pre-ChunkOrder reducers, across kinds and chunk sizes."""
+    rng = np.random.default_rng(57)
+    l = {"continuous": 5.0, "discrete": 5.0, "distinct": 1.0, "sh": 1e9}[kind]
+    for C in (64, 256, 1000):
+        keys = rng.integers(0, max(8, C // 8), C).astype(np.int32)
+        keys[rng.uniform(size=C) < 0.1] = int(EMPTY)
+        keys = jnp.asarray(keys)
+        w = jnp.asarray(rng.exponential(1.0, C) + 0.1, jnp.float32)
+        eids = jnp.asarray(np.arange(C), jnp.int32)
+        for tau in (jnp.float32(jnp.inf), jnp.float32(0.2)):
+            order = chunk_order(keys, eids, w)
+            if kind == "continuous":
+                got = V.aggregate_continuous(keys, w, eids, tau, jnp.float32(l),
+                                             jnp.uint32(5), order)
+                ref = V.aggregate_continuous_ref(keys, w, eids, tau,
+                                                 jnp.float32(l), jnp.uint32(5))
+            else:
+                got = V.aggregate_discrete(keys, w, eids, tau, kind,
+                                           jnp.float32(l), jnp.uint32(5), order)
+                ref = V.aggregate_discrete_ref(keys, w, eids, tau, kind,
+                                               jnp.float32(l), jnp.uint32(5))
+            for g, r in zip(got, ref):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_pass1_fold_keysorted_matches_seed_sorted_merge():
+    """The key-sorted summary carry == iterated merge_bottomk_summary after
+    conversion, chunk by chunk (the in-scan form of the §3.1 losslessness).
+
+    Scores are coarsely quantized, so seeds TIE at the bottom-cap threshold
+    constantly — pinning the fold's tie-break (every seed strictly below the
+    threshold survives; the remaining quota goes to tied entries
+    smallest-key-first) to ``bottom_k_by``'s exact semantics."""
+    rng = np.random.default_rng(71)
+    C, cap, rounds = 512, 129, 18
+    sk = jnp.full((cap,), EMPTY, jnp.int32)
+    ss = jnp.full((cap,), jnp.inf, jnp.float32)
+    kk, vv = V.summary_to_keysorted(sk, ss)
+    for t in range(rounds):
+        keys = jnp.asarray(rng.integers(0, 300 if t % 2 else 2**30, C), jnp.int32)
+        scores = jnp.asarray(
+            np.round(rng.uniform(0, 1, C), [2, 1, 3][t % 3]).astype(np.float32))
+        order = chunk_order(keys)
+        live = order.ks != EMPTY
+        mins = jax.ops.segment_min(
+            jnp.where(live, scores[order.perm], jnp.float32(jnp.inf)),
+            order.seg, num_segments=C)
+        mins = jnp.where(order.ukeys != EMPTY, mins, jnp.inf)
+        sk, ss = V.merge_bottomk_summary(sk, ss, order.ukeys, mins, cap)
+        kk, vv = V.pass1_fold_keysorted(kk, vv, order.ukeys, mins, cap)
+        got_k, got_s = V.summary_from_keysorted(kk, vv, cap)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(sk))
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ss))
+
+
+@pytest.mark.parametrize("L,chunk", [(1, 1024), (4, 1024), (8, 256)])
 def test_update_multi_bit_identity_vs_reference_path(L, chunk):
     keys, w = _stream(n=chunk * 10, seed=100 + L)
     ls = tuple(float(2.0 ** j) for j in range(L))
@@ -374,6 +563,56 @@ def test_one_shot_samplers_validate_keys():
     res = V.sample_fixed_k(np.asarray([1, 2, 3, 1], np.int64), None, k=8,
                            l=2.0, chunk=64)
     assert set(res.keys.tolist()) <= {1, 2, 3}
+
+
+def test_pad_tile_padded_vs_aligned_bit_identical():
+    """The shared kernel pad helper: a non-aligned chunk scored through the
+    padded kernel slices bit-identically to the aligned prefix computation,
+    and aligned inputs pass through without any concatenate."""
+    rng = np.random.default_rng(91)
+    n = 1000  # not a multiple of the 1024 kernel tile
+    keys = jnp.asarray(rng.integers(0, 50, n), jnp.int32)
+    eids = jnp.asarray(np.arange(n), jnp.int32)
+    w = jnp.asarray(rng.exponential(1.0, n) + 0.1, jnp.float32)
+    # aligned reference: compute on a 1024-aligned superset, slice to n
+    keys_al = jnp.concatenate([keys, jnp.zeros((24,), jnp.int32)])
+    eids_al = jnp.concatenate([eids, jnp.zeros((24,), jnp.int32)])
+    w_al = jnp.concatenate([w, jnp.ones((24,), jnp.float32)])
+    for backend in ("xla", "pallas"):
+        got = capscore(keys, eids, w, 4.0, 0.3, 3, backend=backend)
+        ref = capscore(keys_al, eids_al, w_al, 4.0, 0.3, 3, backend=backend)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r)[:n])
+    # aligned input: helper is a no-op passthrough (same objects, pad=0)
+    out = _pad_tile(1024, (keys_al, 0), (w_al, 1.0))
+    assert out[-1] == 0 and out[0] is keys_al and out[1] is w_al
+    # padded: fills applied, arrays extended to the tile
+    k2, w2, pad = _pad_tile(1024, (keys, int(EMPTY)), (w, 0.0))
+    assert pad == 24 and k2.shape[0] == 1024
+    assert (np.asarray(k2[-24:]) == int(EMPTY)).all()
+    assert (np.asarray(w2[-24:]) == 0.0).all()
+
+
+def test_update_multi_tau_inf_edge():
+    """Stream smaller than k: tau stays inf in every lane, nothing evicts,
+    and the fused path still matches the reference bit for bit."""
+    rng = np.random.default_rng(92)
+    ls = (1.0, 8.0)
+    st_new, spec = I.init_multi_state(ls, k=512, chunk=256, salt=13)
+    st_ref, _ = I.init_multi_state(ls, k=512, chunk=256, salt=13)
+    keys = rng.integers(0, 60, 1024).astype(np.int32)
+    w = np.ones(1024, np.float32)
+    st_new = I.update_multi(st_new, keys, w, spec, donate=False)
+    st_ref = I.update_multi(st_ref, keys, w, spec, donate=False, reference=True)
+    assert np.isinf(np.asarray(st_new.table.tau)).all()
+    rn = I.finalize_multi(st_new, spec, ls=ls)
+    rr = I.finalize_multi(st_ref, spec, ls=ls)
+    for l in ls:
+        np.testing.assert_array_equal(rn[l].keys, rr[l].keys)
+        np.testing.assert_array_equal(rn[l].counts, rr[l].counts)
+        assert rn[l].tau == rr[l].tau == math.inf
+    np.testing.assert_array_equal(np.asarray(st_new.bk_keys), np.asarray(st_ref.bk_keys))
+    np.testing.assert_array_equal(np.asarray(st_new.bk_seeds), np.asarray(st_ref.bk_seeds))
 
 
 def test_default_interpret_backend_and_env(monkeypatch):
