@@ -11,6 +11,7 @@ Sections:
   6. merge          — cross-host merge cost, exact vs approximate mode
   7. roofline       — summary of the dry-run roofline records (if present)
   8. query-plane    — batched query_batch vs per-query host estimation
+  9. serving        — multi-tenant stacked bank + scheduler vs per-tenant loop
 """
 from __future__ import annotations
 
@@ -142,6 +143,19 @@ def main() -> None:
         query_main(n=100_000, k=1024, ls=(1.0, 8.0, 64.0),
                    batch_sizes=(1, 64), rounds=3, n_keys=50_000,
                    audience=10_000, check_target=False)
+
+    section("9. Serving plane: stacked bank + scheduler vs per-tenant loop"
+            " -> BENCH_serve.json")
+    from benchmarks.serve_throughput import run as serve_run
+    import json as _json
+
+    serve_res = serve_run(**({} if args.full
+                             else dict(rounds=6, chunk=256,
+                                       queries_per_round=24, k=128)))
+    ok &= serve_res["bit_identical"]
+    with open("BENCH_serve.json", "w") as f:
+        _json.dump({"bench": "serve_throughput", "schema_version": 1,
+                    **serve_res}, f, indent=2)
 
     print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "
           f"{'ALL VALIDATIONS PASS' if ok else 'SOME VALIDATIONS FAILED'}")

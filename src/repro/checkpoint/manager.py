@@ -92,6 +92,52 @@ def restore(ckpt_dir: str | Path, step: int, example_tree, *, shardings=None):
     return tree
 
 
+def restore_slice(ckpt_dir: str | Path, step: int, example_tree, index: int):
+    """Restore ONE row of a stacked checkpoint into a per-instance tree.
+
+    The multi-tenant serving plane (stats.service.MultiTenantStats)
+    checkpoints its whole bank as [T, ...]-stacked leaves whose names are
+    parallel to the single-instance state dict.  ``example_tree`` is the
+    SINGLE-instance structure (e.g. ``StreamStatsService.state_dict()``);
+    every stored leaf is matched against it by position:
+
+    * equal shape            -> shared across tenants, kept whole;
+    * ndim+1 with matching
+      trailing dims          -> stacked, sliced at ``[index]``;
+    * anything else          -> error (incompatible checkpoint).
+
+    This is the tenant handoff path: restore one tenant out of a bank
+    checkpoint into a standalone service (launch/elastic.py) without
+    pulling the other T-1 tenants off disk into the destination process.
+    """
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    flat, treedef = jax.tree.flatten(example_tree)
+    n_stored = json.loads((path / "manifest.json").read_text())["n_leaves"]
+    if n_stored != len(flat):
+        raise ValueError(
+            f"leaf count mismatch: checkpoint has {n_stored}, example tree "
+            f"has {len(flat)} — the example must be the single-instance "
+            "form of the stacked state (same keys, minus the stack axis)")
+    out = []
+    for i, want in enumerate(flat):
+        got = data[f"leaf_{i}"]
+        wshape = tuple(np.asarray(want).shape)
+        if tuple(got.shape) == wshape:
+            out.append(got)
+        elif got.ndim == len(wshape) + 1 and tuple(got.shape[1:]) == wshape:
+            if not (0 <= index < got.shape[0]):
+                raise IndexError(
+                    f"slice index {index} out of range for stacked leaf_{i} "
+                    f"with {got.shape[0]} instances")
+            out.append(got[index])
+        else:
+            raise ValueError(
+                f"leaf_{i}: ckpt shape {got.shape} is neither shared "
+                f"({wshape}) nor stacked ((T,)+{wshape})")
+    return jax.tree.unflatten(treedef, out)
+
+
 def restore_extra(ckpt_dir: str | Path, step: int) -> dict:
     p = Path(ckpt_dir) / f"step_{step:08d}" / "extra.json"
     return json.loads(p.read_text()) if p.exists() else {}

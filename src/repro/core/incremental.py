@@ -309,10 +309,12 @@ def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
                               backend=backend)
 
 
-def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
-    """The permute-once / score-ordered / reduce-fused multi-l chunk step.
+def _multi_chunk_step(table, bk_keys, bk_seeds, pos, ck, cw, l, salt,
+                      spec: SamplerSpec):
+    """One chunk through the fused multi-l step (summaries carried KEY-sorted).
 
-    Per chunk:
+    The shared body of ``_update_multi_impl``'s scan and the per-tenant vmap
+    of ``_update_bank_impl``:
 
     1. **Permute once**: the chunk is sorted by key exactly once
        (``chunk_order``), WITH the pre-gathered (eids, weights) view — the
@@ -333,6 +335,44 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
        carry (``pass1_fold_keysorted``: searchsorted/gather/value-sort, no
        argsort, no TopK, no segment scatters), converted to/from the
        seed-sorted state layout once per batch at the scan boundary.
+    """
+    cap_bk = bk_keys.shape[-1]
+    max_evict = spec.evict_every * spec.chunk
+    eids = spec.eids(pos)
+    # the ONE chunk sort, with the pre-gathered view for ordered scoring
+    order = chunk_order(ck, eids, cw)
+    # fused: score every l lane AND reduce to per-key columns in one pass
+    w_total, entered, contrib, kb_min, min_score = capscore_agg(
+        order.ks, order.eids, order.ws, order.seg, l, table.tau,
+        salt, backend=spec.backend)
+
+    def lane_merge(tab, en, ct, kbm, ms):
+        # l is already baked into the per-lane aggregate columns; the
+        # merge itself is l-independent (w_total/ukeys shared by closure)
+        agg = VZ.ChunkAgg(ukeys=order.ukeys, w_total=w_total, entered=en,
+                          contrib=ct, kb=kbm, min_score=ms)
+        return VZ.fixed_k_merge(tab, agg)
+
+    table = jax.vmap(lane_merge)(table, entered, contrib, kb_min, min_score)
+    table = _scheduled_evict(
+        table, spec,
+        lambda t: jax.vmap(
+            lambda tab, ll: VZ.evict_table(tab, k=spec.k, l=ll, salt=salt,
+                                           max_evict=max_evict)
+        )(t, l))
+    # min_score doubles as the (already key-ordered) pass-1 chunk
+    # summary; the key-sorted carry folds it in sort-free
+    bk_keys, bk_seeds = jax.vmap(
+        lambda sk, ss, mn: VZ.pass1_fold_keysorted(sk, ss, order.ukeys,
+                                                   mn, cap_bk)
+    )(bk_keys, bk_seeds, min_score)
+    return table, bk_keys, bk_seeds, pos + spec.chunk
+
+
+def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> SamplerState:
+    """The permute-once / score-ordered / reduce-fused multi-l batch update:
+    a scan of ``_multi_chunk_step`` with the bottom-(k+1) summaries converted
+    to/from the key-sorted carry layout once per batch at the scan boundary.
 
     Bit-identical per lane to the pre-restructure path
     (``_update_multi_reference_impl``) at evict_every=1 — tables, taus, AND
@@ -344,7 +384,6 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
         raise ValueError(f"update batch ({n}) must be a multiple of chunk ({chunk})")
     kc = keys.reshape(n // chunk, chunk)
     wc = weights.reshape(n // chunk, chunk)
-    max_evict = spec.evict_every * chunk
 
     cap_bk = state.bk_keys.shape[1]
     bkk0, bks0 = jax.vmap(VZ.summary_to_keysorted)(state.bk_keys, state.bk_seeds)
@@ -352,36 +391,9 @@ def _update_multi_impl(state: SamplerState, keys, weights, spec: SamplerSpec) ->
     def body(carry, xs):
         table, bk_keys, bk_seeds, pos = carry
         ck, cw = xs
-        eids = spec.eids(pos)
-        # the ONE chunk sort, with the pre-gathered view for ordered scoring
-        order = chunk_order(ck, eids, cw)
-        # fused: score every l lane AND reduce to per-key columns in one pass
-        w_total, entered, contrib, kb_min, min_score = capscore_agg(
-            order.ks, order.eids, order.ws, order.seg, state.l, table.tau,
-            state.salt, backend=spec.backend)
-
-        def lane_merge(tab, en, ct, kbm, ms):
-            # l is already baked into the per-lane aggregate columns; the
-            # merge itself is l-independent (w_total/ukeys shared by closure)
-            agg = VZ.ChunkAgg(ukeys=order.ukeys, w_total=w_total, entered=en,
-                              contrib=ct, kb=kbm, min_score=ms)
-            return VZ.fixed_k_merge(tab, agg)
-
-        table = jax.vmap(lane_merge)(table, entered, contrib, kb_min, min_score)
-        table = _scheduled_evict(
-            table, spec,
-            lambda t: jax.vmap(
-                lambda tab, l: VZ.evict_table(tab, k=spec.k, l=l,
-                                              salt=state.salt,
-                                              max_evict=max_evict)
-            )(t, state.l))
-        # min_score doubles as the (already key-ordered) pass-1 chunk
-        # summary; the key-sorted carry folds it in sort-free
-        bk_keys, bk_seeds = jax.vmap(
-            lambda sk, ss, mn: VZ.pass1_fold_keysorted(sk, ss, order.ukeys,
-                                                       mn, cap_bk)
-        )(bk_keys, bk_seeds, min_score)
-        return (table, bk_keys, bk_seeds, pos + chunk), None
+        table, bk_keys, bk_seeds, pos = _multi_chunk_step(
+            table, bk_keys, bk_seeds, pos, ck, cw, state.l, state.salt, spec)
+        return (table, bk_keys, bk_seeds, pos), None
 
     (table, bkk, bks, pos), _ = jax.lax.scan(
         body, (state.table, bkk0, bks0, state.n_seen), (kc, wc))
@@ -475,6 +487,121 @@ def finalize_multi(state: SamplerState, spec: SamplerSpec,
         out[float(l)] = VZ._to_result(st, l=float(l), kind=spec.kind,
                                       tau=float(st.tau))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Stacked tenant banks: N resident sampler instances (tenant x l-grid) in one
+# pytree, all advanced by a single vmapped/jitted dispatch per ingest tick —
+# the multi-tenant analogue of the multi-l lane stacking above.
+# ---------------------------------------------------------------------------
+
+
+def init_bank_state(ls, *, n_tenants, k, chunk=2048, salts=0, host_id=None,
+                    evict_every=1, backend=None) -> tuple[SamplerState, SamplerSpec]:
+    """A stacked bank of ``n_tenants`` independent multi-l sampler instances.
+
+    Leaves gain a leading tenant axis: table leaves are [T, L, capacity],
+    summaries [T, L, k+1], ``n_seen`` [T] (every tenant is its own stream
+    with its own element-id positions), ``salt`` [T] (``salts`` may be one
+    int shared by all tenants or a per-tenant sequence — per-tenant salts
+    decorrelate the tenants' key randomness, shared salts keep each tenant
+    bit-identical to a standalone sampler built with that salt).  ``l`` stays
+    [L]: the grid is shared bank-wide (static shapes are what make the one
+    stacked dispatch possible).
+    """
+    if evict_every < 1:
+        raise ValueError(f"evict_every must be >= 1, got {evict_every}")
+    if n_tenants < 1:
+        raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+    ls = np.asarray(ls, np.float32)
+    T, L = int(n_tenants), len(ls)
+    salts_arr = np.broadcast_to(np.asarray(salts, np.uint32), (T,)).copy()
+    capacity = k + evict_every * chunk
+    table = VZ.TableState(
+        keys=jnp.full((T, L, capacity), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((T, L, capacity), jnp.float32),
+        kb=jnp.full((T, L, capacity), jnp.inf, jnp.float32),
+        seed=jnp.full((T, L, capacity), jnp.inf, jnp.float32),
+        tau=jnp.full((T, L), jnp.inf, jnp.float32),
+        step=jnp.zeros((T, L), jnp.int32),
+        overflow=jnp.zeros((T, L), jnp.int32),
+    )
+    state = SamplerState(
+        table=table,
+        n_seen=jnp.zeros((T,), jnp.int32),
+        l=jnp.asarray(ls),
+        salt=jnp.asarray(salts_arr),
+        bk_keys=jnp.full((T, L, k + 1), EMPTY, dtype=jnp.int32),
+        bk_seeds=jnp.full((T, L, k + 1), jnp.inf, jnp.float32),
+    )
+    return state, SamplerSpec(kind="continuous", k=k, chunk=chunk,
+                              host_id=host_id, evict_every=evict_every,
+                              backend=backend)
+
+
+def _mask_tenants(active, new, old):
+    """Per-leaf select: tenants with ``active[t]`` take the updated leaf row,
+    the rest keep their previous state bit-for-bit (their dispatch lane ran
+    on an EMPTY padding chunk whose results are discarded here)."""
+    sel = lambda n, o: jnp.where(
+        active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _update_bank_impl(state: SamplerState, keys, weights, active,
+                      spec: SamplerSpec) -> SamplerState:
+    """One bank tick: ONE chunk per tenant, every tenant's L lanes advanced by
+    a single vmapped dispatch of the fused multi-l chunk step.
+
+    ``keys``/``weights`` are [T, chunk] (EMPTY/0 rows for inactive tenants),
+    ``active`` is a [T] bool mask.  Inactive tenants' lanes still flow through
+    the vmapped compute (static shapes) but their state — table, summaries
+    AND stream position — passes through unchanged, so a tenant's trajectory
+    depends only on ITS chunk sequence: each tenant stays bit-identical to a
+    standalone ``MultiSampler`` fed the same chunks (property-tested in
+    tests/test_serving.py).
+    """
+    cap_bk = state.bk_keys.shape[-1]
+    bkk0, bks0 = jax.vmap(jax.vmap(VZ.summary_to_keysorted))(
+        state.bk_keys, state.bk_seeds)
+
+    def tenant_step(table, bkk, bks, pos, ck, cw, salt):
+        return _multi_chunk_step(table, bkk, bks, pos, ck, cw, state.l, salt,
+                                 spec)
+
+    table, bkk, bks, pos = jax.vmap(tenant_step)(
+        state.table, bkk0, bks0, state.n_seen, keys, weights, state.salt)
+    bk_keys, bk_seeds = jax.vmap(jax.vmap(
+        lambda kk, ss: VZ.summary_from_keysorted(kk, ss, cap_bk)))(bkk, bks)
+
+    table = _mask_tenants(active, table, state.table)
+    bk_keys = _mask_tenants(active, bk_keys, state.bk_keys)
+    bk_seeds = _mask_tenants(active, bk_seeds, state.bk_seeds)
+    pos = jnp.where(active, pos, state.n_seen)
+    return SamplerState(table, pos, state.l, state.salt, bk_keys, bk_seeds)
+
+
+_update_bank_donated = functools.partial(jax.jit, static_argnames=("spec",),
+                                         donate_argnums=(0,))(_update_bank_impl)
+_update_bank_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_bank_impl)
+
+
+def update_bank(state: SamplerState, keys, weights, active, spec: SamplerSpec,
+                *, donate: bool = True) -> SamplerState:
+    """Advance every active tenant's l-grid by one chunk: one device dispatch
+    for the whole bank.  Same donation contract as ``update``/``update_multi``.
+    """
+    fn = _update_bank_donated if donate else _update_bank_fresh
+    return fn(state, jnp.asarray(keys), jnp.asarray(weights),
+              jnp.asarray(active), spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _final_evict_bank(table, ls, salts, spec: SamplerSpec):
+    return jax.vmap(lambda t, s: jax.vmap(
+        lambda tab, l: VZ.evict_table(tab, k=spec.k, l=l, salt=s,
+                                      max_evict=spec.evict_every * spec.chunk)
+    )(t, ls))(table, salts)
 
 
 # ---------------------------------------------------------------------------
@@ -779,3 +906,323 @@ class MultiSampler:
         """Device-resident sketch bytes + host remainder bytes."""
         leaves = jax.tree.leaves(self.state)
         return sum(int(np.asarray(x).nbytes) for x in leaves) + self._rem.nbytes
+
+
+class _PendingQueue:
+    """Per-tenant ingest staging: an O(backlog) list of arrays with O(1)
+    appends; ``take``/``peek`` concatenate lazily.  Unlike _RemainderBuffer
+    this may hold many chunks — the bank drains one chunk per tick."""
+
+    def __init__(self):
+        self._keys: list[np.ndarray] = []
+        self._weights: list[np.ndarray] = []
+        self.size = 0
+
+    def push(self, keys: np.ndarray, weights) -> None:
+        """``keys`` must already be normalized (int32, validated)."""
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        if weights is None:
+            weights = np.ones(len(keys), np.float32)
+        weights = np.asarray(weights, np.float32).reshape(-1)
+        if len(weights) != len(keys):
+            raise ValueError(
+                f"weights length {len(weights)} != keys length {len(keys)}")
+        if len(keys):
+            self._keys.append(keys)
+            self._weights.append(weights)
+            self.size += len(keys)
+
+    def _compact(self):
+        if len(self._keys) > 1:
+            self._keys = [np.concatenate(self._keys)]
+            self._weights = [np.concatenate(self._weights)]
+
+    def take(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Pop exactly the oldest ``n`` elements (requires size >= n)."""
+        if n > self.size:
+            raise ValueError(f"take({n}) from queue of {self.size}")
+        self._compact()
+        k, w = self._keys[0], self._weights[0]
+        self._keys = [k[n:]] if len(k) > n else []
+        self._weights = [w[n:]] if len(w) > n else []
+        self.size -= n
+        return k[:n], w[:n]
+
+    def peek_all(self) -> tuple[np.ndarray, np.ndarray]:
+        """Everything queued, without popping."""
+        self._compact()
+        if not self._keys:
+            return np.zeros(0, np.int32), np.zeros(0, np.float32)
+        return self._keys[0], self._weights[0]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self._keys) + sum(
+            a.nbytes for a in self._weights)
+
+
+class TenantBank:
+    """N resident multi-l sampler instances advanced as ONE stacked pytree.
+
+    The multi-tenant analogue of ``MultiSampler``: ``observe(tenant, ...)``
+    stages elements in per-tenant host queues; each ``tick()`` drains one
+    chunk from EVERY tenant with a full chunk buffered and advances all of
+    their l-grids in a single vmapped/jitted device dispatch with donated
+    buffers.  Sub-chunk remainders stay queued (the per-tenant analogue of
+    MultiSampler's remainder buffer) and are folded in — padded, without
+    consuming real stream positions — only at finalize/state_dict time.
+
+    Per-tenant bit-identity contract (tests/test_serving.py): tenant ``t`` of
+    a bank fed some chunk sequence finalizes bit-identically (tables, taus,
+    bottom-(k+1) summaries, query answers) to a standalone ``MultiSampler``
+    constructed with ``salt=salts[t]`` and fed the same sequence — the bank
+    is purely a dispatch-batching layout, not a statistical change.
+
+    Checkpointing: ``state_dict`` is one flat dict of [T, ...]-stacked
+    fixed-size arrays (saves through checkpoint.manager like any pytree);
+    ``tenant_state_dict(t)`` slices out one tenant in the exact
+    ``MultiSampler.state_dict`` format, and ``load_tenant_state_dict(t, d)``
+    splices one back in — the join/leave handoff surface (see
+    checkpoint.manager.restore_slice for restoring a single tenant without
+    an example bank).
+    """
+
+    def __init__(self, ls, *, n_tenants, k, chunk=2048, salts=0, host_id=None,
+                 evict_every=1, backend=None):
+        self.ls = tuple(float(l) for l in ls)
+        self.n_tenants = int(n_tenants)
+        self.state, self.spec = init_bank_state(
+            ls, n_tenants=n_tenants, k=k, chunk=chunk, salts=salts,
+            host_id=host_id, evict_every=evict_every, backend=backend)
+        self._queues = [_PendingQueue() for _ in range(self.n_tenants)]
+        self._n_real = np.zeros(self.n_tenants, np.int64)
+
+    # -- ingestion ---------------------------------------------------------
+
+    def observe(self, tenant: int, keys, weights=None) -> None:
+        """Stage a batch of tenant ``tenant``'s stream (host arrays ok); the
+        device state advances at the next ``tick``."""
+        keys = normalize_keys(keys)
+        self._n_real[tenant] += len(keys)
+        self._queues[tenant].push(keys, weights)
+
+    def backlog_chunks(self) -> np.ndarray:
+        """Full chunks currently buffered, per tenant."""
+        return np.asarray([q.size // self.spec.chunk for q in self._queues],
+                          np.int64)
+
+    def tick(self) -> int:
+        """One stacked dispatch: every tenant with >= 1 full chunk buffered
+        advances by exactly one chunk (inherently fair — no tenant can take
+        more than one chunk per tick).  Returns the number of active tenants
+        (0 = nothing to do, no dispatch issued).  The dispatch is enqueued
+        asynchronously — this never blocks on device compute."""
+        chunk = self.spec.chunk
+        active = np.asarray([q.size >= chunk for q in self._queues])
+        if not active.any():
+            return 0
+        K = np.full((self.n_tenants, chunk), _EMPTY_INT, np.int32)
+        W = np.zeros((self.n_tenants, chunk), np.float32)
+        for t in np.nonzero(active)[0]:
+            K[t], W[t] = self._queues[t].take(chunk)
+        self.state = update_bank(self.state, K, W, active, self.spec)
+        return int(active.sum())
+
+    def drain(self) -> int:
+        """Tick until no tenant holds a full chunk; returns ticks issued."""
+        ticks = 0
+        while self.tick():
+            ticks += 1
+        return ticks
+
+    # -- extraction --------------------------------------------------------
+
+    def flushed_state(self) -> SamplerState:
+        """Bank state with every queued element folded in: full chunks are
+        drained for real, then each non-empty sub-chunk remainder is EMPTY/0
+        padded to one chunk and applied WITHOUT donating (live state and
+        queues untouched by the padding pass) — exactly the padding a
+        standalone MultiSampler applies at finalize."""
+        self.drain()
+        chunk = self.spec.chunk
+        active = np.asarray([q.size > 0 for q in self._queues])
+        if not active.any():
+            return self.state
+        K = np.full((self.n_tenants, chunk), _EMPTY_INT, np.int32)
+        W = np.zeros((self.n_tenants, chunk), np.float32)
+        for t in np.nonzero(active)[0]:
+            kk, ww = self._queues[t].peek_all()
+            K[t, : len(kk)], W[t, : len(ww)] = kk, ww
+        return update_bank(self.state, K, W, active, self.spec, donate=False)
+
+    def finalize_all(self) -> list[dict[float, SampleResult]]:
+        """Every tenant's per-lane SampleResults in ONE device extraction
+        (vmapped final eviction + a single device_get of the stacked table),
+        indexed ``out[tenant][l]``."""
+        st = self.flushed_state()
+        table = st.table
+        if self.spec.evict_every > 1:
+            table = _final_evict_bank(table, st.l, st.salt, self.spec)
+        tables = jax.device_get(table)
+        out = []
+        for t in range(self.n_tenants):
+            per = {}
+            for j, l in enumerate(self.ls):
+                tab = jax.tree.map(lambda a: a[t, j], tables)
+                per[l] = VZ._to_result(tab, l=l, kind=self.spec.kind,
+                                       tau=float(tab.tau))
+            out.append(per)
+        return out
+
+    def finalize_some(self, tenants) -> dict[int, dict[float, SampleResult]]:
+        """A SUBSET of tenants' per-lane SampleResults, extracting (and
+        host-materializing) only those rows of the bank — the serving-tier
+        fast path when a query batch touches few of many tenants (the whole
+        bank still flushes; only the device→host copy and the per-lane
+        result construction are restricted)."""
+        st = self.flushed_state()
+        idx = np.asarray(sorted({int(t) for t in tenants}), np.int64)
+        table = jax.tree.map(lambda a: a[idx], st.table)
+        if self.spec.evict_every > 1:
+            table = _final_evict_bank(table, st.l, st.salt[idx], self.spec)
+        tables = jax.device_get(table)
+        out: dict[int, dict[float, SampleResult]] = {}
+        for i, t in enumerate(idx.tolist()):
+            per = {}
+            for j, l in enumerate(self.ls):
+                tab = jax.tree.map(lambda a: a[i, j], tables)
+                per[l] = VZ._to_result(tab, l=l, kind=self.spec.kind,
+                                       tau=float(tab.tau))
+            out[t] = per
+        return out
+
+    def finalize(self, tenant: int) -> dict[float, SampleResult]:
+        """One tenant's per-lane SampleResults (subset extraction; use
+        ``finalize_all`` when you need every tenant)."""
+        return self.finalize_some([tenant])[tenant]
+
+    def n_observed(self, tenant: int) -> int:
+        return int(self._n_real[tenant])
+
+    # -- serialization (O(T * k * |ls| + T * chunk)) -------------------------
+
+    def _remainders(self) -> dict:
+        """Fixed-shape per-tenant remainder payload (full chunks drained
+        first so every queue fits one [chunk] row)."""
+        self.drain()
+        chunk = self.spec.chunk
+        rk = np.zeros((self.n_tenants, chunk), np.int32)
+        rw = np.zeros((self.n_tenants, chunk), np.float32)
+        rl = np.zeros(self.n_tenants, np.int32)
+        for t, q in enumerate(self._queues):
+            kk, ww = q.peek_all()
+            rk[t, : len(kk)], rw[t, : len(ww)] = kk, ww
+            rl[t] = len(kk)
+        return {"rem_keys": rk, "rem_weights": rw, "rem_len": rl}
+
+    def state_dict(self) -> dict:
+        """Flat dict of [T, ...]-stacked arrays, leaf-for-leaf parallel to
+        ``MultiSampler.state_dict`` (same key names, one extra leading tenant
+        axis on per-tenant leaves) so ``checkpoint.manager.restore_slice``
+        can restore any single tenant against a MultiSampler-shaped example.
+        Drains queued full chunks first (they belong in the checkpoint)."""
+        rem = self._remainders()  # drains full chunks INTO the state first
+        st = jax.device_get(self.state)
+        t = st.table
+        d = {
+            "keys": t.keys, "counts": t.counts, "kb": t.kb, "seed": t.seed,
+            "tau": t.tau, "step": t.step, "overflow": t.overflow,
+            "bk_keys": st.bk_keys, "bk_seeds": st.bk_seeds,
+            "n_seen": np.asarray(st.n_seen, np.int32),
+            "n_real": self._n_real.copy(),
+            "ls": np.asarray(st.l),
+            "salt": np.asarray(st.salt, np.uint32),
+        }
+        d.update(rem)
+        return d
+
+    def tenant_state_dict(self, tenant: int) -> dict:
+        """One tenant, in the exact ``MultiSampler.state_dict`` format —
+        loads into a standalone ``MultiSampler``/``StreamStatsService`` (the
+        leave/handoff path) bit-for-bit."""
+        d = self.state_dict()
+        shared = {"ls"}
+        return {k: (v if k in shared else v[tenant]) for k, v in d.items()}
+
+    def load_tenant_state_dict(self, tenant: int, d: dict) -> None:
+        """Splice a ``MultiSampler``-format blob into one bank row (the join
+        path).  Validated by round-tripping through a scratch MultiSampler
+        loader (same capacity/layout canonicalization)."""
+        probe = MultiSampler(self.ls, k=self.spec.k, chunk=self.spec.chunk,
+                             evict_every=self.spec.evict_every)
+        probe.load_state_dict(d)
+        ps = jax.device_get(probe.state)
+        at = lambda arr, new: jnp.asarray(np.asarray(arr)).at[tenant].set(new)
+        table = VZ.TableState(
+            keys=at(self.state.table.keys, ps.table.keys),
+            counts=at(self.state.table.counts, ps.table.counts),
+            kb=at(self.state.table.kb, ps.table.kb),
+            seed=at(self.state.table.seed, ps.table.seed),
+            tau=at(self.state.table.tau, ps.table.tau),
+            step=at(self.state.table.step, ps.table.step),
+            overflow=at(self.state.table.overflow, ps.table.overflow),
+        )
+        self.state = SamplerState(
+            table=table,
+            n_seen=at(self.state.n_seen, ps.n_seen),
+            l=self.state.l,
+            salt=at(self.state.salt, ps.salt),
+            bk_keys=at(self.state.bk_keys, ps.bk_keys),
+            bk_seeds=at(self.state.bk_seeds, ps.bk_seeds),
+        )
+        self._queues[tenant] = _PendingQueue()
+        self._queues[tenant].push(
+            np.asarray(d["rem_keys"], np.int32)[: int(d["rem_len"])],
+            np.asarray(d["rem_weights"], np.float32)[: int(d["rem_len"])])
+        self._n_real[tenant] = int(d["n_real"]) if "n_real" in d else 0
+
+    def load_state_dict(self, d: dict) -> None:
+        T = self.n_tenants
+        if np.asarray(d["keys"]).shape[0] != T:
+            raise ValueError(
+                f"bank blob has {np.asarray(d['keys']).shape[0]} tenants, "
+                f"bank configured with {T}")
+        if np.asarray(d["keys"]).shape[-1] != self.state.capacity:
+            raise ValueError(
+                f"state blob table capacity {np.asarray(d['keys']).shape[-1]} "
+                f"!= configured capacity {self.state.capacity} "
+                "(k + evict_every*chunk) — restore with the same "
+                "(k, chunk, evict_every) the blob was written with")
+        # same per-lane layout re-canonicalization as MultiSampler: stable
+        # key sort per (tenant, lane) row is a no-op on current-format blobs
+        blob_keys = np.asarray(d["keys"], np.int32)
+        ord_ = np.argsort(blob_keys, axis=-1, kind="stable")
+        tab = lambda name, dt: jnp.asarray(
+            np.take_along_axis(np.asarray(d[name], dt), ord_, axis=-1))
+        table = VZ.TableState(
+            keys=tab("keys", np.int32), counts=tab("counts", np.float32),
+            kb=tab("kb", np.float32), seed=tab("seed", np.float32),
+            tau=jnp.asarray(d["tau"]),
+            step=jnp.asarray(d["step"]), overflow=jnp.asarray(d["overflow"]),
+        )
+        self.state = SamplerState(
+            table=table,
+            n_seen=jnp.asarray(d["n_seen"], jnp.int32),
+            l=jnp.asarray(d["ls"], jnp.float32),
+            salt=jnp.asarray(d["salt"], jnp.uint32),
+            bk_keys=jnp.asarray(d["bk_keys"], jnp.int32),
+            bk_seeds=jnp.asarray(d["bk_seeds"], jnp.float32),
+        )
+        self._queues = [_PendingQueue() for _ in range(T)]
+        rl = np.asarray(d["rem_len"], np.int32)
+        for t in range(T):
+            self._queues[t].push(
+                np.asarray(d["rem_keys"], np.int32)[t, : rl[t]],
+                np.asarray(d["rem_weights"], np.float32)[t, : rl[t]])
+        self._n_real = np.asarray(d["n_real"], np.int64).copy()
+
+    @property
+    def resident_bytes(self) -> int:
+        leaves = jax.tree.leaves(self.state)
+        return sum(int(np.asarray(x).nbytes) for x in leaves) + sum(
+            q.nbytes for q in self._queues)

@@ -9,6 +9,21 @@ Demonstrates (on host devices) the production story:
      and training resumes bit-continuously w.r.t. the data stream (cursor)
      and statistically-continuously w.r.t. the sketches (mergeable state).
 
+``run_stats_handoff_demo`` is the serving-plane analogue — the
+**join/leave surface** for the sharded stats tier (ROADMAP):
+
+  * leave: a tenant departs a ``MultiTenantStats`` bank by slicing its row
+    out of the bank's stacked checkpoint (``checkpoint.manager
+    .restore_slice``) into a standalone ``StreamStatsService`` —
+    bit-identical answers, no other tenant's state leaves disk;
+  * join: a standalone service's state splices INTO a resident bank via
+    ``MultiTenantStats.load_tenant_state_dict`` (rebalancing onto a
+    serving replica).
+
+A sharded tier moves tenants between replicas with exactly these two
+operations; the scheduler (stats.scheduler) needs no changes because the
+bank's tenant axis is position-addressed.
+
 Run (subprocess-isolated, 8 host devices):
     PYTHONPATH=src python -m repro.launch.elastic
 """
@@ -101,7 +116,58 @@ def run_elastic_demo(steps_before=6, steps_after=6, batch=8, seq=64, verbose=Tru
     return losses
 
 
+def run_stats_handoff_demo(n_tenants=4, n_elems=2000, verbose=True):
+    """Tenant leave/join between a stacked bank and standalone services.
+
+    Checkpoints a ``MultiTenantStats`` bank, restores ONE tenant's row into
+    a fresh ``StreamStatsService`` (leave), verifies the answer is
+    bit-identical, then splices a standalone service back into a second
+    bank (join) and verifies again.  Returns the per-tenant estimates.
+    """
+    from ..core import freqfns  # noqa: F401  (query surface of the demo)
+    from ..stats.service import MultiTenantStats, StatsConfig, StreamStatsService
+
+    cfg = StatsConfig(k=128, ls=(1.0, 8.0), chunk=256)
+    rng = np.random.default_rng(11)
+    streams = [(rng.zipf(1.3, size=n_elems) % 500).astype(np.int64)
+               for _ in range(n_tenants)]
+    bank = MultiTenantStats(cfg, n_tenants=n_tenants)
+    for t in range(n_tenants):
+        bank.observe(t, streams[t])
+    bank.drain()
+    estimates = [bank.query_cap(t, 8.0) for t in range(n_tenants)]
+
+    with tempfile.TemporaryDirectory() as d:
+        bank.save_checkpoint(d, step=1)
+
+        # leave: slice tenant 2 out of the bank checkpoint
+        leaver = StreamStatsService(cfg)
+        example = leaver.state_dict()
+        example.pop("exact_ok")  # bank rows are 1-pass sketch state
+        blob = ckpt.restore_slice(d, 1, example, index=2)
+        blob["exact_ok"] = np.bool_(False)
+        leaver.load_state_dict(blob)
+        assert leaver.campaign_forecast(8.0) == estimates[2], \
+            "leave handoff changed the tenant's answer"
+
+        # join: splice a standalone service into a fresh bank's slot 0
+        joiner = StreamStatsService(cfg)
+        joiner.observe(streams[1])
+        bank2 = MultiTenantStats(cfg, n_tenants=n_tenants)
+        blob2 = joiner.state_dict()
+        blob2.pop("exact_ok")
+        bank2.load_tenant_state_dict(0, blob2)
+        assert bank2.query_cap(0, 8.0) == estimates[1], \
+            "join handoff changed the tenant's answer"
+    if verbose:
+        print(f"[elastic] stats handoff OK — leave (bank->service) and "
+              f"join (service->bank) both bit-identical across "
+              f"{n_tenants} tenants")
+    return estimates
+
+
 if __name__ == "__main__":
     ls = run_elastic_demo()
     print("[elastic] OK — continuous training across mesh change:",
           [round(x, 3) for x in ls])
+    run_stats_handoff_demo()

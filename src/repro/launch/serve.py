@@ -1,9 +1,14 @@
-"""Serving launcher: continuous-batched decode with prefill admission.
+"""LM serving launcher: continuous-batched decode with prefill admission.
 
 A miniature production server loop: requests arrive with prompts, get
 prefilled into free KV-cache slots, and all active slots decode together
 every step (continuous batching).  The same prefill/decode functions lower
 at 512 chips in the dry-run; here they run on CPU with a smoke config.
+
+This is the *model* serving loop.  The *statistics* serving plane — the
+paper's application tier — lives in ``launch.stats_serve`` /
+``stats.scheduler``, which apply the same continuous-batching idea to
+multi-tenant sketch banks (admission queues, coalesced dispatch, overlap).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 6 --max-new 24
 """

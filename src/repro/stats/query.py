@@ -72,12 +72,15 @@ class Query:
     """One (statistic, segment, lane) request.
 
     ``l=None`` lets the owner (StreamStatsService.query_batch) pick the lane
-    from the statistic; the engine itself requires it resolved.
+    from the statistic; the engine itself requires it resolved.  ``l`` is
+    any hashable lane key of the engine's sketch dict — a float cap
+    parameter for a single service, a ``(tenant, l)`` tuple for a stacked
+    multi-tenant engine (stats.service.MultiTenantStats).
     """
 
     fn: freqfns.FreqFn
     segment: object = None
-    l: float | None = None
+    l: object | None = None
 
 
 @dataclasses.dataclass
@@ -136,10 +139,17 @@ def _next_pow2(n: int) -> int:
 
 
 class _Lane:
-    """Host-side view of one materialized sketch + its per-lane caches."""
+    """Host-side view of one materialized sketch + its per-lane caches.
 
-    def __init__(self, l: float, res: SampleResult):
-        self.l = float(l)
+    ``key`` is the engine's lane address (the sketch-dict key — a float l,
+    or any hashable such as a (tenant, l) tuple); ``l`` is the numeric cap
+    parameter reported back in BatchResult.lanes (the dict key when numeric,
+    else the sketch's own l)."""
+
+    def __init__(self, key, res: SampleResult):
+        self.key = float(key) if isinstance(key, (int, float)) else key
+        self.l = (float(key) if isinstance(key, (int, float))
+                  else float(res.l))
         self.res = res
         self.n = len(res.keys)
         self.counts = np.asarray(res.counts, np.float64)
@@ -203,7 +213,7 @@ class QueryEngine:
         if not sketches:
             raise ValueError("QueryEngine needs at least one sketch lane")
         self.lanes = [_Lane(l, res) for l, res in sketches.items()]
-        self._lane_of = {lane.l: i for i, lane in enumerate(self.lanes)}
+        self._lane_of = {lane.key: i for i, lane in enumerate(self.lanes)}
         self.K = max(1, max(lane.n for lane in self.lanes))
         L = len(self.lanes)
         counts = np.zeros((L, self.K), np.float64)
@@ -248,16 +258,22 @@ class QueryEngine:
     def ls(self) -> tuple[float, ...]:
         return tuple(lane.l for lane in self.lanes)
 
+    @property
+    def lane_keys(self) -> tuple:
+        return tuple(lane.key for lane in self.lanes)
+
     def _lane_index(self, l) -> int:
         if l is None:
             if len(self.lanes) == 1:
                 return 0
             raise ValueError(
-                f"query needs an explicit lane l from {sorted(self._lane_of)} "
+                f"query needs an explicit lane key from {list(self._lane_of)} "
                 "(StreamStatsService.query_batch resolves lanes automatically)")
-        i = self._lane_of.get(float(l))
+        key = float(l) if isinstance(l, (int, float)) else l
+        i = self._lane_of.get(key)
         if i is None:
-            raise KeyError(f"no sketch lane l={l}; have {sorted(self._lane_of)}")
+            raise KeyError(
+                f"no sketch lane {l!r}; have {list(self._lane_of)}")
         return i
 
     def _ensure_bank_capacity(self, n_queries: int) -> None:
@@ -371,16 +387,19 @@ class QueryEngine:
         self._plan_cache[cache_key] = plan
         return plan
 
-    def query_batch(self, queries) -> BatchResult:
-        """Answer every query in one jitted dispatch + one host reduction.
+    def query_batch_async(self, queries) -> "PendingBatch":
+        """Enqueue the device dispatch for a query batch WITHOUT waiting on
+        it; the returned handle's ``result()`` performs the host reduction.
 
-        ``queries``: iterable of Query or (fn, segment[, l]) tuples.
+        This is the overlap hook of the serving plane (stats.scheduler): the
+        per-key estimate matrix stays a device future between the two calls,
+        so other work — e.g. the next ingest tick's dispatch — can be
+        enqueued behind it before anything blocks on device compute.
         """
         queries = [q if isinstance(q, Query) else Query(*q) for q in queries]
         if not queries:
             raise ValueError("empty query batch")
         ints, floats, order = self._plan(queries)
-        Q = len(queries)
         segbank, fbank, fpbank = self._banks()
         use_tabs = bool(ints[4].any())
         with _enable_x64():
@@ -388,7 +407,19 @@ class QueryEngine:
                 self._counts, self._valid, self._phi,
                 segbank, fbank, fpbank, jnp.asarray(ints), jnp.asarray(floats),
                 use_phi=self._has_invprob, use_tabs=use_tabs)
-        per_key = np.asarray(per_key)
+        return PendingBatch(self, per_key, ints, order, len(queries))
+
+    def query_batch(self, queries) -> BatchResult:
+        """Answer every query in one jitted dispatch + one host reduction.
+
+        ``queries``: iterable of Query or (fn, segment[, l]) tuples.
+        """
+        return self.query_batch_async(queries).result()
+
+    def _reduce(self, per_key_dev, ints, order, Q) -> BatchResult:
+        """The host half of a batch: sync on the per-key estimate matrix and
+        run the scalar-path-identical f64 reductions."""
+        per_key = np.asarray(per_key_dev)
         lane_idx = ints[0, :Q]
         # the scalar path's reduction: f64 np.sum over the lane's true sample
         # length (identical pairwise grouping => identical bits); rows of one
@@ -420,3 +451,28 @@ class QueryEngine:
             n_keys=inv_nk,
             lanes=lanes,
         )
+
+
+class PendingBatch:
+    """A dispatched-but-unreduced query batch: the device future plus the
+    host plan needed to finish it.  ``result()`` blocks on the device value
+    (once) and runs the bit-identity-preserving host reductions; repeated
+    calls return the cached BatchResult."""
+
+    def __init__(self, engine: QueryEngine, per_key_dev, ints, order, n):
+        self._engine = engine
+        self._per_key = per_key_dev
+        self._ints = ints
+        self._order = order
+        self._n = n
+        self._result: BatchResult | None = None
+
+    def __len__(self) -> int:
+        return self._n
+
+    def result(self) -> BatchResult:
+        if self._result is None:
+            self._result = self._engine._reduce(
+                self._per_key, self._ints, self._order, self._n)
+            self._per_key = None  # drop the device buffer
+        return self._result

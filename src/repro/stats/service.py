@@ -74,7 +74,30 @@ from ..checkpoint import manager as ckpt_manager
 from ..core import freqfns, incremental
 from ..core.samplers import SampleResult
 from ..core.segments import EMPTY
-from .query import BatchResult, Query, QueryEngine
+from .query import BatchResult, PendingBatch, Query, QueryEngine
+
+# the paper's guidance (preceding §6.1): a geometric l-grid with ratio
+# sqrt(2)^2 = 2 keeps every T within sqrt(2) of a lane in log space
+_L_GRID_FACTOR = 0.5 * math.log(2.0)  # log(sqrt(2))
+
+
+def _nearest_lane(ls, T: float) -> tuple[float, float]:
+    """(nearest-in-log lane l, log-space distance) for a cap parameter T."""
+    ls = np.asarray(ls, dtype=np.float64)
+    dist = np.abs(np.log(ls) - math.log(max(T, 1e-9)))
+    j = int(np.argmin(dist))
+    return float(ls[j]), float(dist[j])
+
+
+def _grid_warning(T: float, l: float, dist: float) -> str:
+    return (
+        f"cap T={T:g} is {math.exp(dist):.2f}x away from the "
+        f"nearest configured lane l={l:g} — beyond the paper's "
+        "sqrt(2) log-space factor, so the estimate's CV degrades with "
+        "the disparity max(T/l, l/T) (Thm 5.4).  Densify StatsConfig.ls "
+        "toward a geometric grid of ratio <= 2 over the queried T range "
+        "(and extend its ends if T falls outside).  "
+        "(warning shown once per service)")
 
 
 @dataclasses.dataclass
@@ -181,29 +204,17 @@ class StreamStatsService:
 
     # -- queries -------------------------------------------------------------
 
-    # the paper's guidance (preceding §6.1): a geometric l-grid with ratio
-    # sqrt(2)^2 = 2 keeps every T within sqrt(2) of a lane in log space
-    _L_GRID_FACTOR = 0.5 * math.log(2.0)  # log(sqrt(2))
+    _L_GRID_FACTOR = _L_GRID_FACTOR  # see module level (shared with the bank)
 
     def pick_l(self, T: float) -> float:
         cached = self._pick_l_cache.get(T)
         if cached is not None:
             return cached
-        ls = np.asarray(self.config.ls, dtype=np.float64)
-        dist = np.abs(np.log(ls) - math.log(max(T, 1e-9)))
-        j = int(np.argmin(dist))
-        if dist[j] > self._L_GRID_FACTOR + 1e-9 and not self._l_grid_warned:
+        l, dist = _nearest_lane(self.config.ls, T)
+        if dist > self._L_GRID_FACTOR + 1e-9 and not self._l_grid_warned:
             self._l_grid_warned = True
-            warnings.warn(
-                f"cap T={T:g} is {math.exp(float(dist[j])):.2f}x away from the "
-                f"nearest configured lane l={ls[j]:g} — beyond the paper's "
-                "sqrt(2) log-space factor, so the estimate's CV degrades with "
-                "the disparity max(T/l, l/T) (Thm 5.4).  Densify StatsConfig.ls "
-                "toward a geometric grid of ratio <= 2 over the queried T range "
-                "(and extend its ends if T falls outside).  "
-                "(warning shown once per service)",
-                RuntimeWarning, stacklevel=2)
-        l = float(ls[j])
+            warnings.warn(_grid_warning(T, l, dist), RuntimeWarning,
+                          stacklevel=2)
         self._pick_l_cache[T] = l
         return l
 
@@ -475,6 +486,237 @@ class StreamStatsService:
             step = ckpt_manager.latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+        tree = ckpt_manager.restore(ckpt_dir, step, self.state_dict())
+        self.load_state_dict(tree)
+        return step
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant serving plane: one stacked bank, one coalesced query engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuery:
+    """One (tenant, statistic, segment[, lane]) request against a bank."""
+
+    tenant: int
+    fn: freqfns.FreqFn
+    segment: object = None
+    l: float | None = None
+
+
+class MultiTenantStats:
+    """N independent per-tenant stat services served from ONE device plane.
+
+    The serving-tier face of ``core.incremental.TenantBank`` (DESIGN.md §10):
+    every tenant keeps its own l-grid of fixed-k sketches, but all
+    ``n_tenants * |ls|`` sketches live as one stacked pytree — a single
+    vmapped/jitted dispatch per ``tick`` advances every tenant with a full
+    chunk buffered, and a single ``QueryEngine`` over ``(tenant, l)`` lane
+    keys answers a query batch that mixes tenants in ONE device dispatch.
+
+    Per-tenant answers are bit-identical to running ``n_tenants`` standalone
+    ``StreamStatsService`` instances over the same streams (property-tested
+    in tests/test_serving.py) — the bank changes the dispatch count, not one
+    bit of any tenant's sample or estimate.
+
+    Snapshot semantics: queries are answered from the engine built at the
+    last ``refresh()`` — the materialized sketches as of that point.  The
+    continuous-batching scheduler (stats.scheduler) controls the refresh
+    cadence explicitly (``auto_refresh=False``) so ingest dispatch for tick
+    t+1 can overlap query evaluation against the tick-t snapshot; direct
+    callers get refresh-on-demand by default.
+    """
+
+    def __init__(self, config: StatsConfig, *, n_tenants: int,
+                 tenant_salts=None):
+        self.config = config
+        self.n_tenants = int(n_tenants)
+        salts = config.salt if tenant_salts is None else tenant_salts
+        self._bank = incremental.TenantBank(
+            config.ls, n_tenants=n_tenants, k=config.k, chunk=config.chunk,
+            salts=salts, host_id=config.host_id,
+            evict_every=config.evict_every, backend=config.ingest_backend)
+        self._engine: QueryEngine | None = None
+        self._engine_tenants: set[int] | None = None  # None = all tenants
+        self._stale = True
+        self._l_grid_warned = False
+        self._pick_l_cache: dict[float, float] = {}
+
+    # -- ingestion ---------------------------------------------------------
+
+    def observe(self, tenant: int, keys, weights=None) -> None:
+        """Stage stream elements for one tenant (advanced at the next tick)."""
+        self._bank.observe(tenant, keys, weights)
+        self._stale = True
+
+    def tick(self) -> int:
+        """One stacked ingest dispatch (every tenant with a full buffered
+        chunk advances by one chunk); returns the active-tenant count."""
+        n = self._bank.tick()
+        if n:
+            self._stale = True
+        return n
+
+    def drain(self) -> int:
+        n = self._bank.drain()
+        if n:
+            self._stale = True
+        return n
+
+    def backlog_chunks(self) -> np.ndarray:
+        return self._bank.backlog_chunks()
+
+    def n_observed(self, tenant: int) -> int:
+        return self._bank.n_observed(tenant)
+
+    # -- query plane -------------------------------------------------------
+
+    @property
+    def stale(self) -> bool:
+        """True when elements were observed/ticked since the last refresh."""
+        return self._stale or self._engine is None
+
+    @property
+    def has_engine(self) -> bool:
+        return self._engine is not None
+
+    def refresh(self, tenants=None) -> QueryEngine:
+        """(Re)build the coalesced query snapshot: ONE device extraction,
+        one engine over the (tenant, l) lanes.  This is the only query-plane
+        point that synchronizes with in-flight ingest dispatches — the
+        scheduler calls it at a controlled cadence.
+
+        ``tenants`` restricts the snapshot to a subset (the scheduler passes
+        the tenants of the admitted query batch): only those rows are copied
+        off device and materialized as engine lanes — the dominant refresh
+        cost when a batch touches few of many tenants.  Queries for a tenant
+        outside the subset trigger an automatic widening refresh (their
+        lanes then reflect the state at THAT point — per-tenant snapshot
+        ages can differ under a partial-refresh policy)."""
+        if tenants is None:
+            sketches = {(t, float(l)): res
+                        for t, per in enumerate(self._bank.finalize_all())
+                        for l, res in per.items()}
+            self._engine_tenants = None
+        else:
+            sub = self._bank.finalize_some(tenants)
+            sketches = {(t, float(l)): res
+                        for t, per in sub.items() for l, res in per.items()}
+            self._engine_tenants = set(sub)
+        self._engine = QueryEngine(sketches)
+        self._stale = False
+        return self._engine
+
+    def _ensure_engine(self, auto_refresh: bool, needed: set[int]) -> QueryEngine:
+        if self._engine is None or (auto_refresh and self._stale):
+            return self.refresh()
+        covered = self._engine_tenants
+        if covered is not None and not needed <= covered:
+            return self.refresh(tenants=covered | needed)
+        return self._engine
+
+    def pick_l(self, T: float) -> float:
+        cached = self._pick_l_cache.get(T)
+        if cached is not None:
+            return cached
+        l, dist = _nearest_lane(self.config.ls, T)
+        if dist > _L_GRID_FACTOR + 1e-9 and not self._l_grid_warned:
+            self._l_grid_warned = True
+            warnings.warn(_grid_warning(T, l, dist), RuntimeWarning,
+                          stacklevel=2)
+        self._pick_l_cache[T] = l
+        return l
+
+    def _resolve(self, q: TenantQuery) -> Query:
+        if not (0 <= q.tenant < self.n_tenants):
+            raise ValueError(
+                f"tenant {q.tenant} out of range [0, {self.n_tenants})")
+        l = q.l
+        if l is None:
+            kind = q.fn.kind
+            if kind in ("cap", "threshold"):
+                l = self.pick_l(q.fn.param)
+            elif kind == "distinct":
+                l = self.pick_l(1.0)
+            else:  # total / moment / log1p / custom: weight-proportional
+                l = max(self.config.ls)
+        return Query(q.fn, q.segment, (int(q.tenant), float(l)))
+
+    def resolve_queries(self, requests) -> list[Query]:
+        """Normalize (tenant, fn, segment[, l]) tuples / TenantQuery objects
+        into engine-addressed Query objects (lane key = (tenant, l))."""
+        qs = [r if isinstance(r, TenantQuery) else TenantQuery(*r)
+              for r in requests]
+        return [self._resolve(q) for q in qs]
+
+    def query_batch(self, requests, *, auto_refresh: bool = True) -> BatchResult:
+        """Answer a batch mixing tenants in one jitted device dispatch.
+
+        Each request is a ``TenantQuery`` or a ``(tenant, fn, segment[, l])``
+        tuple.  Answers (and diagnostics) are bit-identical to querying each
+        tenant's standalone service."""
+        return self.query_batch_async(
+            requests, auto_refresh=auto_refresh).result()
+
+    def query_batch_async(self, requests, *,
+                          auto_refresh: bool = True) -> PendingBatch:
+        """Enqueue the batch's device dispatch without blocking (see
+        QueryEngine.query_batch_async) — the scheduler's overlap hook."""
+        qs = self.resolve_queries(requests)
+        engine = self._ensure_engine(auto_refresh, {q.l[0] for q in qs})
+        return engine.query_batch_async(qs)
+
+    def query_cap(self, tenant: int, T: float, segment=None) -> float:
+        r = self.query_batch([TenantQuery(tenant, freqfns.cap(T), segment)])
+        return float(r.estimates[0])
+
+    def query_distinct(self, tenant: int, segment=None) -> float:
+        r = self.query_batch(
+            [TenantQuery(tenant, freqfns.distinct(), segment)])
+        return float(r.estimates[0])
+
+    def query_total(self, tenant: int, segment=None) -> float:
+        r = self.query_batch([TenantQuery(tenant, freqfns.total(), segment)])
+        return float(r.estimates[0])
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """[T, ...]-stacked flat dict (see TenantBank.state_dict); slices
+        per tenant through ``tenant_state_dict`` / manager.restore_slice."""
+        return self._bank.state_dict()
+
+    def load_state_dict(self, d: dict) -> None:
+        self._bank.load_state_dict(d)
+        self._engine = None
+        self._stale = True
+
+    def tenant_state_dict(self, tenant: int) -> dict:
+        """One tenant in ``StreamStatsService``-loadable form (handoff)."""
+        return self._bank.tenant_state_dict(tenant)
+
+    def load_tenant_state_dict(self, tenant: int, d: dict) -> None:
+        """Splice one tenant's blob into the bank (join/handoff)."""
+        self._bank.load_tenant_state_dict(tenant, d)
+        self._engine = None
+        self._stale = True
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._bank.resident_bytes
+
+    def save_checkpoint(self, ckpt_dir: str | Path, step: int) -> Path:
+        return ckpt_manager.save(ckpt_dir, step, self.state_dict())
+
+    def restore_checkpoint(self, ckpt_dir: str | Path,
+                           step: int | None = None) -> int:
+        if step is None:
+            step = ckpt_manager.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {ckpt_dir}")
         tree = ckpt_manager.restore(ckpt_dir, step, self.state_dict())
         self.load_state_dict(tree)
         return step

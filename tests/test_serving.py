@@ -1,0 +1,333 @@
+"""Multi-tenant serving plane: stacked banks, scheduler, overlap, handoff.
+
+The serving contract under test (DESIGN.md §10): the bank/scheduler change
+HOW MANY dispatches run, never one bit of any tenant's sample, summary, or
+answer — every test here compares against the standalone per-tenant path
+with np.array_equal, not allclose.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.core import freqfns, incremental
+from repro.core.segments import HashBucket
+from repro.launch.stats_serve import StatsServer
+from repro.stats.scheduler import ServeConfig, StatsScheduler, _round_robin
+from repro.stats.service import (
+    MultiTenantStats, StatsConfig, StreamStatsService, TenantQuery)
+
+LS = (1.0, 8.0, 64.0)
+K, CHUNK = 96, 192
+
+
+def _streams(T, n, seed=0, n_keys=600):
+    rng = np.random.default_rng(seed)
+    return [(rng.zipf(1.3, size=n) % n_keys).astype(np.int64)
+            for _ in range(T)]
+
+
+def _cfg(**kw):
+    return StatsConfig(k=kw.pop("k", K), ls=kw.pop("ls", LS),
+                       chunk=kw.pop("chunk", CHUNK), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-bank bit-identity vs standalone per-tenant samplers
+# ---------------------------------------------------------------------------
+
+
+def test_bank_bit_identity_staggered_ingest():
+    """Tables, taus, summaries, and results match standalone MultiSamplers
+    even when tenants ingest at wildly different rates (partial chunks,
+    inactive tenants passing through masked ticks)."""
+    T = 4
+    streams = _streams(T, 3000, seed=0)
+    refs = [incremental.MultiSampler(LS, k=K, chunk=CHUNK, salt=0x5EED)
+            for _ in range(T)]
+    for t in range(T):
+        refs[t].observe(streams[t])
+
+    bank = incremental.TenantBank(LS, n_tenants=T, k=K, chunk=CHUNK,
+                                  salts=0x5EED)
+    offs = [0] * T
+    sizes = [193, 1024, 77, 3000]  # adversarial stagger incl. sub-chunk
+    while any(offs[t] < len(streams[t]) for t in range(T)):
+        for t in range(T):
+            if offs[t] < len(streams[t]):
+                n = min(sizes[t], len(streams[t]) - offs[t])
+                bank.observe(t, streams[t][offs[t]: offs[t] + n])
+                offs[t] += n
+        bank.tick()
+    bank.drain()
+
+    # resident state: tables + summaries, bitwise
+    bst = bank.flushed_state()
+    for t in range(T):
+        rst = refs[t].flushed_state()
+        for leaf_b, leaf_r in zip(
+                [bst.table.keys[t], bst.table.counts[t], bst.table.kb[t],
+                 bst.table.seed[t], bst.table.tau[t],
+                 bst.bk_keys[t], bst.bk_seeds[t]],
+                [rst.table.keys, rst.table.counts, rst.table.kb,
+                 rst.table.seed, rst.table.tau,
+                 rst.bk_keys, rst.bk_seeds]):
+            assert np.array_equal(np.asarray(leaf_b), np.asarray(leaf_r))
+        assert bank.n_observed(t) == refs[t].n_observed
+
+    # finalized results
+    for t in range(T):
+        r_ref, r_bank = refs[t].finalize(), bank.finalize(t)
+        for l in LS:
+            assert np.array_equal(r_ref[l].keys, r_bank[l].keys)
+            assert np.array_equal(r_ref[l].counts, r_bank[l].counts)
+            assert r_ref[l].tau == r_bank[l].tau
+
+
+def test_bank_per_tenant_salts():
+    """Distinct per-tenant salts reproduce the per-instance salted sampler."""
+    T = 3
+    streams = _streams(T, 1000, seed=2)
+    salts = [7, 99, 12345]
+    bank = incremental.TenantBank(LS, n_tenants=T, k=K, chunk=CHUNK,
+                                  salts=salts)
+    for t in range(T):
+        bank.observe(t, streams[t])
+    bank.drain()
+    for t in range(T):
+        ref = incremental.MultiSampler(LS, k=K, chunk=CHUNK, salt=salts[t])
+        ref.observe(streams[t])
+        r_ref, r_bank = ref.finalize(), bank.finalize(t)
+        for l in LS:
+            assert np.array_equal(r_ref[l].keys, r_bank[l].keys)
+            assert r_ref[l].tau == r_bank[l].tau
+
+
+def test_multitenant_query_identity():
+    """MultiTenantStats answers (estimates AND diagnostics) == per-tenant
+    StreamStatsService, including segment queries, via ONE coalesced
+    dispatch across tenants."""
+    T = 3
+    cfg = _cfg()
+    streams = _streams(T, 2000, seed=3)
+    mts = MultiTenantStats(cfg, n_tenants=T)
+    svcs = [StreamStatsService(cfg) for _ in range(T)]
+    for t in range(T):
+        mts.observe(t, streams[t])
+        svcs[t].observe(streams[t])
+    mts.drain()
+
+    seg = HashBucket(4, 1)
+    reqs = [TenantQuery(t, fn, s)
+            for t in range(T)
+            for fn, s in [(freqfns.cap(8.0), None), (freqfns.cap(8.0), seg),
+                          (freqfns.distinct(), None), (freqfns.total(), None)]]
+    batch = mts.query_batch(reqs)
+    per_tenant = [svcs[t].query_batch(
+        [(freqfns.cap(8.0), None), (freqfns.cap(8.0), seg),
+         (freqfns.distinct(), None), (freqfns.total(), None)])
+        for t in range(T)]
+    for i, q in enumerate(reqs):
+        ref = per_tenant[q.tenant]
+        j = i % 4
+        assert batch.estimates[i] == ref.estimates[j]
+        assert batch.variances[i] == ref.variances[j]
+        assert batch.ci_low[i] == ref.ci_low[j]
+        assert batch.n_keys[i] == ref.n_keys[j]
+
+
+def test_async_query_matches_sync():
+    """query_batch_async + later result() == query_batch (overlap changes
+    scheduling, not answers)."""
+    cfg = _cfg()
+    mts = MultiTenantStats(cfg, n_tenants=2)
+    streams = _streams(2, 1500, seed=4)
+    for t in range(2):
+        mts.observe(t, streams[t])
+    mts.drain()
+    reqs = [TenantQuery(t, freqfns.cap(c))
+            for t in range(2) for c in (1.0, 8.0, 64.0)]
+    pending = mts.query_batch_async(reqs)
+    # enqueue more device work before syncing, as the scheduler does
+    mts.observe(0, streams[0][:CHUNK])
+    mts.tick()
+    got = pending.result()
+    want = mts.query_batch(reqs, auto_refresh=False)
+    assert np.array_equal(got.estimates, want.estimates)
+
+
+def test_partial_refresh_widens_on_miss():
+    """A partial-refresh snapshot transparently widens when a query batch
+    touches an uncovered tenant."""
+    cfg = _cfg()
+    T = 4
+    mts = MultiTenantStats(cfg, n_tenants=T)
+    streams = _streams(T, 1200, seed=5)
+    for t in range(T):
+        mts.observe(t, streams[t])
+    mts.drain()
+    mts.refresh(tenants={0, 1})
+    full = [StreamStatsService(cfg) for _ in range(T)]
+    for t in range(T):
+        full[t].observe(streams[t])
+    # tenant 3 is outside the snapshot -> widening refresh, same answers
+    batch = mts.query_batch([TenantQuery(3, freqfns.cap(8.0)),
+                             TenantQuery(0, freqfns.cap(8.0))],
+                            auto_refresh=False)
+    assert batch.estimates[0] == full[3].campaign_forecast(8.0)
+    assert batch.estimates[1] == full[0].campaign_forecast(8.0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: fairness, eviction, drain
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_fairness_primitive():
+    from collections import deque
+    queues = {0: deque(range(100)), 1: deque(["a"]), 2: deque(), 3: deque(["b", "c"])}
+    out = _round_robin(queues, start=1, n_tenants=4, budget=5)
+    # one per non-empty tenant per rotation, starting at 1
+    assert out == [(1, "a"), (3, "b"), (0, 0), (3, "c"), (0, 1)]
+    assert len(queues[0]) == 98
+
+
+def test_scheduler_fairness_under_skew():
+    """An adversarial tenant flooding the queues cannot starve the others:
+    every light tenant's single query completes in the FIRST step."""
+    T = 4
+    cfg = _cfg(chunk=128)
+    mts = MultiTenantStats(cfg, n_tenants=T)
+    sched = StatsScheduler(mts, ServeConfig(max_ingest_per_step=4,
+                                            max_queries_per_step=4))
+    streams = _streams(T, 512, seed=6)
+    # adversary (tenant 0) floods: 50 ingest slices + 50 queries
+    for _ in range(50):
+        sched.submit_ingest(0, streams[0][:128])
+    heavy = [sched.submit_query(0, freqfns.cap(8.0)) for _ in range(50)]
+    light = []
+    for t in range(1, T):
+        sched.submit_ingest(t, streams[t][:128])
+        light.append(sched.submit_query(t, freqfns.cap(8.0)))
+    done = sched.step()
+    for rid in light:
+        assert rid in done, "light tenant starved by adversarial backlog"
+    assert sum(rid in done for rid in heavy) == 1  # one slot per rotation
+    # ingest admission is fair too: each light tenant's slice was admitted
+    for t in range(1, T):
+        assert len(sched._ingest_q[t]) == 0, "light ingest starved"
+    assert len(sched._ingest_q[0]) == 50 - 1  # adversary got one slot
+
+
+def test_scheduler_results_evicted_on_read():
+    cfg = _cfg(chunk=128)
+    mts = MultiTenantStats(cfg, n_tenants=2)
+    sched = StatsScheduler(mts)
+    sched.submit_ingest(0, _streams(1, 256, seed=7)[0])
+    rid = sched.submit_query(0, freqfns.cap(8.0))
+    sched.drain()
+    assert sched.buffered_results == 1
+    rec = sched.pop_result(rid)
+    assert rec is not None and rec.latency_s >= 0.0
+    assert sched.buffered_results == 0
+    assert sched.pop_result(rid) is None
+
+
+def test_scheduler_answers_match_direct_service():
+    """Answers through the overlapped scheduler == direct MultiTenantStats
+    queries on the settled state."""
+    T = 3
+    cfg = _cfg(chunk=128)
+    streams = _streams(T, 1024, seed=8)
+    mts = MultiTenantStats(cfg, n_tenants=T)
+    sched = StatsScheduler(mts)
+    for t in range(T):
+        sched.submit_ingest(t, streams[t])
+    sched.drain()  # settle ingest first, then query the settled state
+    rids = {t: sched.submit_query(t, freqfns.cap(8.0)) for t in range(T)}
+    sched.drain()
+    ref = MultiTenantStats(cfg, n_tenants=T)
+    for t in range(T):
+        ref.observe(t, streams[t])
+    ref.drain()
+    for t in range(T):
+        rec = sched.pop_result(rids[t])
+        assert rec.estimate == ref.query_cap(t, 8.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing: stacked round-trip + per-tenant slice/splice
+# ---------------------------------------------------------------------------
+
+
+def test_bank_checkpoint_roundtrip_and_slice(tmp_path):
+    T = 3
+    cfg = _cfg()
+    streams = _streams(T, 1100, seed=9)
+    mts = MultiTenantStats(cfg, n_tenants=T)
+    for t in range(T):
+        mts.observe(t, streams[t])
+    # deliberately leave a sub-chunk remainder staged (mid-stream ckpt)
+    mts.tick()
+    mts.save_checkpoint(tmp_path, step=5)
+
+    # full-bank round-trip resumes bit-for-bit
+    mts2 = MultiTenantStats(cfg, n_tenants=T)
+    assert mts2.restore_checkpoint(tmp_path) == 5
+    for t in range(T):
+        assert mts2.query_cap(t, 8.0) == mts.query_cap(t, 8.0)
+
+    # per-tenant slice into a standalone service (leave)
+    for t in range(T):
+        svc = StreamStatsService(cfg)
+        ex = svc.state_dict()
+        ex.pop("exact_ok")
+        blob = ckpt.restore_slice(tmp_path, 5, ex, t)
+        blob["exact_ok"] = np.bool_(False)
+        svc.load_state_dict(blob)
+        assert svc.campaign_forecast(8.0) == mts.query_cap(t, 8.0)
+
+    # splice a standalone service into a bank slot (join)
+    lone = StreamStatsService(cfg)
+    lone.observe(streams[0])
+    blob = lone.state_dict()
+    blob.pop("exact_ok")
+    mts3 = MultiTenantStats(cfg, n_tenants=T)
+    mts3.load_tenant_state_dict(1, blob)
+    assert mts3.query_cap(1, 8.0) == lone.campaign_forecast(8.0)
+
+
+def test_restore_slice_rejects_mismatched_tree(tmp_path):
+    cfg = _cfg()
+    mts = MultiTenantStats(cfg, n_tenants=2)
+    mts.observe(0, _streams(1, 400, seed=10)[0])
+    mts.drain()
+    mts.save_checkpoint(tmp_path, step=1)
+    svc = StreamStatsService(cfg)
+    with pytest.raises(ValueError, match="leaf count"):
+        ckpt.restore_slice(tmp_path, 1, svc.state_dict(), 0)  # exact_ok extra
+
+
+# ---------------------------------------------------------------------------
+# StatsServer (single-service shell): burst drain + eviction
+# ---------------------------------------------------------------------------
+
+
+def test_stats_server_drains_burst_and_evicts():
+    svc = StreamStatsService(_cfg(chunk=128))
+    svc.observe(_streams(1, 1024, seed=11)[0])
+    server = StatsServer(svc, max_batch=8)
+    for rid in range(30):
+        server.submit(rid, freqfns.cap(8.0))
+    done = server.step()  # drain-to-empty: the whole burst, FIFO slices
+    assert sorted(done) == list(range(30))
+    assert server.batch_sizes[-4:] == [8, 8, 8, 6]
+    assert len(server.results) == 30
+    r = server.pop_result(0)
+    assert r is not None and "estimate" in r
+    assert server.pop_result(0) is None
+    assert len(server.results) == 29
+
+    for rid in range(30, 60):
+        server.submit(rid, freqfns.cap(8.0))
+    assert server.step(drain=False) == list(range(30, 38))  # one slice only
+    assert len(server.pending) == 22
