@@ -146,6 +146,8 @@ def main() -> None:
 
     section("9. Serving plane: stacked bank + scheduler vs per-tenant loop"
             " -> BENCH_serve.json")
+    from benchmarks.sampler_throughput import reprolint_stamp
+    from benchmarks.serve_throughput import SCHEMA_VERSION as SERVE_SCHEMA
     from benchmarks.serve_throughput import run as serve_run
     import json as _json
 
@@ -154,8 +156,8 @@ def main() -> None:
                                        queries_per_round=24, k=128)))
     ok &= serve_res["bit_identical"]
     with open("BENCH_serve.json", "w") as f:
-        _json.dump({"bench": "serve_throughput", "schema_version": 1,
-                    **serve_res}, f, indent=2)
+        _json.dump({"bench": "serve_throughput", "schema_version": SERVE_SCHEMA,
+                    "reprolint": reprolint_stamp(), **serve_res}, f, indent=2)
 
     print(f"\n[benchmarks] total {time.time()-t0:.0f}s — "
           f"{'ALL VALIDATIONS PASS' if ok else 'SOME VALIDATIONS FAILED'}")

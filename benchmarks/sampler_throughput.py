@@ -20,8 +20,9 @@ fused score+aggregate stage was once booked at 17ms.
 
     PYTHONPATH=src python -m benchmarks.sampler_throughput [--smoke] [--json PATH]
 
-``--json`` emits a machine-readable record (schema_version 2: stamped with
-backend + interpret mode so trajectories across machines are comparable).
+``--json`` emits a machine-readable record (schema_version 3: stamped with
+backend + interpret mode so trajectories across machines are comparable,
+plus the reprolint version/retrace budgets the timings were taken under).
 ``--smoke`` additionally acts as the CI perf-regression gate: the job FAILS
 if the fused path measures slower than the reference oracle.
 """
@@ -30,8 +31,10 @@ from __future__ import annotations
 import argparse
 import functools
 import json
+import re
 import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +49,26 @@ from repro.core.segments import (
 from repro.kernels.capscore.capscore import default_interpret
 from repro.kernels.capscore.ops import capscore, capscore_agg, capscore_multi
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+
+def reprolint_stamp():
+    """Compile-count context for the perf numbers (DESIGN.md §11.3): the
+    reprolint version and the committed retrace budgets these timings were
+    taken under. Best-effort — absent files just leave the stamp empty."""
+    root = Path(__file__).resolve().parents[1]
+    stamp: dict = {}
+    try:
+        m = re.search(r'__version__\s*=\s*"([^"]+)"',
+                      (root / "tools/reprolint/__init__.py").read_text())
+        if m:
+            stamp["reprolint_version"] = m.group(1)
+        stamp["retrace_budgets"] = json.loads(
+            (root / "tools/reprolint/reprolint_traces.json").read_text()
+        )["budgets"]
+    except (OSError, KeyError, ValueError):
+        pass
+    return stamp
 
 
 def bench(fn, *args, reps=3, **kw):
@@ -188,6 +210,8 @@ def _update_multi_sorted_impl(state, keys, weights, spec):
     return I.SamplerState(table, pos, state.l, state.salt, bkk, bks)
 
 
+# reprolint: disable=RPL003 -- bench harness: min-of-rounds timing re-feeds
+# the same input state every round, so its buffers must stay alive
 _update_multi_sorted = functools.partial(
     jax.jit, static_argnames=("spec",))(_update_multi_sorted_impl)
 
@@ -375,6 +399,7 @@ def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None,
             "schema_version": SCHEMA_VERSION,
             "backend": jax.default_backend(),
             "capscore_interpret": bool(default_interpret()),
+            "reprolint": reprolint_stamp(),
             "single_lane": {name: {"elements_per_s": eps} for name, eps, _ in rows},
             "multi_lane_ingest": {
                 k_: v for k_, v in ingest.items() if k_ != "stages_ms"

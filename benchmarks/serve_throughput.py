@@ -22,8 +22,9 @@ the jitted steady state is what gets measured).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke] [--json PATH]
 
-``--json`` emits BENCH_serve.json (schema_version 1, stamped with backend +
-interpret mode).  ``--smoke`` is the CI gate: FAILS unless stacked serving
+``--json`` emits BENCH_serve.json (schema_version 2, stamped with backend +
+interpret mode + the reprolint version/retrace budgets the timings were
+taken under).  ``--smoke`` is the CI gate: FAILS unless stacked serving
 measures >= 1.5x the oracle at 64 tenants and the probes are bit-identical.
 
 Regime note: the stacked win comes from amortizing per-dispatch overhead
@@ -50,7 +51,9 @@ from repro.stats.scheduler import ServeConfig, StatsScheduler
 from repro.stats.service import (
     MultiTenantStats, StatsConfig, StreamStatsService, TenantQuery)
 
-SCHEMA_VERSION = 1
+from .sampler_throughput import reprolint_stamp
+
+SCHEMA_VERSION = 2
 # within sqrt(2) of the default (1, 8, 64) lane grid — no grid warnings
 CAPS = (1.0, 8.0, 10.0, 64.0)
 
@@ -205,6 +208,7 @@ def main():
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
         "capscore_interpret": bool(default_interpret()),
+        "reprolint": reprolint_stamp(),
         **res,
     }
     with open(args.json, "w") as f:

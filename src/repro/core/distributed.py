@@ -40,7 +40,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .segments import EMPTY, compact_valid, scatter_unique, segment_ids, sort_by_key
+from .segments import (
+    EMPTY,
+    compact_valid,
+    is_live,
+    scatter_unique,
+    searchsorted,
+    segment_ids,
+    sort_by_key,
+)
 from . import vectorized as VZ
 
 
@@ -144,6 +152,9 @@ def allgather_merge_bottomk_multi(keys, seeds, cap: int, axis_name: str):
 # ---------------------------------------------------------------------------
 
 
+# reprolint: disable=RPL003 -- cross-host merge: both inputs may alias live
+# resident states the caller keeps serving from (service.absorb merges into
+# self.state); donating would invalidate them
 @functools.partial(jax.jit, static_argnames=("k",))
 def merge_fixed_k(table_a, table_b, l, salt, *, k):
     """Merge two per-host fixed-k continuous sampler states (core.vectorized
@@ -178,7 +189,7 @@ def merge_fixed_k(table_a, table_b, l, salt, *, k):
     ks, (cn, kb, sd) = sort_by_key(keys2, counts2, kb2, seed2)
     seg, _ = segment_ids(ks)
     N = ks.shape[0]
-    live = ks != EMPTY
+    live = is_live(ks)
     cnt = jax.ops.segment_sum(jnp.where(live, cn, 0.0), seg, num_segments=N)
     dup = jax.ops.segment_sum(jnp.where(live, 1.0, 0.0), seg, num_segments=N)
     kbm = jax.ops.segment_min(jnp.where(live, kb, jnp.inf), seg, num_segments=N)
@@ -188,9 +199,10 @@ def merge_fixed_k(table_a, table_b, l, salt, *, k):
     # duplicate-entry clip correction (m hosts -> m-1 extra clips)
     rate = jnp.maximum(1.0 / l, tau)
     cnt = cnt + jnp.maximum(dup - 1.0, 0.0) / rate
-    cnt = jnp.where(uk != EMPTY, cnt, 0.0)
-    kbm = jnp.where(uk != EMPTY, kbm, jnp.inf)
-    sdm = jnp.where(uk != EMPTY, sdm, jnp.inf)
+    uk_live = is_live(uk)
+    cnt = jnp.where(uk_live, cnt, 0.0)
+    kbm = jnp.where(uk_live, kbm, jnp.inf)
+    sdm = jnp.where(uk_live, sdm, jnp.inf)
 
     # eviction randomness is hashed on the round counter: the merged state
     # stores this same round as its step so NO later per-chunk eviction can
@@ -202,7 +214,7 @@ def merge_fixed_k(table_a, table_b, l, salt, *, k):
 
     # compact the <= k survivors back into table_a's capacity
     keys_c, counts_c, kb_c, seed_c = compact_valid(
-        keys_e != EMPTY, keys_e, counts_e, kb_e, seed_e,
+        is_live(keys_e), keys_e, counts_e, kb_e, seed_e,
         fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
     )
     return VZ.TableState(
@@ -229,6 +241,8 @@ def merge_fixed_k_states(tables, l, salt, *, k):
     return tables[0]
 
 
+# reprolint: disable=RPL003 -- cross-host merge, inputs alias live states
+# (see merge_fixed_k)
 @functools.partial(jax.jit, static_argnames=("k",))
 def merge_fixed_k_multi(table_a, table_b, ls, salt, *, k):
     """Lane-wise merge of two stacked multi-l states (leading axis |ls|) —
@@ -282,9 +296,9 @@ def pass1_shard(keys_shard, weights_shard, *, kind, l, salt, k, chunk, axis_name
 def pass2_shard(keys_shard, weights_shard, sampled_sorted, *, axis_name):
     """Per-device exact-weight accumulation + psum (paper pass II)."""
     kk = sampled_sorted.shape[0]
-    loc = jnp.searchsorted(sampled_sorted, keys_shard)
+    loc = searchsorted(sampled_sorted, keys_shard)
     loc = jnp.clip(loc, 0, kk - 1)
-    match = (sampled_sorted[loc] == keys_shard) & (keys_shard != EMPTY)
+    match = (sampled_sorted[loc] == keys_shard) & is_live(keys_shard)
     local = jnp.zeros((kk,), jnp.float32).at[loc].add(jnp.where(match, weights_shard, 0.0))
     return jax.lax.psum(local, axis_name)
 
@@ -304,6 +318,8 @@ def make_distributed_two_pass(mesh, *, kind, l, salt, k, chunk, axis_name="data"
                 kind=kind, l=l, salt=salt, k=k, chunk=chunk,
                 axis_name=axis_name, merge=merge,
             )
+            # reprolint: disable=RPL002 -- sorts the [k+1] sampled summary once
+            # per two-pass program, not per chunk; k+1 << stream length
             order = jnp.argsort(skeys)
             sorted_keys = skeys[order]
             w = pass2_shard(kshard.reshape(-1), wshard.reshape(-1), sorted_keys, axis_name=axis_name)
@@ -372,9 +388,9 @@ def pass2_shard_multi(keys_shard, weights_shard, sampled_sorted, *, axis_name):
     """
     def lane(ss):
         kk = ss.shape[0]
-        loc = jnp.searchsorted(ss, keys_shard)
+        loc = searchsorted(ss, keys_shard)
         loc = jnp.clip(loc, 0, kk - 1)
-        match = (ss[loc] == keys_shard) & (keys_shard != EMPTY)
+        match = (ss[loc] == keys_shard) & is_live(keys_shard)
         return jnp.zeros((kk,), jnp.float32).at[loc].add(
             jnp.where(match, weights_shard, 0.0))
 
@@ -400,6 +416,8 @@ def make_distributed_two_pass_multi(mesh, *, ls, salt, k, chunk,
                 ls=ls, salt=salt, k=k, chunk=chunk,
                 axis_name=axis_name, merge=merge,
             )
+            # reprolint: disable=RPL002 -- sorts the [L, k+1] sampled summary
+            # once per two-pass program, not per chunk
             order = jnp.argsort(skeys, axis=1)
             sorted_keys = jnp.take_along_axis(skeys, order, axis=1)
             sorted_seeds = jnp.take_along_axis(sseeds, order, axis=1)

@@ -50,6 +50,7 @@ from jax.experimental import enable_x64 as _enable_x64
 
 from ..kernels.capscore.ops import capscore_agg, capscore_multi
 from .samplers import SampleResult
+from . import segments as SG
 from .segments import EMPTY, chunk_order, normalize_keys  # noqa: F401 (re-export)
 from . import vectorized as VZ
 
@@ -220,6 +221,8 @@ def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> Sampl
 
 _update_donated = functools.partial(jax.jit, static_argnames=("spec",),
                                     donate_argnums=(0,))(_update_impl)
+# reprolint: disable=RPL003 -- the flush path (lazy finalize) must keep the
+# input state alive and usable after the call; donation would invalidate it
 _update_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_impl)
 
 
@@ -235,6 +238,8 @@ def update(state: SamplerState, keys, weights, spec: SamplerSpec, *,
     return fn(state, jnp.asarray(keys), jnp.asarray(weights), spec)
 
 
+# reprolint: disable=RPL003 -- non-destructive projection: finalize must leave
+# the resident table intact so the sampler keeps ingesting after extraction
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _final_evict(table, l, salt, spec: SamplerSpec):
     """Project a lazily-evicted table down to <= k for extraction.
@@ -248,6 +253,7 @@ def _final_evict(table, l, salt, spec: SamplerSpec):
                           max_evict=spec.evict_every * spec.chunk)
 
 
+# reprolint: disable=RPL003 -- non-destructive projection (see _final_evict)
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _final_evict_multi(table, ls, salt, spec: SamplerSpec):
     return jax.vmap(
@@ -259,13 +265,14 @@ def _final_evict_multi(table, ls, salt, spec: SamplerSpec):
 def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
     """Extract the SampleResult; the state remains usable for more updates."""
     st = state.table
-    overflow = int(st.overflow)
+    overflow = int(jax.device_get(st.overflow))
     if overflow > 0:
         raise RuntimeError(
             f"fixed-tau capacity overflow ({overflow}); raise capacity")
     if spec.mode == "fixed_k" and spec.evict_every > 1:
         st = _final_evict(st, state.l, state.salt, spec)
-    return VZ._to_result(st, l=float(state.l), kind=spec.kind, tau=float(st.tau))
+    l_host, tau_host = jax.device_get((state.l, st.tau))
+    return VZ._to_result(st, l=float(l_host), kind=spec.kind, tau=float(tau_host))
 
 
 # ---------------------------------------------------------------------------
@@ -445,9 +452,11 @@ def _update_multi_reference_impl(state: SamplerState, keys, weights,
 
 _update_multi_donated = functools.partial(jax.jit, static_argnames=("spec",),
                                           donate_argnums=(0,))(_update_multi_impl)
+# reprolint: disable=RPL003 -- flush path: input state must survive the call
 _update_multi_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_multi_impl)
 _update_multi_ref_donated = functools.partial(
     jax.jit, static_argnames=("spec",), donate_argnums=(0,))(_update_multi_reference_impl)
+# reprolint: disable=RPL003 -- flush path: input state must survive the call
 _update_multi_ref_fresh = functools.partial(
     jax.jit, static_argnames=("spec",))(_update_multi_reference_impl)
 
@@ -583,6 +592,7 @@ def _update_bank_impl(state: SamplerState, keys, weights, active,
 
 _update_bank_donated = functools.partial(jax.jit, static_argnames=("spec",),
                                          donate_argnums=(0,))(_update_bank_impl)
+# reprolint: disable=RPL003 -- flush path: input state must survive the call
 _update_bank_fresh = functools.partial(jax.jit, static_argnames=("spec",))(_update_bank_impl)
 
 
@@ -596,6 +606,7 @@ def update_bank(state: SamplerState, keys, weights, active, spec: SamplerSpec,
               jnp.asarray(active), spec)
 
 
+# reprolint: disable=RPL003 -- non-destructive projection (see _final_evict)
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _final_evict_bank(table, ls, salts, spec: SamplerSpec):
     return jax.vmap(lambda t, s: jax.vmap(
@@ -630,7 +641,7 @@ def init_pass2(lane_keys: list[np.ndarray], cap: int | None = None):
 @functools.partial(jax.jit, donate_argnums=(1,))
 def _pass2_accum_impl(skeys, acc, keys, w):
     def lane(sk, a):
-        loc = jnp.clip(jnp.searchsorted(sk, keys), 0, sk.shape[0] - 1)
+        loc = jnp.clip(SG.searchsorted(sk, keys), 0, sk.shape[0] - 1)
         match = sk[loc] == keys
         return a.at[loc].add(jnp.where(match, w, 0.0))
 

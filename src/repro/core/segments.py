@@ -35,6 +35,26 @@ from . import hashing as H
 EMPTY = jnp.int32(2**31 - 1)
 _EMPTY_INT = int(EMPTY)
 
+
+def is_empty(keys):
+    """Canonical "is this slot padding?" test for key arrays.
+
+    Works on traced jnp arrays and host numpy arrays alike (numpy stays on
+    host — no implicit device round-trip) and is the single point where the
+    EMPTY encoding is compared, so the sentinel stays changeable in one
+    place. Enforced by reprolint RPL006 on hot-path modules.
+    """
+    if isinstance(keys, np.ndarray):
+        return keys == _EMPTY_INT
+    return keys == EMPTY
+
+
+def is_live(keys):
+    """Negation of :func:`is_empty`; same contract."""
+    if isinstance(keys, np.ndarray):
+        return keys != _EMPTY_INT
+    return keys != EMPTY
+
 # salt lane for HashBucket segments (disjoint from the sampler salt lanes in
 # core.samplers, which start at 0x01)
 SALT_SEGMENT = 0x5E

@@ -47,6 +47,8 @@ from .segments import (
     bottom_k_by,
     chunk_order,
     compact_valid,
+    is_empty,
+    is_live,
     kth_smallest,
     merge_sorted_runs_gather,
     normalize_keys,
@@ -102,7 +104,7 @@ def element_scores(kind: str, keys, eids, weights, l, salt):
         s = jnp.where(v <= 1.0 / l, kb, v)
     else:
         raise ValueError(kind)
-    return jnp.where(keys == EMPTY, INF, s.astype(jnp.float32))
+    return jnp.where(is_empty(keys), INF, s.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +169,7 @@ def _aggregate_preordered(order: ChunkOrder, entry, at_entry_count, scores,
     after = idx > fe
     at = (idx == fe) & es
     contrib_elem = jnp.where(after, ws, 0.0) + jnp.where(at, aec, 0.0)
-    live = ks != EMPTY
+    live = is_live(ks)
     w_live = jnp.where(live, ws, 0.0)
     contrib = jax.ops.segment_sum(jnp.where(live, contrib_elem, 0.0), seg, num_segments=C)
     w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)
@@ -200,7 +202,7 @@ def _aggregate_ref(keys, weights, entry, at_entry_count, scores, kb_elem):
     after = idx > fe
     at = (idx == fe) & es
     contrib_elem = jnp.where(after, ws, 0.0) + jnp.where(at, aec, 0.0)
-    live = ks != EMPTY
+    live = is_live(ks)
     w_live = jnp.where(live, ws, 0.0)
     contrib = jax.ops.segment_sum(jnp.where(live, contrib_elem, 0.0), seg, num_segments=C)
     w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)
@@ -220,10 +222,10 @@ def _continuous_entry(keys, weights, eids, tau, l, salt):
     delta = -jnp.log1p(-u) / rate  # rate=inf (tau=inf) -> delta=0
     kb = keybase(keys, l, salt)
     ok_regime = jnp.where(tau * l > 1.0, True, kb < tau)
-    entry = (delta < weights) & ok_regime & (keys != EMPTY)
+    entry = (delta < weights) & ok_regime & is_live(keys)
     v = -jnp.log1p(-u) / weights
     scores = jnp.where(v <= 1.0 / l, kb, v)
-    scores = jnp.where(keys == EMPTY, INF, scores)
+    scores = jnp.where(is_empty(keys), INF, scores)
     return entry, weights - delta, scores, kb
 
 
@@ -266,10 +268,10 @@ def aggregate_discrete(keys, weights, eids, tau, kind, l, salt,
         order = chunk_order(keys, eids, weights)
     if order.eids is not None:
         scores = element_scores(kind, order.ks, order.eids, order.ws, l, salt)
-        entry = (scores < tau) & (order.ks != EMPTY)
+        entry = (scores < tau) & is_live(order.ks)
         return _aggregate_preordered(order, entry, order.ws, scores, scores)
     scores = element_scores(kind, keys, eids, weights, l, salt)
-    entry = (scores < tau) & (keys != EMPTY)
+    entry = (scores < tau) & is_live(keys)
     return _aggregate(keys, weights, entry, weights, scores, scores, order)
 
 
@@ -277,7 +279,7 @@ def aggregate_discrete_ref(keys, weights, eids, tau, kind, l, salt) -> ChunkAgg:
     """``aggregate_discrete`` through the verbatim pre-ChunkOrder reducer
     (bit-identity oracle; tests only)."""
     scores = element_scores(kind, keys, eids, weights, l, salt)
-    entry = (scores < tau) & (keys != EMPTY)
+    entry = (scores < tau) & is_live(keys)
     return _aggregate_ref(keys, weights, entry, weights, scores, scores)
 
 
@@ -290,8 +292,8 @@ def aggregate_continuous_scored(keys, weights, score, delta, entry, kb,
     device pass and feed each lane through the same segment machinery.  Pass
     the chunk's shared ``order`` so the L lanes reuse one key sort.
     """
-    entry = entry.astype(bool) & (keys != EMPTY)
-    score = jnp.where(keys == EMPTY, INF, score)
+    entry = entry.astype(bool) & is_live(keys)
+    score = jnp.where(is_empty(keys), INF, score)
     return _aggregate(keys, weights, entry, weights - delta, score, kb, order)
 
 
@@ -332,7 +334,7 @@ def _merge_reduce(ks, st, cn, wt, en, ct, kb, sd):
     ukeys, _ = scatter_unique(ks, seg, 0.0)
 
     new_count = jnp.where(present, s_count + c_w, jnp.where(c_ent, c_ctr, 0.0))
-    valid = (ukeys != EMPTY) & (present | c_ent)
+    valid = is_live(ukeys) & (present | c_ent)
     keys_c, counts_c, kb_c, seed_c = compact_valid(
         valid, ukeys, new_count, kb_m, sd_m,
         fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
@@ -353,7 +355,7 @@ def _merge_table(state: TableState, agg: ChunkAgg):
     cap = state.keys.shape[0]
     C = agg.ukeys.shape[0]
     keys2 = jnp.concatenate([state.keys, agg.ukeys])
-    is_state = jnp.concatenate([state.keys != EMPTY, jnp.zeros((C,), bool)])
+    is_state = jnp.concatenate([is_live(state.keys), jnp.zeros((C,), bool)])
     cnt2 = jnp.concatenate([state.counts, jnp.zeros((C,), state.counts.dtype)])
     wtot2 = jnp.concatenate([jnp.zeros((cap,)), agg.w_total])
     ent2 = jnp.concatenate([jnp.zeros((cap,), bool), agg.entered])
@@ -392,8 +394,8 @@ def _merge_table_sorted(state: TableState, agg: ChunkAgg):
     C = agg.ukeys.shape[0]
     inf = jnp.float32(jnp.inf)
     a_keys, b_keys = state.keys, agg.ukeys
-    a_live = a_keys != EMPTY
-    b_live = b_keys != EMPTY
+    a_live = is_live(a_keys)
+    b_live = is_live(b_keys)
 
     # table entries matched against the chunk aggregate (cached-key branch:
     # count += chunk total weight, kb/seed min with the chunk's)
@@ -487,7 +489,7 @@ def evict_table(table: TableState, *, k, l, salt, max_evict=None,
         table.keys, table.counts, table.kb, table.seed, table.tau, k, l, salt,
         table.step, max_evict=max_evict, select=select)
     keys_c, counts_c, kb_c, seed_c = compact_valid(
-        keys_e != EMPTY, keys_e, counts_e, kb_e, seed_e,
+        is_live(keys_e), keys_e, counts_e, kb_e, seed_e,
         fills=(EMPTY, 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.inf)),
     )
     return TableState(keys_c, counts_c, kb_c, seed_c, tau_e, table.step,
@@ -527,8 +529,8 @@ def fixed_k_step_scored_ref(state: TableState, keys, weights, score, delta,
     tests/test_ingest_order and the `reference` path of the ingest benchmark
     — not by production."""
     capacity = state.keys.shape[0]
-    e = entry.astype(bool) & (keys != EMPTY)
-    s = jnp.where(keys == EMPTY, INF, score)
+    e = entry.astype(bool) & is_live(keys)
+    s = jnp.where(is_empty(keys), INF, score)
     agg = _aggregate_ref(keys, weights, e, weights - delta, s, kb)
     keys_c, counts_c, kb_c, seed_c, _ = _merge_table(state, agg)
     keys_e, counts_e, kb_e, seed_e, tau_e = _evict_to_k_ref(
@@ -545,9 +547,9 @@ def chunk_bottomk_summary(keys, eids, weights, l, salt, *, kind):
     scores = element_scores(kind, keys, eids, weights, l, salt)
     ks, (sc,) = sort_by_key(keys, scores)
     seg, _ = segment_ids(ks)
-    mins = jax.ops.segment_min(jnp.where(ks != EMPTY, sc, INF), seg, num_segments=chunk)
+    mins = jax.ops.segment_min(jnp.where(is_live(ks), sc, INF), seg, num_segments=chunk)
     ukeys, _ = scatter_unique(ks, seg, 0.0)
-    return ukeys, jnp.where(ukeys != EMPTY, mins, INF)
+    return ukeys, jnp.where(is_live(ukeys), mins, INF)
 
 
 def merge_bottomk_summary(skeys, sseeds, ukeys, useeds, cap):
@@ -564,7 +566,7 @@ def merge_bottomk_summary(skeys, sseeds, ukeys, useeds, cap):
     N = ks2.shape[0]
     sd_m = jax.ops.segment_min(sd2, seg2, num_segments=N)
     uk2, _ = scatter_unique(ks2, seg2, 0.0)
-    sd_m = jnp.where(uk2 != EMPTY, sd_m, INF)
+    sd_m = jnp.where(is_live(uk2), sd_m, INF)
     sd_k, uk_k = bottom_k_by(sd_m, cap, uk2, fills=(EMPTY,))
     return uk_k, sd_k
 
@@ -587,12 +589,12 @@ def chunk_bottomk_summary_scored(keys, scores, order: ChunkOrder | None = None):
     C = keys.shape[0]
     if order is None:
         order = chunk_order(keys)
-    live = order.ks != EMPTY
+    live = is_live(order.ks)
     mins = jax.vmap(
         lambda s: jax.ops.segment_min(jnp.where(live, s[order.perm], INF),
                                       order.seg, num_segments=C)
     )(scores)
-    return order.ukeys, jnp.where(order.ukeys != EMPTY, mins, INF)
+    return order.ukeys, jnp.where(is_live(order.ukeys), mins, INF)
 
 
 def pass1_step_multi(carry, keys, scores, *, cap, order: ChunkOrder | None = None):
@@ -636,6 +638,8 @@ def pass1_step_multi(carry, keys, scores, *, cap, order: ChunkOrder | None = Non
 def summary_to_keysorted(skeys, sseeds):
     """Re-lay a bottom-cap summary (seed-sorted, the state/checkpoint form)
     as the key-sorted scan carry: ascending unique keys, EMPTY (+inf) last."""
+    # reprolint: disable=RPL002 -- once-per-restore boundary conversion (state
+    # checkpoint -> scan carry), not on the per-chunk path; a full argsort is fine
     o = jnp.argsort(skeys, stable=True)
     return skeys[o], sseeds[o]
 
@@ -660,8 +664,8 @@ def pass1_fold_keysorted(skeys, sseeds, ukeys, mins, cap):
     """
     C = ukeys.shape[0]
     cap_s = skeys.shape[0]
-    a_keys, a_live = skeys, skeys != EMPTY
-    b_keys, b_live = ukeys, ukeys != EMPTY
+    a_keys, a_live = skeys, is_live(skeys)
+    b_keys, b_live = ukeys, is_live(ukeys)
 
     # rank passes (kept UNclipped: the raw rank is also the count of
     # other-run keys below, which the position formulas below need even at
@@ -754,8 +758,9 @@ def sample_fixed_tau(keys, weights=None, *, tau, l, kind="continuous", salt=0,
     keys, weights = _prep(keys, weights, chunk)
     st = _run_fixed_tau(keys, weights, jnp.float32(l), jnp.uint32(salt), jnp.float32(tau),
                         kind=kind, capacity=capacity, chunk=chunk)
-    if int(st.overflow) > 0:
-        raise RuntimeError(f"fixed-tau capacity overflow ({int(st.overflow)}); raise capacity")
+    overflow = int(jax.device_get(st.overflow))
+    if overflow > 0:
+        raise RuntimeError(f"fixed-tau capacity overflow ({overflow}); raise capacity")
     return _to_result(st, l=l, kind=kind, tau=float(tau))
 
 
@@ -767,7 +772,7 @@ def sample_fixed_tau(keys, weights=None, *, tau, l, kind="continuous", salt=0,
 def _evict_z(state_keys, counts, kb, tau, l, salt, round_no):
     """Per-key eviction race scores z (§5.2) + the pieces the survivor-count
     adjustment needs.  Shared by the top_k and reference eviction forms."""
-    valid = state_keys != EMPTY
+    valid = is_live(state_keys)
     ux = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_U),
                                     round_no.astype(jnp.uint32), jnp.uint32(salt)))
     rx = H.uniform01(H.hash_combine(state_keys, jnp.uint32(SALT_EVICT_R),
@@ -842,6 +847,8 @@ def _evict_to_k(state_keys, counts, kb, seed, tau, k, l, salt, round_no, *,
         z_sel = kth_smallest(z, jnp.clip(n - delta, 0, n - 1))
     else:
         top = n if max_evict is None else min(int(max_evict), n)
+        # reprolint: disable=RPL002 -- select='topk' is the opt-in TPU-native
+        # route; the XLA:CPU default is select='kth' via kth_smallest below
         z_top = jax.lax.top_k(z, top)[0]
         z_sel = z_top[jnp.maximum(delta - 1, 0)]
     tau_star = jnp.where(delta > 0, z_sel, tau)
@@ -856,6 +863,8 @@ def _evict_to_k_ref(state_keys, counts, kb, seed, tau, k, l, salt, round_no):
         state_keys, counts, kb, tau, l, salt, round_no)
     n_valid = jnp.sum(valid.astype(jnp.int32))
     delta = jnp.maximum(n_valid - k, 0)
+    # reprolint: disable=RPL002 -- verbatim pre-top_k oracle; the full sort IS
+    # the reference semantics the fast path is bit-tested against
     z_desc = -jnp.sort(-z)
     tau_star = jnp.where(delta > 0, z_desc[jnp.maximum(delta - 1, 0)], tau)
     return _evict_apply(state_keys, counts, kb, seed, tau, l, delta, tau_star,
@@ -885,7 +894,7 @@ def sample_fixed_k(keys, weights=None, *, k, l, salt=0, chunk=2048) -> SampleRes
     """1-pass fixed-size continuous SH_l sample (the paper's recommended scheme)."""
     keys, weights = _prep(keys, weights, chunk)
     st = _run_fixed_k_continuous(keys, weights, jnp.float32(l), jnp.uint32(salt), k=k, chunk=chunk)
-    return _to_result(st, l=l, kind="continuous", tau=float(st.tau))
+    return _to_result(st, l=l, kind="continuous", tau=float(jax.device_get(st.tau)))
 
 
 # ---------------------------------------------------------------------------
@@ -923,11 +932,13 @@ def _run_pass2(keys, weights, sampled_sorted, *, chunk):
 
     def body(acc, xs):
         ck, cw = xs
-        loc = jnp.searchsorted(sampled_sorted, ck)
+        loc = searchsorted(sampled_sorted, ck)
         loc = jnp.clip(loc, 0, k - 1)
-        match = (sampled_sorted[loc] == ck) & (ck != EMPTY)
+        match = (sampled_sorted[loc] == ck) & is_live(ck)
         return acc.at[loc].add(jnp.where(match, cw, 0.0)), None
 
+    # reprolint: disable=RPL004 -- dtype dispatch, not a literal: f64 only when
+    # the caller already enabled x64 and handed us f64 weights
     acc, _ = jax.lax.scan(body, jnp.zeros((k,), jnp.float64 if weights.dtype == jnp.float64 else jnp.float32), (keys, weights))
     return acc
 
@@ -937,7 +948,7 @@ def sample_two_pass(keys, weights=None, *, k, l, kind="continuous", salt=0, chun
     skeys, sseeds = _run_pass1(keys, weights, jnp.float32(l), jnp.uint32(salt), kind=kind, k=k, chunk=chunk)
     skeys = np.asarray(skeys)
     sseeds = np.asarray(sseeds)
-    valid = skeys != int(EMPTY)
+    valid = is_live(skeys)
     order = np.argsort(sseeds[valid])
     kk = skeys[valid][order]
     if len(kk) > k:
@@ -977,7 +988,7 @@ def _prep(keys, weights, chunk):
 def _to_result(st: TableState, *, l, kind, tau) -> SampleResult:
     keys = np.asarray(st.keys)
     counts = np.asarray(st.counts, dtype=np.float64)
-    valid = keys != int(EMPTY)
+    valid = is_live(keys)
     order = np.argsort(keys[valid])
     return SampleResult(
         keys=keys[valid][order], counts=counts[valid][order], tau=tau, l=l, kind=kind,

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from ...core import hashing as H
 from ...core.samplers import SALT_ELEM, SALT_KEYBASE
-from ...core.segments import EMPTY
+from ...core.segments import EMPTY, is_live  # noqa: F401 (EMPTY re-export)
 
 _INF = jnp.float32(jnp.inf)
 
@@ -75,7 +75,7 @@ def capscore_agg_ref(ks, eids, ws, seg, ls, taus, salt):
     """
     C = ks.shape[0]
     score, delta, entry, kb = capscore_multi_ref(ks, eids, ws, ls, taus, salt)
-    live = ks != EMPTY
+    live = is_live(ks)
     idx = jnp.arange(C)
     w_live = jnp.where(live, ws, 0.0)
     w_total = jax.ops.segment_sum(w_live, seg, num_segments=C)

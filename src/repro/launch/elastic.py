@@ -1,5 +1,10 @@
 """Elastic scaling / failure-recovery simulation.
 
+Randomness boundary: demo inputs here come from ``jax.random`` /
+``np.random`` (baselined, reprolint RPL005); library-side sampling
+randomness must derive from the salted ``(key, eid)`` hashes in
+``core/hashing.py`` so restored/merged sketches stay coordinated.
+
 Demonstrates (on host devices) the production story:
   1. train on an N-device mesh, checkpointing params + optimizer + data
      cursor + sampler sketches;

@@ -10,6 +10,10 @@ paper's application tier — lives in ``launch.stats_serve`` /
 ``stats.scheduler``, which apply the same continuous-batching idea to
 multi-tenant sketch banks (admission queues, coalesced dispatch, overlap).
 
+Randomness boundary: ``main`` uses ``jax.random`` / ``np.random`` only to
+fabricate demo weights and prompts (baselined, reprolint RPL005);
+library-side sampling randomness must come from ``core/hashing.py`` salts.
+
     PYTHONPATH=src python -m repro.launch.serve --requests 6 --max-new 24
 """
 from __future__ import annotations
@@ -34,8 +38,11 @@ class DecodeServer:
         self.active = np.zeros(slots, bool)
         self.outputs: dict[int, list[int]] = {}
         self.slot_req: dict[int, int] = {}
+        # The KV cache is rebound to the call result on every step and the
+        # old buffers are never read again, so donate them in place.
         self._decode = jax.jit(
-            lambda p, tok, c, pos: T.decode_step(p, cfg, tok, c, pos)
+            lambda p, tok, cache, pos: T.decode_step(p, cfg, tok, cache, pos),
+            donate_argnums=(2,),
         )
 
     def admit(self, req_id: int, prompt: np.ndarray) -> bool:

@@ -1,5 +1,11 @@
 """Multi-tenant stats server: stacked banks + continuous batching + overlap.
 
+Randomness boundary: the synthetic driver in ``main`` draws its workload
+from ``np.random`` (baselined, reprolint RPL005); *library-side* randomness
+— sampling scores, eviction races, merge coordination — must derive from
+the salted ``(key, eid)`` hashes in ``core/hashing.py``, never from an
+ambient PRNG, or cross-host merges lose the coordinated-sampling guarantee.
+
 The production serving tier for frequency-cap statistics (DESIGN.md §10).
 N tenants' sketch grids live as ONE stacked pytree (``MultiTenantStats``
 over ``core.incremental.TenantBank``); a continuous-batching scheduler

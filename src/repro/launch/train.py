@@ -6,6 +6,10 @@ the production mesh (same step function the dry-run lowers at 512 chips).
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
         --steps 50 --batch 8 --seq 128
+
+Randomness boundary: model-parameter init uses ``jax.random.PRNGKey``
+(baselined, reprolint RPL005); the stream-statistics side draws no ambient
+randomness — sampling scores derive from ``core/hashing.py`` salts.
 """
 from __future__ import annotations
 

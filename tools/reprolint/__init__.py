@@ -1,0 +1,28 @@
+"""reprolint: the project's jaxpr+AST invariant checker and retrace auditor.
+
+Two engines mechanically enforce the hot-path rules PRs 1-6 established by
+hand (DESIGN.md §11 lists each rule, the invariant it encodes, and which PR
+established it):
+
+* an AST lint engine (stdlib ``ast``, zero dependencies) with rules
+  RPL001-RPL007, per-line ``# reprolint: disable=RPLxxx -- reason`` pragmas
+  and a committed baseline (``tools/reprolint/baseline.json``);
+* a runtime retrace auditor (``tools.reprolint.retrace``) that replays the
+  benchmark smoke workloads against the library's jit entry points and diffs
+  the observed compile counts against a committed budget
+  (``tools/reprolint/reprolint_traces.json``).
+
+CLI::
+
+    python -m tools.reprolint src/ tests/ benchmarks/   # AST engine
+    python -m tools.reprolint --retrace                 # retrace auditor
+
+Both exit non-zero on any unsuppressed violation / budget excess, so CI can
+gate on them like a test suite.
+"""
+from __future__ import annotations
+
+__version__ = "1.0.0"
+
+from .config import Config, load_config  # noqa: F401
+from .engine import LintEngine, Violation, lint_paths, lint_text  # noqa: F401

@@ -1,0 +1,50 @@
+"""CLI: ``python -m tools.reprolint [paths ...] [--retrace]``.
+
+Run from the repo root. With positional paths (or none — config default),
+runs the AST engine and exits 1 on any unsuppressed violation. With
+``--retrace``, runs the runtime retrace auditor against the committed
+compile-count budget (requires jax + ``PYTHONPATH=src``); ``--update-budget``
+rewrites the budget file from the measured counts instead of diffing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .config import load_config
+from .engine import LintEngine
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="project invariant checker: AST lint + jit retrace audit",
+    )
+    parser.add_argument("paths", nargs="*", help="files/dirs to lint (default: config paths)")
+    parser.add_argument("--root", default=".", help="repo root (default: cwd)")
+    parser.add_argument("--retrace", action="store_true", help="run the runtime retrace auditor")
+    parser.add_argument(
+        "--update-budget",
+        action="store_true",
+        help="with --retrace: rewrite reprolint_traces.json from measured counts",
+    )
+    parser.add_argument(
+        "--no-baseline", action="store_true", help="ignore the committed baseline file"
+    )
+    args = parser.parse_args(argv)
+
+    config = load_config(Path(args.root))
+
+    if args.retrace:
+        from . import retrace
+
+        return retrace.main(config, update=args.update_budget)
+
+    engine = LintEngine(config, use_baseline=not args.no_baseline)
+    result = engine.lint_paths(args.paths or None)
+    return engine.report(result)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

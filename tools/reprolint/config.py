@@ -1,0 +1,236 @@
+"""Configuration for reprolint.
+
+Loaded from the ``[tool.reprolint]`` table in ``pyproject.toml``. This runs
+on Python 3.10 (no ``tomllib``) and must stay dependency-free, so a minimal
+TOML-subset reader lives here: it understands exactly the value shapes the
+table uses — strings, booleans, integers, and (possibly multiline) lists of
+strings. That subset is asserted by tests; anything fancier belongs in a
+real TOML parser.
+
+All path globs use :func:`fnmatch.fnmatch` semantics against the
+POSIX-style path relative to the repo root — note ``*`` matches across
+``/`` in fnmatch, so ``src/repro/kernels/*`` covers nested files too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+
+SECTION = "tool.reprolint"
+
+# Defaults mirror the committed pyproject table so the engine still works on
+# a bare checkout (and in lint_text-based tests that pass no pyproject).
+DEFAULTS: dict[str, object] = {
+    # Directories the CLI scans when invoked with no positional paths.
+    "paths": ["src", "tests", "benchmarks"],
+    # RPL002/RPL006 scope: modules on the per-chunk / per-query hot path,
+    # where a stray sort-shaped op or raw sentinel compare is a perf or
+    # correctness landmine (DESIGN.md §11).
+    "hot_path": [
+        "src/repro/core/vectorized.py",
+        "src/repro/core/incremental.py",
+        "src/repro/core/distributed.py",
+        "src/repro/core/segments.py",
+        "src/repro/kernels/capscore/*.py",
+        "src/repro/stats/query.py",
+    ],
+    # Modules allowed to contain the raw selection primitives (they ARE the
+    # registered duals) and raw sentinel compares (they define the helpers).
+    "dual_registry": ["src/repro/core/segments.py"],
+    # RPL005 scope: library code whose randomness must derive from salted
+    # (key, eid) hashing in core/hashing.py. launch/ is included so the
+    # demo-driver boundary is an explicit, baselined allowlist rather than a
+    # blind spot. data/ and benchmarks/ are synthetic workload generators,
+    # deliberately out of scope.
+    "randomness_scope": [
+        "src/repro/core/*",
+        "src/repro/stats/*",
+        "src/repro/kernels/*",
+        "src/repro/launch/*",
+    ],
+    # RPL004 scope: f64 literals are policed in library code only; tests
+    # build f64 oracles freely.
+    "x64_scope": ["src/repro/*"],
+    # RPL001(b): pytree container types that live on device. A function
+    # parameter annotated with one of these is treated as device-resident.
+    "device_state_types": ["SamplerState", "TableState"],
+    # RPL003: a jit whose wrapped callable has a parameter matching one of
+    # these (exact name, or leading underscore-separated word, e.g.
+    # table_a -> table) is considered state-advancing.
+    "state_param_names": ["state", "table", "acc", "carry", "cache", "bank", "tab", "st"],
+    "baseline": "tools/reprolint/baseline.json",
+    "trace_budget": "tools/reprolint/reprolint_traces.json",
+}
+
+
+@dataclasses.dataclass
+class Config:
+    root: Path
+    paths: list[str]
+    hot_path: list[str]
+    dual_registry: list[str]
+    randomness_scope: list[str]
+    x64_scope: list[str]
+    device_state_types: list[str]
+    state_param_names: list[str]
+    baseline: str
+    trace_budget: str
+
+    @classmethod
+    def from_mapping(cls, root: Path, data: dict[str, object]) -> "Config":
+        merged = dict(DEFAULTS)
+        unknown = set(data) - set(DEFAULTS)
+        if unknown:
+            raise ValueError(f"[{SECTION}] unknown keys: {sorted(unknown)}")
+        merged.update(data)
+        return cls(root=Path(root), **merged)  # type: ignore[arg-type]
+
+    # -- scope predicates (all take repo-relative POSIX paths) ---------------
+
+    def _match(self, relpath: str, globs: list[str]) -> bool:
+        return any(fnmatch.fnmatch(relpath, g) for g in globs)
+
+    def is_hot_path(self, relpath: str) -> bool:
+        return self._match(relpath, self.hot_path)
+
+    def is_dual_registry(self, relpath: str) -> bool:
+        return self._match(relpath, self.dual_registry)
+
+    def in_randomness_scope(self, relpath: str) -> bool:
+        return self._match(relpath, self.randomness_scope)
+
+    def in_x64_scope(self, relpath: str) -> bool:
+        return self._match(relpath, self.x64_scope)
+
+    def is_state_param(self, name: str) -> bool:
+        if name in self.state_param_names:
+            return True
+        head = name.split("_", 1)[0]
+        return head in self.state_param_names
+
+
+def load_config(root: str | Path) -> Config:
+    root = Path(root)
+    pyproject = root / "pyproject.toml"
+    data: dict[str, object] = {}
+    if pyproject.is_file():
+        data = _read_toml_section(pyproject.read_text(), SECTION)
+    return Config.from_mapping(root, data)
+
+
+# --------------------------------------------------------------------------
+# Minimal TOML-subset reader (see module docstring for why it exists).
+# --------------------------------------------------------------------------
+
+_SECTION_RE = re.compile(r"^\s*\[(?P<name>[^\]]+)\]\s*(?:#.*)?$")
+_KEY_RE = re.compile(r"^\s*(?P<key>[A-Za-z0-9_-]+)\s*=\s*(?P<rest>.*)$")
+
+
+def _read_toml_section(text: str, section: str) -> dict[str, object]:
+    """Extract one ``[section]`` table supporting str/bool/int/list-of-str."""
+    out: dict[str, object] = {}
+    lines = text.splitlines()
+    i = 0
+    in_section = False
+    while i < len(lines):
+        line = lines[i]
+        m = _SECTION_RE.match(line)
+        if m:
+            in_section = m.group("name").strip() == section
+            i += 1
+            continue
+        if not in_section or not line.strip() or line.lstrip().startswith("#"):
+            i += 1
+            continue
+        km = _KEY_RE.match(line)
+        if not km:
+            raise ValueError(f"[{section}] cannot parse line {i + 1}: {line!r}")
+        key = km.group("key").replace("-", "_")
+        rest = km.group("rest").strip()
+        if rest.startswith("["):
+            # Accumulate until the closing bracket (multiline lists).
+            buf = _strip_comment(rest)
+            while not _balanced(buf):
+                i += 1
+                if i >= len(lines):
+                    raise ValueError(f"[{section}] unterminated list for {key!r}")
+                buf += " " + _strip_comment(lines[i].strip())
+            out[key] = _parse_list(buf, section, key)
+        else:
+            out[key] = _parse_scalar(_strip_comment(rest), section, key)
+        i += 1
+    return out
+
+
+def _strip_comment(value: str) -> str:
+    """Drop a trailing ``# comment`` outside of quoted strings."""
+    in_str: str | None = None
+    for j, ch in enumerate(value):
+        if in_str:
+            if ch == in_str:
+                in_str = None
+        elif ch in "\"'":
+            in_str = ch
+        elif ch == "#":
+            return value[:j].rstrip()
+    return value.strip()
+
+
+def _balanced(buf: str) -> bool:
+    depth = 0
+    in_str: str | None = None
+    for ch in buf:
+        if in_str:
+            if ch == in_str:
+                in_str = None
+        elif ch in "\"'":
+            in_str = ch
+        elif ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth -= 1
+            if depth == 0:
+                return True
+    return depth <= 0
+
+
+def _parse_scalar(value: str, section: str, key: str) -> object:
+    if len(value) >= 2 and value[0] == value[-1] and value[0] in "\"'":
+        return value[1:-1]
+    if value == "true":
+        return True
+    if value == "false":
+        return False
+    try:
+        return int(value)
+    except ValueError:
+        raise ValueError(f"[{section}] {key}: unsupported value {value!r}") from None
+
+
+def _parse_list(buf: str, section: str, key: str) -> list[object]:
+    body = _strip_comment(buf).strip()
+    if not (body.startswith("[") and body.endswith("]")):
+        raise ValueError(f"[{section}] {key}: malformed list {buf!r}")
+    items: list[object] = []
+    token = ""
+    in_str: str | None = None
+    for ch in body[1:-1]:
+        if in_str:
+            token += ch
+            if ch == in_str:
+                in_str = None
+            continue
+        if ch in "\"'":
+            in_str = ch
+            token += ch
+        elif ch == ",":
+            if token.strip():
+                items.append(_parse_scalar(token.strip(), section, key))
+            token = ""
+        else:
+            token += ch
+    if token.strip():
+        items.append(_parse_scalar(token.strip(), section, key))
+    return items

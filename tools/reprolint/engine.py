@@ -1,0 +1,287 @@
+"""Lint driver: file discovery, pragma suppression, baseline, reporting.
+
+Suppression mechanics (both require a justification to count):
+
+* inline pragma, on the flagged line or anywhere in the contiguous
+  comment block immediately above it::
+
+      x = jnp.argsort(z)  # reprolint: disable=RPL002 -- once-per-batch boundary
+
+* file-level pragma anywhere in the file::
+
+      # reprolint: disable-file=RPL005 -- synthetic demo driver
+
+* baseline entry in ``tools/reprolint/baseline.json`` matching
+  ``(code, path, context)`` where context is the enclosing function/class
+  qualname (line-number independent, so refactors don't churn the file).
+
+A pragma without a ``-- reason`` does NOT suppress; it is itself reported
+(code RPL000) so the justification contract stays honest. Baseline entries
+that match nothing are reported as warnings so the file shrinks over time.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .config import Config, load_config
+from .rules import RULES, FileContext
+
+_PRAGMA_RE = re.compile(
+    r"#\s*reprolint:\s*(?P<kind>disable|disable-file)\s*=\s*"
+    r"(?P<codes>RPL\d{3}(?:\s*,\s*RPL\d{3})*)"
+    r"(?:\s*--\s*(?P<reason>\S.*))?"
+)
+
+
+@dataclasses.dataclass
+class Violation:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+    context: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} [{self.context}] {self.message}"
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int
+    codes: set[str]
+    file_level: bool
+    justified: bool
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: list[Violation]
+    suppressed: int = 0
+    baselined: int = 0
+    unused_baseline: list[dict] = dataclasses.field(default_factory=list)
+    errors: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.errors
+
+
+def _scan_pragmas(lines: list[str]) -> list[Pragma]:
+    out = []
+    for i, line in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group("codes").split(",")}
+        out.append(
+            Pragma(
+                line=i,
+                codes=codes,
+                file_level=m.group("kind") == "disable-file",
+                justified=bool(m.group("reason")),
+            )
+        )
+    return out
+
+
+class _Baseline:
+    def __init__(self, entries: list[dict]):
+        self.entries = entries
+        self.used = [False] * len(entries)
+
+    def matches(self, v: Violation) -> bool:
+        for i, e in enumerate(self.entries):
+            if (
+                e.get("code") == v.code
+                and e.get("path") == v.path
+                and e.get("context") == v.context
+            ):
+                self.used[i] = True
+                return True
+        return False
+
+    def unused(self) -> list[dict]:
+        return [e for e, u in zip(self.entries, self.used) if not u]
+
+
+def _load_baseline(config: Config) -> _Baseline:
+    path = config.root / config.baseline
+    if not path.is_file():
+        return _Baseline([])
+    data = json.loads(path.read_text())
+    return _Baseline(list(data.get("entries", [])))
+
+
+class LintEngine:
+    def __init__(self, config: Config, use_baseline: bool = True):
+        self.config = config
+        self.baseline = _load_baseline(config) if use_baseline else _Baseline([])
+
+    # -- single-file linting -------------------------------------------------
+
+    def lint_source(self, source: str, relpath: str) -> LintResult:
+        result = LintResult(violations=[])
+        try:
+            ctx = FileContext(relpath, source, self.config)
+        except SyntaxError as exc:
+            result.errors.append(f"{relpath}: syntax error: {exc}")
+            return result
+
+        pragmas = _scan_pragmas(ctx.lines)
+        file_codes = {c for p in pragmas if p.file_level and p.justified for c in p.codes}
+        line_codes: dict[int, set[str]] = {}
+        for p in pragmas:
+            if p.file_level or not p.justified:
+                continue
+            line_codes.setdefault(p.line, set()).update(p.codes)
+        # Report unjustified pragmas so `-- reason` stays mandatory.
+        for p in pragmas:
+            if not p.justified:
+                result.violations.append(
+                    Violation(
+                        path=relpath,
+                        line=p.line,
+                        col=1,
+                        code="RPL000",
+                        message="reprolint pragma without a `-- justification`; "
+                        "suppressions must say why",
+                        context=_context_at_line(ctx, p.line),
+                    )
+                )
+
+        for code, rule in sorted(RULES.items()):
+            for finding in rule.check(ctx):
+                node = finding.node
+                line = getattr(node, "lineno", 1)
+                col = getattr(node, "col_offset", 0) + 1
+                v = Violation(
+                    path=relpath,
+                    line=line,
+                    col=col,
+                    code=code,
+                    message=finding.message,
+                    context=ctx.context_of(node),
+                )
+                if code in file_codes:
+                    result.suppressed += 1
+                    continue
+                if code in _codes_covering(ctx.lines, line_codes, line):
+                    result.suppressed += 1
+                    continue
+                if self.baseline.matches(v):
+                    result.baselined += 1
+                    continue
+                result.violations.append(v)
+        return result
+
+    # -- tree walking --------------------------------------------------------
+
+    def iter_files(self, paths: Iterable[str]) -> Iterable[Path]:
+        seen = set()
+        root = self.config.root.resolve()
+        for p in paths:
+            path = (root / p).resolve()
+            if path.is_file() and path.suffix == ".py":
+                files = [path]
+            elif path.is_dir():
+                files = sorted(path.rglob("*.py"))
+            else:
+                continue
+            for f in files:
+                if "__pycache__" in f.parts or f in seen:
+                    continue
+                seen.add(f)
+                yield f
+
+    def lint_paths(self, paths: Optional[Iterable[str]] = None) -> LintResult:
+        paths = list(paths) if paths else list(self.config.paths)
+        total = LintResult(violations=[])
+        root = self.config.root.resolve()
+        for f in self.iter_files(paths):
+            rel = f.relative_to(root).as_posix()
+            r = self.lint_source(f.read_text(), rel)
+            total.violations.extend(r.violations)
+            total.suppressed += r.suppressed
+            total.baselined += r.baselined
+            total.errors.extend(r.errors)
+        total.unused_baseline = self.baseline.unused()
+        total.violations.sort(key=lambda v: (v.path, v.line, v.col, v.code))
+        return total
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self, result: LintResult, stream=sys.stdout) -> int:
+        for err in result.errors:
+            print(f"error: {err}", file=stream)
+        for v in result.violations:
+            print(v.render(), file=stream)
+        for e in result.unused_baseline:
+            print(
+                f"warning: unused baseline entry {e.get('code')} "
+                f"{e.get('path')} [{e.get('context')}] — remove it",
+                file=stream,
+            )
+        n = len(result.violations)
+        print(
+            f"reprolint: {n} violation(s), {result.suppressed} pragma-suppressed, "
+            f"{result.baselined} baselined",
+            file=stream,
+        )
+        return 0 if result.ok else 1
+
+
+def _codes_covering(lines: list[str], line_codes: dict[int, set[str]], line: int) -> set[str]:
+    """Pragma codes applying to ``line``: its own, plus any found in the
+    contiguous run of comment-only lines directly above it."""
+    codes = set(line_codes.get(line, ()))
+    i = line - 1
+    while i >= 1 and lines[i - 1].lstrip().startswith("#"):
+        codes |= line_codes.get(i, set())
+        i -= 1
+    return codes
+
+
+def _context_at_line(ctx: FileContext, line: int) -> str:
+    """Qualname of the innermost def/class containing a source line."""
+    best = "<module>"
+    best_span = None
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        if node.lineno <= line <= end:
+            span = end - node.lineno
+            if best_span is None or span < best_span:
+                best_span = span
+                # context_of(def) already includes the def's own name.
+                best = ctx.context_of(node)
+    return best
+
+
+# -- convenience API (used by tests) ----------------------------------------
+
+
+def lint_text(
+    source: str,
+    relpath: str = "src/repro/core/fixture.py",
+    config: Optional[Config] = None,
+    use_baseline: bool = False,
+) -> list[Violation]:
+    config = config or Config.from_mapping(Path("."), {})
+    return LintEngine(config, use_baseline=use_baseline).lint_source(source, relpath).violations
+
+
+def lint_paths(
+    paths: Optional[Iterable[str]] = None,
+    root: str | Path = ".",
+    use_baseline: bool = True,
+) -> LintResult:
+    config = load_config(root)
+    return LintEngine(config, use_baseline=use_baseline).lint_paths(paths)

@@ -1,0 +1,197 @@
+"""Runtime retrace auditor: compile-count budgets for the jit entry points.
+
+The AST engine cannot see *dynamic* retrace storms — a cache key that starts
+varying (an unhashable static, a host scalar folded into a shape, a dtype
+flapping between calls) compiles a fresh executable per call and shows up
+only at runtime. This auditor replays the benchmark smoke workloads against
+the library's jit entry points, reads each function's compile-cache size
+(``PjitFunction._cache_size()``), and diffs the counts against the
+committed budget in ``tools/reprolint/reprolint_traces.json``:
+
+* measured > budget  -> FAIL (a cache-key regression, treated like a perf bug)
+* key missing        -> FAIL (new entry point without a committed budget)
+* measured < budget  -> warning (tighten the budget)
+
+Independent of the budget file, the donated per-chunk update paths
+(``_update_donated`` / ``_update_multi_donated`` / ``_update_bank_donated``)
+must compile **exactly once** across repeated same-shape chunks — that is
+the steady-state serving contract; the auditor hard-fails if it doesn't
+hold, so ``--update-budget`` cannot silently bake in a storm.
+
+Workloads are deliberately deterministic (arange-derived keys, no PRNG) so
+counts are reproducible; run from the repo root with ``PYTHONPATH=src``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Callable
+
+from .config import Config
+
+_SMOKE = dict(chunk=256, k=128, batches=4, batch=512, remainder=100)
+
+# Entry points whose donated/steady-state path must compile exactly once in
+# the smoke workloads regardless of what the budget file says.
+_EXACTLY_ONCE = (
+    "incremental._update_donated",
+    "incremental._update_multi_donated",
+    "incremental._update_bank_donated",
+    "query._dispatch",
+)
+
+
+def _cache_size(fn) -> int:
+    sizer = getattr(fn, "_cache_size", None)
+    if sizer is None:
+        raise RuntimeError(
+            f"{fn!r} has no _cache_size(); jax's PjitFunction interface "
+            "changed — update tools/reprolint/retrace.py"
+        )
+    return int(sizer())
+
+
+def _keys(n: int, offset: int = 0):
+    import numpy as np
+
+    # Deterministic skewed keyspace (no PRNG — RPL005 applies to tools too in
+    # spirit): low ids repeat often, high ids are near-distinct.
+    i = np.arange(n, dtype=np.int64) + offset
+    return ((i * i) % 7919 + (i % 13) * 1000).astype(np.int64)
+
+
+def _audit_ingest() -> dict[str, int]:
+    """Single- and multi-lane samplers over repeated same-shape batches."""
+    from repro.core import incremental as inc
+
+    s = _SMOKE
+    single = inc.IncrementalSampler(4.0, k=s["k"], chunk=s["chunk"], capacity=4096)
+    for b in range(s["batches"]):
+        single.observe(_keys(s["batch"], b * s["batch"]))
+    single.observe(_keys(s["remainder"]))
+    single.finalize()
+    single.finalize()  # repeat finalize: flush path must not recompile
+
+    multi = inc.MultiSampler([2.0, 8.0], k=s["k"], chunk=s["chunk"])
+    for b in range(s["batches"]):
+        multi.observe(_keys(s["batch"], b * s["batch"]))
+    multi.observe(_keys(s["remainder"]))
+    multi.finalize()
+    multi.finalize()
+
+    return {
+        "incremental._update_donated": _cache_size(inc._update_donated),
+        "incremental._update_fresh": _cache_size(inc._update_fresh),
+        "incremental._update_multi_donated": _cache_size(inc._update_multi_donated),
+        "incremental._update_multi_fresh": _cache_size(inc._update_multi_fresh),
+        "incremental._final_evict": _cache_size(inc._final_evict),
+        "incremental._final_evict_multi": _cache_size(inc._final_evict_multi),
+    }
+
+
+def _audit_serve() -> dict[str, int]:
+    """TenantBank steady-state ticks: one stacked compile for all tenants."""
+    from repro.core import incremental as inc
+
+    s = _SMOKE
+    bank = inc.TenantBank([2.0, 8.0], n_tenants=3, k=64, chunk=s["chunk"])
+    for rnd in range(3):
+        for t in range(3):
+            bank.observe(t, _keys(s["chunk"], rnd * 1000 + t))
+        bank.drain()
+    bank.finalize_all()
+    bank.finalize_all()
+    return {
+        "incremental._update_bank_donated": _cache_size(inc._update_bank_donated),
+        "incremental._update_bank_fresh": _cache_size(inc._update_bank_fresh),
+        "incremental._final_evict_bank": _cache_size(inc._final_evict_bank),
+    }
+
+
+def _audit_query() -> dict[str, int]:
+    """QueryEngine batches: repeated same-sized batches hit one executable."""
+    from repro.core import freqfns, incremental as inc
+    from repro.stats import query as Q
+
+    s = _SMOKE
+    multi = inc.MultiSampler([2.0, 8.0], k=s["k"], chunk=s["chunk"])
+    multi.observe(_keys(4 * s["chunk"]))
+    engine = Q.QueryEngine(multi.finalize())
+    qs = [Q.Query(fn=freqfns.cap(2.0), l=2.0), Q.Query(fn=freqfns.distinct(), l=8.0),
+          Q.Query(fn=freqfns.total(), l=2.0), Q.Query(fn=freqfns.cap(8.0), l=8.0)]
+    engine.query_batch(qs)
+    engine.query_batch(qs)  # same batch size: must reuse the executable
+    return {"query._dispatch": _cache_size(Q._dispatch)}
+
+
+WORKLOADS: dict[str, Callable[[], dict[str, int]]] = {
+    "ingest": _audit_ingest,
+    "serve": _audit_serve,
+    "query": _audit_query,
+}
+
+
+def measure() -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for name, fn in WORKLOADS.items():
+        counts.update(fn())
+    return counts
+
+
+def main(config: Config, *, update: bool = False, stream=sys.stdout) -> int:
+    from tools import reprolint as _pkg
+
+    budget_path = config.root / config.trace_budget
+    counts = measure()
+
+    failures: list[str] = []
+    for key in _EXACTLY_ONCE:
+        if counts.get(key) != 1:
+            failures.append(
+                f"{key}: compiled {counts.get(key)}x under the smoke workload "
+                "(steady-state contract is exactly 1 — a cache-key regression)"
+            )
+
+    if update:
+        if failures:
+            for f in failures:
+                print(f"FAIL {f}", file=stream)
+            print("retrace: refusing to --update-budget over a broken invariant",
+                  file=stream)
+            return 1
+        budget_path.write_text(json.dumps({
+            "version": 1,
+            "reprolint_version": _pkg.__version__,
+            "workload": "smoke-v1 (tools/reprolint/retrace.py)",
+            "budgets": counts,
+        }, indent=2) + "\n")
+        print(f"retrace: wrote {budget_path} ({len(counts)} budgets)", file=stream)
+        return 0
+
+    if not budget_path.is_file():
+        print(f"retrace: missing budget file {budget_path}; run with "
+              "--update-budget to create it", file=stream)
+        return 1
+    budgets: dict[str, int] = json.loads(budget_path.read_text())["budgets"]
+
+    for key, measured in sorted(counts.items()):
+        if key not in budgets:
+            failures.append(f"{key}: no committed budget (measured {measured})")
+            continue
+        if measured > budgets[key]:
+            failures.append(
+                f"{key}: compiled {measured}x > budget {budgets[key]} — "
+                "retrace regression"
+            )
+        elif measured < budgets[key]:
+            print(f"note: {key} compiled {measured}x < budget {budgets[key]}; "
+                  "tighten with --update-budget", file=stream)
+    for key in sorted(set(budgets) - set(counts)):
+        print(f"warning: budget entry {key} not measured by any workload",
+              file=stream)
+
+    for f in failures:
+        print(f"FAIL {f}", file=stream)
+    print(f"retrace: {len(counts)} entry points, {len(failures)} failure(s)",
+          file=stream)
+    return 1 if failures else 0

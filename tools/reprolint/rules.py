@@ -1,0 +1,820 @@
+"""Lint rules RPL001-RPL007 and the shared AST analyses they sit on.
+
+Every rule is a function ``check(ctx) -> Iterator[Finding]`` registered in
+``RULES`` via the :func:`rule` decorator. ``ctx`` is a :class:`FileContext`
+with the parsed tree plus precomputed facts: which functions are jit-wrapped
+(decorator, module-level ``jax.jit(f)`` / ``partial(jax.jit, ...)``, and
+``jax.jit(lambda ...)`` forms), which source lines sit inside an
+``enable_x64`` ``with`` block, and the qualified name enclosing every node
+(used for baseline matching, which is line-number independent).
+
+Design bias: rules are tuned for *this* codebase and err toward silence.
+RPL001's hot-module hostness analysis only taints values it can prove came
+off-device (parameters annotated with a device state type, or results of
+calling a module-level jit-wrapped name) and only clears them on provable
+host conversion (``jax.device_get`` / ``np.*``); anything it cannot trace is
+not flagged. The pragma + baseline escape hatches cover the rest.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterator, Optional
+
+from .config import Config
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Finding:
+    node: ast.AST
+    message: str
+
+
+@dataclasses.dataclass
+class Rule:
+    code: str
+    summary: str
+    check: Callable[["FileContext"], Iterator[Finding]]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str):
+    def register(fn: Callable[["FileContext"], Iterator[Finding]]):
+        RULES[code] = Rule(code, summary, fn)
+        return fn
+
+    return register
+
+
+# --------------------------------------------------------------------------
+# Shared helpers
+# --------------------------------------------------------------------------
+
+#: module spellings canonicalized before dotted-name matching
+_CANON = (
+    ("jax.numpy.", "jnp."),
+    ("numpy.random.", "np.random."),
+    ("numpy.", "np."),
+)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, canonicalized; None otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    name = ".".join(reversed(parts))
+    for long, short in _CANON:
+        if name.startswith(long):
+            name = short + name[len(long):]
+            break
+    return name
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted(node) in ("jax.jit", "jit")
+
+
+def _is_partial_jit(call: ast.AST) -> bool:
+    """``functools.partial(jax.jit, ...)``"""
+    return (
+        isinstance(call, ast.Call)
+        and dotted(call.func) in ("functools.partial", "partial")
+        and bool(call.args)
+        and _is_jax_jit(call.args[0])
+    )
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One place a callable gets wrapped in jax.jit."""
+
+    node: ast.AST  # node to anchor RPL003/RPL007 findings on
+    wrapped: Optional[ast.AST]  # FunctionDef / Lambda if resolvable
+    donated: bool
+    static_names: list[str]
+    bound_name: Optional[str]  # module-level name the jitted fn is bound to
+
+
+def _jit_kwargs(call_kwargs: list[ast.keyword]) -> tuple[bool, list[str]]:
+    donated = False
+    statics: list[str] = []
+    for kw in call_kwargs:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            donated = True
+        if kw.arg in ("static_argnames", "static_argnums"):
+            statics.extend(_static_names(kw.value))
+    return donated, statics
+
+
+def _static_names(node: ast.AST) -> list[str]:
+    """String static_argnames from a literal str/tuple/list; ints ignored
+    here (RPL007 resolves static_argnums positionally)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def _static_nums(call_kwargs: list[ast.keyword]) -> list[int]:
+    for kw in call_kwargs:
+        if kw.arg == "static_argnums":
+            node = kw.value
+            if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                return [node.value]
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return [
+                    e.value
+                    for e in node.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                ]
+    return []
+
+
+def _params(fn: ast.AST) -> list[ast.arg]:
+    assert isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+    a = fn.args
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+# --------------------------------------------------------------------------
+# FileContext
+# --------------------------------------------------------------------------
+
+
+class FileContext:
+    def __init__(self, relpath: str, source: str, config: Config):
+        self.relpath = relpath
+        self.source = source
+        self.config = config
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+
+        self.qualname: dict[int, str] = {}  # id(node) -> enclosing symbol
+        self.jit_sites: list[JitSite] = []
+        self.jit_defs: set[int] = set()  # id() of jit-wrapped FunctionDef/Lambda
+        self.jit_names: set[str] = set()  # names whose call returns device values
+        self.x64_lines: set[int] = set()
+        self._defs_by_name: dict[str, ast.AST] = {}
+
+        self._annotate_qualnames()
+        self._collect_defs()
+        self._collect_jit_sites()
+        self._collect_x64_lines()
+
+    # -- precomputation ------------------------------------------------------
+
+    def _annotate_qualnames(self) -> None:
+        def walk(node: ast.AST, stack: list[str]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                    self.qualname[id(child)] = ".".join(stack + [child.name]) or "<module>"
+                    walk(child, stack + [child.name])
+                else:
+                    self.qualname[id(child)] = ".".join(stack) or "<module>"
+                    walk(child, stack)
+
+        self.qualname[id(self.tree)] = "<module>"
+        walk(self.tree, [])
+
+    def context_of(self, node: ast.AST) -> str:
+        return self.qualname.get(id(node), "<module>")
+
+    def _collect_defs(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # Last definition wins; adequate for resolving jax.jit(name).
+                self._defs_by_name[node.name] = node
+
+    def _collect_jit_sites(self) -> None:
+        # Form 1: decorated defs.
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                donated, statics = False, []
+                hit = False
+                if _is_jax_jit(dec):
+                    hit = True
+                elif isinstance(dec, ast.Call) and _is_jax_jit(dec.func):
+                    hit = True
+                    donated, statics = _jit_kwargs(dec.keywords)
+                    statics += self._nums_to_names(node, _static_nums(dec.keywords))
+                elif _is_partial_jit(dec):
+                    hit = True
+                    donated, statics = _jit_kwargs(dec.keywords)
+                    statics += self._nums_to_names(node, _static_nums(dec.keywords))
+                if hit:
+                    self._add_site(node, node, donated, statics, node.name)
+                    break
+        # Form 2/3: call forms anywhere — jax.jit(fn_or_lambda, ...) and
+        # functools.partial(jax.jit, ...)(fn_or_lambda).
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            donated, statics, target = False, [], None
+            if _is_jax_jit(node.func) and node.args:
+                donated, statics = _jit_kwargs(node.keywords)
+                target = node.args[0]
+                nums = _static_nums(node.keywords)
+            elif _is_partial_jit(node.func) and node.args:
+                inner = node.func
+                assert isinstance(inner, ast.Call)
+                donated, statics = _jit_kwargs(inner.keywords)
+                target = node.args[0]
+                nums = _static_nums(inner.keywords)
+            else:
+                continue
+            wrapped: Optional[ast.AST] = None
+            if isinstance(target, ast.Lambda):
+                wrapped = target
+            elif isinstance(target, ast.Name):
+                wrapped = self._defs_by_name.get(target.id)
+            if wrapped is not None:
+                statics = statics + self._nums_to_names(wrapped, nums)
+            self._add_site(node, wrapped, donated, statics, self._bound_name(node))
+
+    def _nums_to_names(self, fn: Optional[ast.AST], nums: list[int]) -> list[str]:
+        if fn is None or not nums:
+            return []
+        params = _params(fn)
+        return [params[i].arg for i in nums if 0 <= i < len(params)]
+
+    def _bound_name(self, call: ast.Call) -> Optional[str]:
+        """If ``name = jax.jit(...)`` at module/class level, return name."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and node.value is call:
+                if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+                    return node.targets[0].id
+        return None
+
+    def _add_site(
+        self,
+        node: ast.AST,
+        wrapped: Optional[ast.AST],
+        donated: bool,
+        statics: list[str],
+        name: Optional[str],
+    ) -> None:
+        self.jit_sites.append(JitSite(node, wrapped, donated, statics, name))
+        if wrapped is not None:
+            self.jit_defs.add(id(wrapped))
+        if name:
+            self.jit_names.add(name)
+
+    def _collect_x64_lines(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.With):
+                continue
+            for item in node.items:
+                d = dotted(item.context_expr) or (
+                    dotted(item.context_expr.func)
+                    if isinstance(item.context_expr, ast.Call)
+                    else None
+                )
+                if d and ("enable_x64" in d or "x64" in d.split(".")[-1]):
+                    end = getattr(node, "end_lineno", node.lineno) or node.lineno
+                    self.x64_lines.update(range(node.lineno, end + 1))
+                    break
+
+    # -- scope shorthands ----------------------------------------------------
+
+    @property
+    def is_hot(self) -> bool:
+        return self.config.is_hot_path(self.relpath)
+
+    @property
+    def is_registry(self) -> bool:
+        return self.config.is_dual_registry(self.relpath)
+
+
+# --------------------------------------------------------------------------
+# RPL001 — host-device sync inside jit scope / on device state
+# --------------------------------------------------------------------------
+
+# np.* functions that consume array data (forcing a device->host transfer
+# when handed a traced value). Dtype constructors (np.int32(…) on a python
+# scalar) and constants (np.inf, np.pi) are deliberately absent.
+_NP_ARRAY_FNS = {
+    "asarray", "array", "ascontiguousarray", "sum", "min", "max", "mean",
+    "prod", "std", "var", "sort", "argsort", "argmin", "argmax", "where",
+    "concatenate", "stack", "vstack", "hstack", "dot", "matmul", "clip",
+    "abs", "any", "all", "isin", "searchsorted", "cumsum", "cumprod",
+    "unique", "nonzero", "count_nonzero", "take", "maximum", "minimum",
+    "floor", "ceil", "round", "log", "exp", "sqrt", "allclose",
+    "array_equal",
+}
+
+
+def _iter_jit_scope_syncs(ctx: FileContext, site: JitSite) -> Iterator[Finding]:
+    fn = site.wrapped
+    assert fn is not None
+    # Traced inputs: the wrapped callable's params minus static_argnames.
+    traced = {p.arg for p in _params(fn)} - set(site.static_names)
+
+    def shape_like(node: ast.AST) -> bool:
+        """Constants, statics, and metadata pulls that are safe in a trace."""
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.UnaryOp):
+            return shape_like(node.operand)
+        if isinstance(node, ast.BinOp):
+            return shape_like(node.left) and shape_like(node.right)
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id in ("len", "min", "max"):
+                return all(shape_like(a) for a in node.args)
+            d = dotted(node.func)
+            return bool(d) and d.startswith("math.")
+        if isinstance(node, ast.Subscript):
+            return shape_like(node.value)
+        if isinstance(node, ast.Attribute):
+            if node.attr in ("shape", "ndim", "size", "dtype", "itemsize", "nbytes"):
+                return True
+            return shape_like(node.value)
+        if isinstance(node, ast.Name):
+            # Only the jit callable's traced params are known-traced; locals
+            # and closure names stay conservative (not flagged).
+            return node.id not in traced
+        return False
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        # x.item()
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "item"
+            and not node.args
+        ):
+            yield Finding(node, ".item() forces a host sync inside jit-traced code")
+            continue
+        # float(x) / int(x) / bool(x) on traced expressions
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in ("float", "int", "bool")
+            and len(node.args) == 1
+            and not shape_like(node.args[0])
+        ):
+            yield Finding(
+                node,
+                f"{node.func.id}() on a traced value forces a host sync inside jit",
+            )
+            continue
+        # np.<array-fn>(traced, ...) inside a trace
+        d = dotted(node.func)
+        if (
+            d
+            and d.startswith("np.")
+            and d.split(".")[-1] in _NP_ARRAY_FNS
+            and any(not shape_like(a) for a in node.args)
+        ):
+            yield Finding(
+                node,
+                f"{d}() inside jit-traced code pulls traced operands to host; use jnp",
+            )
+
+
+class _Hostness(ast.NodeVisitor):
+    """Order-sensitive host/device taint for one function body.
+
+    ``state[name]`` is ``"device"`` (came off a jit call or a device-typed
+    param), ``"host"`` (went through jax.device_get / np.*), or absent
+    (unknown — never flagged). Findings are float()/int()/.item() applied to
+    a device-tainted root outside any jit trace: each is a silent blocking
+    transfer on the host hot path.
+    """
+
+    def __init__(self, ctx: FileContext, fn: ast.FunctionDef):
+        self.ctx = ctx
+        self.fn = fn
+        self.state: dict[str, str] = {}
+        self.findings: list[Finding] = []
+        for p in _params(fn):
+            ann = p.annotation
+            ann_name = None
+            if ann is not None:
+                ann_name = dotted(ann)
+                if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+                    ann_name = ann.value
+            if ann_name and ann_name.split(".")[-1] in ctx.config.device_state_types:
+                self.state[p.arg] = "device"
+
+    # taint inference ------------------------------------------------------
+
+    def _infer(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d:
+                base = d.split(".")[0]
+                if d in ("jax.device_get", "jax.block_until_ready") or base in ("np",):
+                    return "host"
+                if d in self.ctx.jit_names or (
+                    "." not in d and d in self.ctx.jit_names
+                ):
+                    return "device"
+            kinds = {self._infer(a) for a in node.args}
+            kinds |= {self._infer(k.value) for k in node.keywords}
+            kinds.discard(None)
+            if kinds == {"host"}:
+                return "host"
+            if "device" in kinds:
+                return "device"
+            return None
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return self._infer(node.value)
+        if isinstance(node, ast.Name):
+            return self.state.get(node.id)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            kinds = {self._infer(e) for e in node.elts} - {None}
+            if kinds == {"host"}:
+                return "host"
+            if "device" in kinds:
+                return "device"
+            return None
+        if isinstance(node, (ast.BinOp,)):
+            kinds = {self._infer(node.left), self._infer(node.right)} - {None}
+            if "device" in kinds:
+                return "device"
+            if kinds == {"host"}:
+                return "host"
+            return None
+        if isinstance(node, ast.IfExp):
+            kinds = {self._infer(node.body), self._infer(node.orelse)} - {None}
+            if "device" in kinds:
+                return "device"
+            if kinds == {"host"}:
+                return "host"
+            return None
+        return None
+
+    def _bind(self, target: ast.AST, kind: Optional[str]) -> None:
+        if isinstance(target, ast.Name):
+            if kind is None:
+                self.state.pop(target.id, None)
+            else:
+                self.state[target.id] = kind
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, kind)
+        # Attribute/Subscript targets (self.x = …) stay unknown by design.
+
+    # traversal ------------------------------------------------------------
+
+    def _check_expr(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            if (
+                isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "item"
+                and not sub.args
+                and self._infer(sub.func.value) == "device"
+            ):
+                self.findings.append(
+                    Finding(sub, ".item() on device-resident state is a blocking transfer; jax.device_get once, then read")
+                )
+            elif (
+                isinstance(sub.func, ast.Name)
+                and sub.func.id in ("float", "int")
+                and len(sub.args) == 1
+                and self._infer(sub.args[0]) == "device"
+            ):
+                self.findings.append(
+                    Finding(
+                        sub,
+                        f"{sub.func.id}() on device-resident state is a blocking transfer; jax.device_get once, then read",
+                    )
+                )
+
+    def run(self) -> list[Finding]:
+        self._visit_body(self.fn.body)
+        return self.findings
+
+    def _visit_body(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self._visit_stmt(stmt)
+
+    def _visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested scopes get their own pass
+        if isinstance(stmt, ast.Assign):
+            self._check_expr(stmt.value)
+            kind = self._infer(stmt.value)
+            for t in stmt.targets:
+                self._bind(t, kind)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._check_expr(stmt.value)
+            self._bind(stmt.target, self._infer(stmt.value))
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._check_expr(stmt.value)
+            return
+        if isinstance(stmt, ast.For):
+            self._check_expr(stmt.iter)
+            kind = self._infer(stmt.iter)
+            self._bind(stmt.target, kind)
+            self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.While,)):
+            self._check_expr(stmt.test)
+            self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.If):
+            self._check_expr(stmt.test)
+            self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_expr(item.context_expr)
+            self._visit_body(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self._visit_body(stmt.body)
+            for h in stmt.handlers:
+                self._visit_body(h.body)
+            self._visit_body(stmt.orelse)
+            self._visit_body(stmt.finalbody)
+            return
+        # Return / Expr / Raise / Assert / Delete / …
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._check_expr(child)
+
+
+@rule("RPL001", "host-device sync inside jit scope or on device-resident state")
+def check_rpl001(ctx: FileContext) -> Iterator[Finding]:
+    # (a) inside jit-traced functions, anywhere.
+    for site in ctx.jit_sites:
+        if site.wrapped is not None:
+            yield from _iter_jit_scope_syncs(ctx, site)
+    # (b) hot modules: host functions pulling scalars off device state.
+    if not ctx.is_hot:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if id(node) in ctx.jit_defs:
+            continue
+        yield from _Hostness(ctx, node).run()
+
+
+# --------------------------------------------------------------------------
+# RPL002 — raw selection primitives outside the dual registry
+# --------------------------------------------------------------------------
+
+_SELECTION_FNS = {
+    "jnp.sort": "sort",
+    "jnp.argsort": "argsort",
+    "jnp.lexsort": "lexsort",
+    "jnp.searchsorted": "searchsorted",
+    "jnp.unique": "unique",
+    "jnp.partition": "partition",
+    "jnp.argpartition": "argpartition",
+    "jax.lax.sort": "sort",
+    "jax.lax.sort_key_val": "sort",
+    "jax.lax.top_k": "top_k",
+    "jax.lax.approx_max_k": "top_k",
+    "jax.lax.approx_min_k": "top_k",
+    "lax.sort": "sort",
+    "lax.sort_key_val": "sort",
+    "lax.top_k": "top_k",
+    "lax.approx_max_k": "top_k",
+    "lax.approx_min_k": "top_k",
+}
+
+_DUAL_HINTS = {
+    "sort": "chunk_order / merge_sorted_runs_gather",
+    "argsort": "chunk_order / bottom_k_by",
+    "lexsort": "chunk_order",
+    "searchsorted": "segments.searchsorted (pinned scan_unrolled)",
+    "unique": "sorted-runs boundary masks (segments)",
+    "partition": "kth_smallest + compact_valid",
+    "argpartition": "kth_smallest + compact_valid",
+    "top_k": "kth_smallest + compact_valid / bottom_k_by",
+}
+
+
+@rule("RPL002", "selection primitive in hot-path module bypasses core/segments duals")
+def check_rpl002(ctx: FileContext) -> Iterator[Finding]:
+    if not ctx.is_hot or ctx.is_registry:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d in _SELECTION_FNS:
+            kind = _SELECTION_FNS[d]
+            yield Finding(
+                node,
+                f"{d}() in a hot-path module; route through the registered dual "
+                f"({_DUAL_HINTS[kind]}) so XLA:CPU keeps the rank/scan lowering",
+            )
+
+
+# --------------------------------------------------------------------------
+# RPL003 — state-advancing jit without donation
+# --------------------------------------------------------------------------
+
+
+@rule("RPL003", "state-advancing jax.jit without donate_argnums")
+def check_rpl003(ctx: FileContext) -> Iterator[Finding]:
+    for site in ctx.jit_sites:
+        if site.donated or site.wrapped is None:
+            continue
+        state_params = [
+            p.arg for p in _params(site.wrapped) if ctx.config.is_state_param(p.arg)
+        ]
+        if state_params:
+            anchor = site.node
+            if (
+                isinstance(anchor, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and anchor.decorator_list
+            ):
+                # Anchor on the decorator so a pragma above `@jax.jit` covers it.
+                anchor = anchor.decorator_list[0]
+            yield Finding(
+                anchor,
+                f"jit over state params {state_params} without donate_argnums: "
+                "the old buffers stay live and every tick pays an extra copy",
+            )
+
+
+# --------------------------------------------------------------------------
+# RPL004 — f64 dtype literals outside enable_x64 scopes
+# --------------------------------------------------------------------------
+
+
+@rule("RPL004", "f64 dtype literal outside an enable_x64 scope")
+def check_rpl004(ctx: FileContext) -> Iterator[Finding]:
+    if not ctx.config.in_x64_scope(ctx.relpath):
+        return
+    for node in ast.walk(ctx.tree):
+        hit: Optional[str] = None
+        if isinstance(node, ast.Attribute):
+            d = dotted(node)
+            if d in ("jnp.float64", "jnp.complex128"):
+                hit = d
+        elif isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d and d.startswith("jnp."):
+                for kw in node.keywords:
+                    if (
+                        kw.arg == "dtype"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value in ("float64", "complex128")
+                    ):
+                        hit = f'dtype="{kw.value.value}"'
+        if hit and node.lineno not in ctx.x64_lines:
+            yield Finding(
+                node,
+                f"{hit} outside a `with enable_x64()` block silently truncates "
+                "to f32 (or flips global state); keep f64 inside explicit scopes",
+            )
+
+
+# --------------------------------------------------------------------------
+# RPL005 — ambient randomness where scoring must be salted-hash derived
+# --------------------------------------------------------------------------
+
+_RANDOM_PREFIXES = ("np.random.", "jax.random.", "random.")
+
+
+@rule("RPL005", "ambient randomness in library scope (must derive from core/hashing salts)")
+def check_rpl005(ctx: FileContext) -> Iterator[Finding]:
+    if not ctx.config.in_randomness_scope(ctx.relpath):
+        return
+    # from-import aliases: from numpy.random import default_rng, …
+    aliased: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module in (
+            "numpy.random",
+            "jax.random",
+            "random",
+        ):
+            for alias in node.names:
+                aliased.add(alias.asname or alias.name)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d and any(d.startswith(p) for p in _RANDOM_PREFIXES):
+            yield Finding(
+                node,
+                f"{d}() is ambient randomness; library scoring/merging must "
+                "derive from salted (key, eid) hashes in core/hashing.py",
+            )
+        elif isinstance(node.func, ast.Name) and node.func.id in aliased:
+            yield Finding(
+                node,
+                f"{node.func.id}() (imported from a PRNG module) is ambient "
+                "randomness; derive from core/hashing.py salts",
+            )
+
+
+# --------------------------------------------------------------------------
+# RPL006 — raw EMPTY-sentinel comparisons bypassing is_empty/is_live
+# --------------------------------------------------------------------------
+
+_EMPTY_SENTINEL = 2**31 - 1
+
+
+def _is_sentinel_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id == "EMPTY" or node.id.startswith("_EMPTY")
+    if isinstance(node, ast.Attribute):
+        d = dotted(node)
+        return bool(d) and (d.endswith(".EMPTY") or ("._EMPTY" in d))
+    if isinstance(node, ast.Constant):
+        return node.value == _EMPTY_SENTINEL
+    if isinstance(node, ast.Call):
+        # int(EMPTY) / np.int32(2**31 - 1)
+        return any(_is_sentinel_expr(a) for a in node.args)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+        return (
+            isinstance(node.left, ast.BinOp)
+            and isinstance(node.left.op, ast.Pow)
+            and isinstance(node.right, ast.Constant)
+            and node.right.value == 1
+        )
+    return False
+
+
+@rule("RPL006", "raw == EMPTY sentinel comparison; use segments.is_empty/is_live")
+def check_rpl006(ctx: FileContext) -> Iterator[Finding]:
+    if not ctx.is_hot or ctx.is_registry:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left] + list(node.comparators)
+        if any(_is_sentinel_expr(s) for s in sides):
+            yield Finding(
+                node,
+                "raw sentinel comparison; use segments.is_empty/is_live so the "
+                "EMPTY encoding stays changeable in one place",
+            )
+
+
+# --------------------------------------------------------------------------
+# RPL007 — unhashable static-argnum defaults (retrace storms)
+# --------------------------------------------------------------------------
+
+
+def _is_unhashable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("list", "dict", "set", "bytearray")
+    return False
+
+
+@rule("RPL007", "unhashable static-argnum default forces a retrace per call")
+def check_rpl007(ctx: FileContext) -> Iterator[Finding]:
+    for site in ctx.jit_sites:
+        if site.wrapped is None or not site.static_names:
+            continue
+        fn = site.wrapped
+        if isinstance(fn, ast.Lambda):
+            args = fn.args
+        else:
+            args = fn.args  # type: ignore[union-attr]
+        pos = list(args.posonlyargs) + list(args.args)
+        defaults = list(args.defaults)
+        # defaults align with the tail of positional params
+        for param, default in zip(pos[len(pos) - len(defaults):], defaults):
+            if param.arg in site.static_names and _is_unhashable_default(default):
+                yield Finding(
+                    default,
+                    f"static arg {param.arg!r} has an unhashable default; every "
+                    "call misses the jit cache and retraces — use a tuple or None",
+                )
+        for param, default in zip(args.kwonlyargs, args.kw_defaults):
+            if (
+                default is not None
+                and param.arg in site.static_names
+                and _is_unhashable_default(default)
+            ):
+                yield Finding(
+                    default,
+                    f"static arg {param.arg!r} has an unhashable default; every "
+                    "call misses the jit cache and retraces — use a tuple or None",
+                )
