@@ -11,21 +11,54 @@ Corrections (measured on this container, DESIGN.md §6):
     compiles the layer program separately and stores it under
     `layer_cost_per_device`), for FLOPs, bytes and collectives alike.
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Hardware constants live in ``HW_TABLES`` — one entry per backend of the
+kernel matrix (TPU v5e, A100, a reference CPU host); every term is computed
+against a selected table, never a baked-in chip.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.roofline --records results/dryrun \
-        --mesh pod1 --markdown
+        --mesh pod1 --markdown [--hw tpu-v5e]
+    PYTHONPATH=src python -m benchmarks.roofline --chunk-step \
+        [--chunk 4096] [--lanes 8] [--k 4096] [--hw gpu-a100]
+
+``--chunk-step`` switches from dry-run records to the ANALYTIC ingest model:
+bytes/FLOPs per element for each stage of one fused chunk step (sort, fused
+score+aggregate, table merge, pass-1 fold), bounded against the selected
+hardware table — the arithmetic-intensity map that says which stage hits the
+memory wall first on each backend of the kernel matrix.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 from pathlib import Path
 
-PEAK_FLOPS = 197e12       # bf16 / chip
-HBM_BW = 819e9            # B/s / chip
-LINK_BW = 50e9            # B/s / link
+#: per-backend roofline constants for the kernel matrix (DESIGN.md §12.4):
+#: peak_flops — dense peak per chip (bf16 on accelerators, f32 AVX on CPU);
+#: hbm_bw — main-memory bandwidth per chip; link_bw — per-link interconnect
+#: (ICI / NVLink / socket).  int32/f32 element width is 4 B on every backend.
+HW_TABLES = {
+    "tpu-v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9},
+    "gpu-a100": {"peak_flops": 312e12, "hbm_bw": 1555e9, "link_bw": 300e9},
+    "cpu-host": {"peak_flops": 2e12, "hbm_bw": 100e9, "link_bw": 25e9},
+}
+DEFAULT_HW = "tpu-v5e"
+
+# legacy aliases (pre-table callers) — derived, not hardcoded
+PEAK_FLOPS = HW_TABLES[DEFAULT_HW]["peak_flops"]
+HBM_BW = HW_TABLES[DEFAULT_HW]["hbm_bw"]
+LINK_BW = HW_TABLES[DEFAULT_HW]["link_bw"]
+
+
+def _hw(hw) -> dict:
+    """Resolve a hardware spec: None -> default table, str -> table lookup,
+    dict -> verbatim (custom chips in tests)."""
+    if hw is None:
+        return HW_TABLES[DEFAULT_HW]
+    if isinstance(hw, str):
+        return HW_TABLES[hw]
+    return hw
 
 
 def corrected_costs(rec: dict) -> dict:
@@ -55,16 +88,21 @@ AR_TRAFFIC_FACTOR = 2.0  # ring all-reduce moves 2(P-1)/P ~ 2x its output bytes
 BF16_CPU_INFLATION = 0.5
 
 
-def roofline_terms(rec: dict) -> dict:
+def roofline_terms(rec: dict, hw=None) -> dict:
+    """Roofline terms of one dry-run record against a hardware table.
+
+    ``hw`` is a HW_TABLES key, a custom table dict, or None for the default
+    (TPU v5e, the mesh the dry-run records model)."""
+    t = _hw(hw)
     c = corrected_costs(rec)
     dt_factor = BF16_CPU_INFLATION if rec.get("dtype") == "bfloat16" else 1.0
     coll_bytes = dt_factor * sum(
         v["bytes"] * (AR_TRAFFIC_FACTOR if k == "all-reduce" else 1.0)
         for k, v in c["collectives"].items()
     )
-    t_compute = c["flops"] / PEAK_FLOPS
-    t_memory = dt_factor * c["bytes"] / HBM_BW
-    t_coll = coll_bytes / LINK_BW
+    t_compute = c["flops"] / t["peak_flops"]
+    t_memory = dt_factor * c["bytes"] / t["hbm_bw"]
+    t_coll = coll_bytes / t["link_bw"]
     dominant = max(
         ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
         key=lambda kv: kv[1],
@@ -84,7 +122,7 @@ def roofline_terms(rec: dict) -> dict:
         "step_lower_bound_s": bound,
         "useful_flops_ratio": model_flops_dev / max(c["flops"], 1.0),
         # fraction of roofline: useful work per achievable second vs peak
-        "roofline_fraction": (model_flops_dev / PEAK_FLOPS) / max(bound, 1e-12),
+        "roofline_fraction": (model_flops_dev / t["peak_flops"]) / max(bound, 1e-12),
         "peak_gib": (
             rec["bytes_per_device"]["peak_estimate"]
             - (1 - dt_factor) * rec["bytes_per_device"]["temps"]
@@ -93,6 +131,115 @@ def roofline_terms(rec: dict) -> dict:
         "flops_per_dev": c["flops"],
         "bytes_per_dev": c["bytes"],
     }
+
+
+# ---------------------------------------------------------------------------
+# Analytic ingest chunk-step model (--chunk-step)
+# ---------------------------------------------------------------------------
+
+#: --hw key -> tiling flavor of the kernel matrix
+_HW_FLAVOR = {"tpu-v5e": "tpu", "gpu-a100": "gpu", "cpu-host": "interpret"}
+
+
+def _chunksort_block(hw_name: str | None) -> int:
+    """Chunksort tile block for a hardware key, from the live tiling registry
+    when repro is importable (keeps this model in lockstep with the kernels);
+    falls back to the registry's default block otherwise."""
+    try:
+        from repro.kernels.capscore.tiling import tile_config
+        flavor = _HW_FLAVOR.get(hw_name or DEFAULT_HW, "interpret")
+        return tile_config("chunksort", flavor).block[0]
+    except Exception:
+        return 256
+
+
+def chunk_step_terms(C=4096, L=8, k=4096, hw=None, block=None) -> dict:
+    """Analytic bytes/FLOPs per element for one fused ingest chunk step.
+
+    Models the four device stages of ``update_multi``'s scan body on a chunk
+    of C elements across L lanes with per-lane capacity k (table cap k + C,
+    pass-1 summary cap k + 1), int32/f32 elements (4 B), worst-case all-keys
+    -distinct (U = C — the upper envelope of the output traffic):
+
+      sort       — chunksort: P = next-pow2(C) padded pairs; ONE block-sort
+                   pallas_call + log2(P/B) merge calls, each streaming the
+                   (key, idx) pairs HBM->VMEM->HBM once (16 B/pair/call);
+                   compare-exchange work is 4 ops/pair/stage over the full
+                   bitonic + merge-cascade schedule.
+      score+agg  — fused capscore_agg: reads (ks, eids, ws) once (12 B/elem),
+                   writes 5 aggregate columns x L lanes at U unique keys
+                   (20L B/elem worst case); ~32 ops/elem/lane (hash mix,
+                   exp-score, min/sum/entry selects).
+      merge      — per-lane sorted-runs table merge: table (4 cols) read +
+                   written, aggregate columns read; two searchsorted passes
+                   (~2 log2(cap) ops/entry).
+      pass1      — per-lane key-sorted bottom-(k+1) fold: summary read +
+                   written (16 B/entry), chunk mins read; ~log2(k)+2
+                   ops/entry merge network.
+
+    Every time bound divides by the SELECTED hardware table — swap ``hw`` to
+    move the model across the backend matrix; nothing is chip-hardcoded.
+    """
+    t = _hw(hw)
+    hw_name = hw if isinstance(hw, str) else None
+    B = block or _chunksort_block(hw_name)
+    P = 1 << max(0, C - 1).bit_length()
+    B = min(B, P)
+    lgB = int(math.log2(B))
+    n_merge = int(math.log2(P // B))
+    sort_stages = lgB * (lgB + 1) // 2 + sum(lgB + i for i in range(1, n_merge + 1))
+    cap = k + C          # fixed-k lane table capacity
+    cap_bk = k + 1       # pass-1 bottom-(k+1) summary capacity
+
+    stages = {
+        "sort[chunksort]": {
+            "bytes": 16.0 * P * (1 + n_merge),
+            "flops": 4.0 * P * sort_stages,
+        },
+        "score+agg[capscore_agg]": {
+            "bytes": C * (12.0 + 20.0 * L),
+            "flops": 32.0 * L * C,
+        },
+        "merge[sorted-runs]": {
+            "bytes": L * (32.0 * cap + 20.0 * C),
+            "flops": L * 2.0 * (cap + C) * math.log2(cap),
+        },
+        "pass1[key-sorted fold]": {
+            "bytes": L * (16.0 * cap_bk + 8.0 * C),
+            "flops": L * (C + cap_bk) * (math.log2(max(k, 2)) + 2.0),
+        },
+    }
+    bound = 0.0
+    for s in stages.values():
+        s["bytes_per_elem"] = s["bytes"] / C
+        s["flops_per_elem"] = s["flops"] / C
+        s["intensity"] = s["flops"] / s["bytes"]
+        s["t_compute_s"] = s["flops"] / t["peak_flops"]
+        s["t_memory_s"] = s["bytes"] / t["hbm_bw"]
+        s["dominant"] = ("compute" if s["t_compute_s"] >= s["t_memory_s"]
+                         else "memory")
+        s["t_bound_s"] = max(s["t_compute_s"], s["t_memory_s"])
+        bound += s["t_bound_s"]
+    return {
+        "chunk": C, "lanes": L, "k": k, "hw": hw_name or "custom",
+        "sort_block": B, "sort_pad": P, "stages": stages,
+        "step_lower_bound_s": bound,
+        "elements_per_s_bound": C / bound if bound else float("inf"),
+    }
+
+
+def print_chunk_step(res: dict) -> None:
+    print(f"-- analytic chunk step: C={res['chunk']} L={res['lanes']} "
+          f"k={res['k']} on {res['hw']} "
+          f"(sort block {res['sort_block']}, pad {res['sort_pad']})")
+    print(f"{'stage':26s} {'B/elem':>8s} {'FLOP/elem':>10s} {'FLOP/B':>7s} "
+          f"{'t_comp':>9s} {'t_mem':>9s} dominant")
+    for name, s in res["stages"].items():
+        print(f"{name:26s} {s['bytes_per_elem']:8.1f} "
+              f"{s['flops_per_elem']:10.1f} {s['intensity']:7.2f} "
+              f"{s['t_compute_s']:9.2e} {s['t_memory_s']:9.2e} {s['dominant']}")
+    print(f"step lower bound {res['step_lower_bound_s']:.2e}s -> "
+          f"{res['elements_per_s_bound']:,.0f} elements/s")
 
 
 def load_records(records_dir: str, mesh_tag: str) -> list[dict]:
@@ -125,10 +272,26 @@ def main():
     ap.add_argument("--mesh", default="pod1")
     ap.add_argument("--markdown", action="store_true")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--hw", default=DEFAULT_HW, choices=sorted(HW_TABLES),
+                    help="hardware table the terms are bounded against")
+    ap.add_argument("--chunk-step", action="store_true",
+                    help="analytic ingest chunk-step model instead of "
+                         "dry-run records")
+    ap.add_argument("--chunk", type=int, default=4096)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--k", type=int, default=4096)
     args = ap.parse_args()
 
+    if args.chunk_step:
+        res = chunk_step_terms(C=args.chunk, L=args.lanes, k=args.k,
+                               hw=args.hw)
+        print_chunk_step(res)
+        if args.json_out:
+            Path(args.json_out).write_text(json.dumps(res, indent=1))
+        return
+
     recs = load_records(args.records, args.mesh)
-    rows = [roofline_terms(r) for r in recs]
+    rows = [roofline_terms(r, hw=args.hw) for r in recs]
     rows.sort(key=lambda r: r["roofline_fraction"])
     if args.markdown:
         print(markdown_table(rows))

@@ -121,6 +121,17 @@ def main() -> None:
                        else dict(L=8, k=1024, chunk=2048, n_chunks=2)),
             json_path="BENCH_ingest.json")
 
+    # schema-v3/v4 normalizing reader: historical records stay consumable
+    from benchmarks.sampler_throughput import kernel_stamps_from_record
+    import json as _json4
+
+    with open("BENCH_ingest.json") as f:
+        stamps = kernel_stamps_from_record(_json4.load(f))
+    compiled = [s["name"] for s in stamps if s["compiled"]]
+    print(f"\n[run] kernel routes: "
+          + ", ".join(f"{s['name']}:{s['backend']}" for s in stamps)
+          + f"  (compiled: {', '.join(compiled) if compiled else 'none'})")
+
     section("5. StreamStatsService: incremental vs buffer-and-replay")
     from benchmarks.service_throughput import main as svc_main
 

@@ -18,19 +18,33 @@ Per-stage timings are **jitted** closures timed by **min-of-rounds**
 measured eager dispatch overhead and machine noise, which is how a ~0.2ms
 fused score+aggregate stage was once booked at 17ms.
 
-    PYTHONPATH=src python -m benchmarks.sampler_throughput [--smoke] [--json PATH]
+    PYTHONPATH=src python -m benchmarks.sampler_throughput \
+        [--smoke] [--json PATH] [--backend {auto,cpu,gpu,tpu,interpret}] \
+        [--check-stamps COMMITTED.json]
 
-``--json`` emits a machine-readable record (schema_version 3: stamped with
-backend + interpret mode so trajectories across machines are comparable,
-plus the reprolint version/retrace budgets the timings were taken under).
+``--backend`` pins the kernel routes for the whole run (the CI matrix axis):
+``auto`` keeps per-platform dispatch, ``cpu`` forces the XLA routes,
+``interpret`` forces the Pallas routes in interpret mode (tile configs
+exercised, nothing compiled), ``gpu``/``tpu`` force the compiled Pallas
+routes and SKIP with a reason when the host platform does not match (exit 0
+— a skipped leg is not a failed leg).
+
+``--json`` emits a machine-readable record (schema_version 4: stamped with
+the backend axis and a per-kernel ``{name, backend, compiled, tile_config}``
+list — replacing v3's single global ``capscore_interpret`` flag — plus the
+reprolint version/retrace budgets the timings were taken under).
 ``--smoke`` additionally acts as the CI perf-regression gate: the job FAILS
-if the fused path measures slower than the reference oracle.
+if the fused path measures slower than the reference oracle (per leg, both
+paths scored through the leg's kernel route).  ``--check-stamps`` compares
+the emitted kernel stamps against a committed record (both normalized
+through the v3/v4 reader) and fails on drift.
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import json
+import os
 import re
 import sys
 import time
@@ -46,10 +60,86 @@ from repro.core import vectorized as V
 from repro.core.segments import (
     EMPTY, ChunkOrder, chunk_order, scatter_unique, segment_ids,
 )
-from repro.kernels.capscore.capscore import default_interpret
+from repro.kernels.capscore.capscore import _INTERPRET_ENV, default_interpret
 from repro.kernels.capscore.ops import capscore, capscore_agg, capscore_multi
+from repro.kernels.capscore.tiling import resolve_backend, tile_config
+from repro.kernels.chunksort import sort_with_perm as chunksort_with_perm
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
+
+#: kernel entry points stamped into schema-v4 records
+KERNEL_NAMES = ("capscore", "capscore_multi", "capscore_agg", "chunksort")
+
+BACKEND_AXES = ("auto", "cpu", "gpu", "tpu", "interpret")
+
+
+def resolve_backend_axis(axis: str):
+    """Map a --backend axis value onto (kernel_backend, skip_reason).
+
+    ``kernel_backend`` is the dispatch route handed to SamplerSpec.backend /
+    the kernel ops: None (auto), 'xla', or 'pallas'.  A non-None
+    ``skip_reason`` means this leg cannot run on the current host (compiled
+    legs on a CPU runner) and the caller should exit 0 without timing.
+
+    The interpret leg sets ``REPRO_CAPSCORE_INTERPRET=1`` — the authoritative
+    env override, read at trace time — so every Pallas route runs the real
+    tile configs through the interpreter.
+    """
+    plat = jax.default_backend()
+    if axis == "auto":
+        return None, None
+    if axis == "cpu":
+        if plat != "cpu":
+            return None, f"cpu (XLA-route) leg requested on a {plat} host"
+        return "xla", None
+    if axis == "interpret":
+        os.environ[_INTERPRET_ENV] = "1"
+        return "pallas", None
+    if axis in ("gpu", "tpu"):
+        if plat != axis:
+            return None, (f"{axis} leg needs a {axis} host to compile its "
+                          f"Pallas route (found {plat!r})")
+        return "pallas", None
+    raise ValueError(f"unknown --backend axis {axis!r}: use one of {BACKEND_AXES}")
+
+
+def kernel_stamps(kernel_backend: str | None = None):
+    """Schema-v4 per-kernel stamps: dispatch route, compiled?, tile config.
+
+    Deterministic given (host platform, backend axis, interpret env) — the
+    CI interpret leg diffs these against the committed snapshot."""
+    route = resolve_backend(kernel_backend)
+    interp = bool(default_interpret())
+    out = []
+    for name in KERNEL_NAMES:
+        if route == "pallas":
+            cfg = tile_config(name)
+            out.append({"name": name, "backend": "pallas",
+                        "compiled": bool(cfg.compiled and not interp),
+                        "tile_config": cfg.describe()})
+        else:
+            out.append({"name": name, "backend": "xla", "compiled": False,
+                        "tile_config": None})
+    return out
+
+
+def kernel_stamps_from_record(record: dict):
+    """Normalize a BENCH_ingest record's kernel stamps across schemas.
+
+    v4 records carry the per-kernel list verbatim; v3 records carried one
+    global ``capscore_interpret`` flag and predate the chunksort kernel, so
+    they normalize to the equivalent per-kernel entries (no tile configs).
+    Keeping this reader v3-capable is what lets benchmarks/run.py and
+    --check-stamps consume historical records unchanged."""
+    if int(record.get("schema_version", 0)) >= 4:
+        return record["kernels"]
+    interp = bool(record.get("capscore_interpret", True))
+    plat = record.get("backend", "cpu")
+    route = "pallas" if plat == "tpu" else "xla"
+    compiled = route == "pallas" and not interp
+    return [{"name": n, "backend": route, "compiled": compiled,
+             "tile_config": None}
+            for n in ("capscore", "capscore_multi", "capscore_agg")]
 
 
 def reprolint_stamp():
@@ -221,12 +311,14 @@ _update_multi_sorted = functools.partial(
 # ---------------------------------------------------------------------------
 
 
-def _stage_timings(L, k, chunk, reps=5):
+def _stage_timings(L, k, chunk, reps=5, backend=None):
     """Min-of-rounds timings of each JITTED pipeline stage, fused vs legacy.
 
     Every stage is compiled before timing; what remains is the device compute
     the scan body actually pays.  The share of the chunk budget spent on
     score+aggregate is reported against one full fused chunk step.
+    ``backend`` pins every kernel route (score, aggregate, chunk sort) to one
+    leg of the CI matrix; None keeps per-platform dispatch.
     """
     ls = jnp.asarray(np.geomspace(1.0, 2.0 ** (L - 1), L), jnp.float32)
     ck = jnp.asarray(_zipf(chunk, seed=3)[:chunk], jnp.int32)
@@ -235,23 +327,30 @@ def _stage_timings(L, k, chunk, reps=5):
     salt = jnp.uint32(1)
 
     # a warmed, representative state: ingest a few chunks so tau is finite
-    state, spec = I.init_multi_state(np.asarray(ls), k=k, chunk=chunk, salt=1)
+    state, spec = I.init_multi_state(np.asarray(ls), k=k, chunk=chunk, salt=1,
+                                     backend=backend)
     warm = _zipf(chunk * 4, seed=5).astype(np.int32)
     state = I.update_multi(state, warm, np.ones(len(warm), np.float32), spec,
                            donate=False)
     table = state.table
     cap_bk = state.bk_keys.shape[1]
 
-    j_order = jax.jit(lambda c, e, w: chunk_order(c, e, w))
+    j_order = jax.jit(lambda c, e, w: chunk_order(c, e, w,
+                                                  sort_backend=backend))
     order = j_order(ck, eids, cw)
-    j_score = jax.jit(lambda: capscore_multi(ck, eids, cw, ls, table.tau, salt))
+    j_sort = jax.jit(lambda c: chunksort_with_perm(c, backend=backend))
+    j_sort(ck)
+    j_score = jax.jit(lambda: capscore_multi(ck, eids, cw, ls, table.tau, salt,
+                                             backend=backend))
     score = j_score()[0]
     j_fused = jax.jit(lambda: capscore_agg(order.ks, order.eids, order.ws,
-                                           order.seg, ls, table.tau, salt))
+                                           order.seg, ls, table.tau, salt,
+                                           backend=backend))
     cols = j_fused()
 
     def agg_shared():
-        s, d, e, kb = capscore_multi(ck, eids, cw, ls, table.tau, salt)
+        s, d, e, kb = capscore_multi(ck, eids, cw, ls, table.tau, salt,
+                                     backend=backend)
         return jax.vmap(
             lambda s_, d_, e_, b_: V.aggregate_continuous_scored(
                 ck, cw, s_, d_, e_, b_, order)
@@ -288,6 +387,7 @@ def _stage_timings(L, k, chunk, reps=5):
 
     stages = {
         "order(1 sort + pre-gather)": lambda: j_order(ck, eids, cw),
+        "sort-only[chunk-order route]": lambda: j_sort(ck),
         "score+aggregate[fused capscore_agg]": j_fused,
         "score+aggregate[legacy: score, gather x4L]": j_agg_shared,
         "merge[sorted-runs, L lanes]": lambda: j_merge(table, aggs),
@@ -304,14 +404,21 @@ def _stage_timings(L, k, chunk, reps=5):
     return out
 
 
-def multi_lane_ingest(L=8, k=4096, chunk=4096, n_chunks=4, reps=3, stage_reps=5):
-    """Elements/s of the three ingest generations, min-of-rounds interleaved."""
+def multi_lane_ingest(L=8, k=4096, chunk=4096, n_chunks=4, reps=3, stage_reps=5,
+                      backend=None):
+    """Elements/s of the three ingest generations, min-of-rounds interleaved.
+
+    ``backend`` pins both live paths (reference oracle and fused) to one
+    kernel route so the perf gate compares like-for-like; the frozen
+    pre-fuse ``sorted`` path keeps its shipped auto dispatch.
+    """
     ls = np.geomspace(1.0, 2.0 ** (L - 1), L)
     n = n_chunks * chunk
     keys = _zipf(n, seed=11).astype(np.int32)
     w = np.ones(n, np.float32)
 
-    state, spec = I.init_multi_state(ls, k=k, chunk=chunk, salt=2)
+    state, spec = I.init_multi_state(ls, k=k, chunk=chunk, salt=2,
+                                     backend=backend)
     # warm tau so steady-state (evicting) chunks are what gets timed
     state = I.update_multi(state, keys, w, spec, donate=False)
     kj, wj = jnp.asarray(keys), jnp.asarray(w)
@@ -332,7 +439,7 @@ def multi_lane_ingest(L=8, k=4096, chunk=4096, n_chunks=4, reps=3, stage_reps=5)
             jax.tree.map(lambda x: x.block_until_ready(), jax.tree.leaves(out))
             best[name] = min(best[name], time.perf_counter() - t0)
 
-    stages = _stage_timings(L, k, chunk, reps=stage_reps)
+    stages = _stage_timings(L, k, chunk, reps=stage_reps, backend=backend)
     return {
         "L": L, "k": k, "chunk": chunk, "n": n,
         "reference_eps": n / best["reference"],
@@ -363,7 +470,7 @@ def print_ingest(res):
 
 
 def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None,
-         perf_gate=False):
+         perf_gate=False, backend_axis="auto", kernel_backend=None):
     rng = np.random.default_rng(0)
     keys = (rng.zipf(1.3, size=n) % 50000).astype(np.int64)
     rows = []
@@ -390,7 +497,7 @@ def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None,
     for name, eps, us in rows:
         print(f"{name:36s} {eps:14.0f} {us:12.4f}")
 
-    ingest = multi_lane_ingest(**(ingest_kw or {}))
+    ingest = multi_lane_ingest(backend=kernel_backend, **(ingest_kw or {}))
     print_ingest(ingest)
 
     if json_path:
@@ -398,7 +505,8 @@ def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None,
             "bench": "sampler_throughput",
             "schema_version": SCHEMA_VERSION,
             "backend": jax.default_backend(),
-            "capscore_interpret": bool(default_interpret()),
+            "backend_axis": backend_axis,
+            "kernels": kernel_stamps(kernel_backend),
             "reprolint": reprolint_stamp(),
             "single_lane": {name: {"elements_per_s": eps} for name, eps, _ in rows},
             "multi_lane_ingest": {
@@ -418,6 +526,25 @@ def main(n=200_000, k=256, l=20.0, ingest_kw=None, json_path=None,
     return rows, ingest
 
 
+def check_stamps(committed_path, kernel_backend):
+    """Diff the committed record's kernel stamps against this host's.
+
+    Both sides go through the v3/v4 reader so historical records still load;
+    a mismatch (route drift, tile-config drift, stale snapshot) exits 1."""
+    with open(committed_path) as f:
+        committed = kernel_stamps_from_record(json.load(f))
+    emitted = kernel_stamps(kernel_backend)
+    if committed != emitted:
+        print(f"\nKERNEL STAMP DRIFT vs {committed_path}:", file=sys.stderr)
+        print(f"  committed: {json.dumps(committed)}", file=sys.stderr)
+        print(f"  emitted:   {json.dumps(emitted)}", file=sys.stderr)
+        print("  regenerate the snapshot with: python -m "
+              "benchmarks.sampler_throughput --smoke --backend interpret",
+              file=sys.stderr)
+        sys.exit(1)
+    print(f"[sampler_throughput] kernel stamps match {committed_path}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -425,14 +552,29 @@ if __name__ == "__main__":
                          "the fused>=reference perf gate)")
     ap.add_argument("--json", default="BENCH_ingest.json",
                     help="machine-readable output path")
+    ap.add_argument("--backend", default="auto", choices=BACKEND_AXES,
+                    help="kernel-route leg: auto dispatch, forced xla (cpu), "
+                         "forced Pallas interpret, or compiled gpu/tpu "
+                         "(skips with a reason off-platform)")
+    ap.add_argument("--check-stamps", default=None, metavar="PATH",
+                    help="after the run, fail if PATH's kernel stamps differ "
+                         "from this leg's")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    kernel_backend, skip = resolve_backend_axis(args.backend)
+    if skip is not None:
+        print(f"[sampler_throughput] SKIP --backend {args.backend}: {skip}")
+        sys.exit(0)
+    common = dict(json_path=args.json, backend_axis=args.backend,
+                  kernel_backend=kernel_backend)
     if args.smoke:
         main(n=50_000, k=128,
              ingest_kw=dict(L=4, k=512, chunk=1024, n_chunks=2, reps=3,
                             stage_reps=2),
-             json_path=args.json, perf_gate=True)
+             perf_gate=True, **common)
     else:
         main(n=2_000_000 if args.full else 200_000,
-             ingest_kw=dict(L=8, k=4096, chunk=4096),
-             json_path=args.json)
+             ingest_kw=dict(L=8, k=4096, chunk=4096), **common)
+    if args.check_stamps:
+        check_stamps(args.check_stamps, kernel_backend)

@@ -119,9 +119,16 @@ class SamplerSpec:
 
     ``backend`` routes the fused score+aggregate stage of the multi-l update
     (kernels.capscore.ops.capscore_agg): None auto-picks per detected
-    accelerator (compiled Pallas on TPU, XLA elsewhere); 'xla' | 'pallas'
+    accelerator (compiled Pallas on TPU/GPU, XLA elsewhere); 'xla' | 'pallas'
     force a path.  The XLA path is bit-identical to the reference pipeline;
     Pallas reassociates the f32 segment sums in-block (see the kernel).
+
+    ``sort_backend`` routes the shared chunk-order key sort
+    (segments.chunk_order): 'pallas' selects the block-local bitonic +
+    cross-block merge kernel (kernels.chunksort), 'xla' the stable argsort
+    dual.  ``None`` (default) follows ``backend``, so a single knob moves
+    the whole chunk step; set it separately to mix routes — both sort routes
+    are bit-identical, so this is pure perf routing.
     """
 
     kind: str = "continuous"
@@ -130,10 +137,16 @@ class SamplerSpec:
     host_id: int | None = None    # element-id namespace for multi-host runs
     evict_every: int = 1          # fixed-k eviction period E (chunks)
     backend: str | None = None    # capscore_agg dispatch: None|'xla'|'pallas'
+    sort_backend: str | None = None  # chunk_order sort; None: follow backend
 
     @property
     def mode(self) -> str:
         return "fixed_k" if self.k is not None else "fixed_tau"
+
+    @property
+    def sort_route(self) -> str | None:
+        """Effective chunk_order sort backend (sort_backend, else backend)."""
+        return self.sort_backend if self.sort_backend is not None else self.backend
 
     def eids(self, pos):
         """Element ids for one chunk starting at stream position ``pos``."""
@@ -203,7 +216,7 @@ def _update_impl(state: SamplerState, keys, weights, spec: SamplerSpec) -> Sampl
         eids = spec.eids(pos)
         if spec.mode == "fixed_k":
             # pre-gathered view: score in key order, reduce in the same pass
-            order = chunk_order(ck, eids, cw)
+            order = chunk_order(ck, eids, cw, sort_backend=spec.sort_route)
             agg = VZ.aggregate_continuous(ck, cw, eids, table.tau, state.l,
                                           state.salt, order)
             table = _scheduled_evict(
@@ -281,14 +294,16 @@ def finalize(state: SamplerState, spec: SamplerSpec) -> SampleResult:
 
 
 def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
-                     evict_every=1, backend=None) -> tuple[SamplerState, SamplerSpec]:
+                     evict_every=1, backend=None,
+                     sort_backend=None) -> tuple[SamplerState, SamplerSpec]:
     """One fixed-k continuous sketch per l, stacked on a leading axis, plus a
     lossless per-lane bottom-(k+1) summary for exact cross-host merging.
 
     ``evict_every=E`` opts into amortized eviction: capacity k + E*chunk,
     eviction every E chunks (see SamplerSpec; E=1 is bit-compatible with
     the one-shot samplers).  ``backend`` routes the fused score+aggregate
-    stage (see SamplerSpec.backend)."""
+    stage and ``sort_backend`` the shared chunk-order sort (see
+    SamplerSpec)."""
     if evict_every < 1:
         raise ValueError(f"evict_every must be >= 1, got {evict_every}")
     ls = np.asarray(ls, np.float32)
@@ -313,7 +328,7 @@ def init_multi_state(ls, *, k, chunk=2048, salt=0, host_id=None,
     )
     return state, SamplerSpec(kind="continuous", k=k, chunk=chunk,
                               host_id=host_id, evict_every=evict_every,
-                              backend=backend)
+                              backend=backend, sort_backend=sort_backend)
 
 
 def _multi_chunk_step(table, bk_keys, bk_seeds, pos, ck, cw, l, salt,
@@ -347,7 +362,7 @@ def _multi_chunk_step(table, bk_keys, bk_seeds, pos, ck, cw, l, salt,
     max_evict = spec.evict_every * spec.chunk
     eids = spec.eids(pos)
     # the ONE chunk sort, with the pre-gathered view for ordered scoring
-    order = chunk_order(ck, eids, cw)
+    order = chunk_order(ck, eids, cw, sort_backend=spec.sort_route)
     # fused: score every l lane AND reduce to per-key columns in one pass
     w_total, entered, contrib, kb_min, min_score = capscore_agg(
         order.ks, order.eids, order.ws, order.seg, l, table.tau,
@@ -438,8 +453,11 @@ def _update_multi_reference_impl(state: SamplerState, keys, weights,
         table, bk_keys, bk_seeds, pos = carry
         ck, cw = xs
         eids = spec.eids(pos)
+        # spec.backend keeps the oracle's scoring on the same kernel route as
+        # the fused path per bench leg; capscore_multi is elementwise, so the
+        # routes are bit-identical and the oracle's answers never move
         score, delta, entry, kb = capscore_multi(ck, eids, cw, state.l, table.tau,
-                                                 state.salt)
+                                                 state.salt, backend=spec.backend)
         table = vstep(table, ck, cw, score, delta, entry, kb, state.l)
         bk_keys, bk_seeds = VZ.pass1_step_multi(
             (bk_keys, bk_seeds), ck, score, cap=cap_bk)
@@ -506,7 +524,8 @@ def finalize_multi(state: SamplerState, spec: SamplerSpec,
 
 
 def init_bank_state(ls, *, n_tenants, k, chunk=2048, salts=0, host_id=None,
-                    evict_every=1, backend=None) -> tuple[SamplerState, SamplerSpec]:
+                    evict_every=1, backend=None,
+                    sort_backend=None) -> tuple[SamplerState, SamplerSpec]:
     """A stacked bank of ``n_tenants`` independent multi-l sampler instances.
 
     Leaves gain a leading tenant axis: table leaves are [T, L, capacity],
@@ -545,7 +564,7 @@ def init_bank_state(ls, *, n_tenants, k, chunk=2048, salts=0, host_id=None,
     )
     return state, SamplerSpec(kind="continuous", k=k, chunk=chunk,
                               host_id=host_id, evict_every=evict_every,
-                              backend=backend)
+                              backend=backend, sort_backend=sort_backend)
 
 
 def _mask_tenants(active, new, old):
@@ -783,11 +802,12 @@ class MultiSampler:
     """
 
     def __init__(self, ls, *, k, chunk=2048, salt=0, host_id=None,
-                 evict_every=1, backend=None):
+                 evict_every=1, backend=None, sort_backend=None):
         self.ls = tuple(float(l) for l in ls)  # full-precision query keys
         self.state, self.spec = init_multi_state(
             ls, k=k, chunk=chunk, salt=salt, host_id=host_id,
-            evict_every=evict_every, backend=backend)
+            evict_every=evict_every, backend=backend,
+            sort_backend=sort_backend)
         self._rem = _RemainderBuffer(chunk)
         self._n_real = 0  # real (non-padding) elements, incl. merged-in hosts
 
@@ -999,12 +1019,13 @@ class TenantBank:
     """
 
     def __init__(self, ls, *, n_tenants, k, chunk=2048, salts=0, host_id=None,
-                 evict_every=1, backend=None):
+                 evict_every=1, backend=None, sort_backend=None):
         self.ls = tuple(float(l) for l in ls)
         self.n_tenants = int(n_tenants)
         self.state, self.spec = init_bank_state(
             ls, n_tenants=n_tenants, k=k, chunk=chunk, salts=salts,
-            host_id=host_id, evict_every=evict_every, backend=backend)
+            host_id=host_id, evict_every=evict_every, backend=backend,
+            sort_backend=sort_backend)
         self._queues = [_PendingQueue() for _ in range(self.n_tenants)]
         self._n_real = np.zeros(self.n_tenants, np.int64)
 

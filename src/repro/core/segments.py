@@ -260,6 +260,15 @@ def sort_by_key(keys, *arrays):
     return keys[order], tuple(a[order] for a in arrays)
 
 
+def stable_sort_with_perm(keys):
+    """Registered XLA sort dual: ``(keys[perm], perm)`` under the stable
+    ascending argsort.  The chunksort Pallas kernel pins bit-identity against
+    exactly this function; it is also the fallback route when a backend has
+    no compiled sort lowering."""
+    perm = jnp.argsort(keys, stable=True)
+    return keys[perm], perm
+
+
 class ChunkOrder(NamedTuple):
     """The shared sort of one stream chunk: computed ONCE per chunk, consumed
     by every per-lane reduction (aggregate, bottom-k summary, merge).
@@ -289,14 +298,37 @@ class ChunkOrder(NamedTuple):
     ws: jax.Array | None = None    # [C] weights in key order (= weights[perm])
 
 
-def chunk_order(keys, eids=None, weights=None) -> ChunkOrder:
+def chunk_order(keys, eids=None, weights=None, *,
+                sort_backend: str | None = None) -> ChunkOrder:
     """Sort a chunk by key once; derive (permutation, segments, uniques).
 
     Pass ``eids``/``weights`` to also attach the pre-gathered (key-ordered)
     view — three O(C) gathers paid once per chunk, shared by every lane.
+
+    ``sort_backend`` routes the shared key sort: ``'pallas'`` runs the
+    block-local bitonic + cross-block merge kernel (kernels/chunksort),
+    ``'xla'`` the stable argsort dual above, ``None`` (auto) picks pallas on
+    backends with a compiled lowering (TPU/GPU) and XLA elsewhere.  Both
+    routes are bit-identical (the kernel sorts (key, index) pairs
+    lexicographically, which *is* the stable argsort), so the choice is pure
+    perf routing.
     """
-    perm = jnp.argsort(keys, stable=True)
-    ks = keys[perm]
+    if sort_backend not in (None, "xla", "pallas"):
+        raise ValueError(
+            f"unknown sort backend {sort_backend!r}: use None (auto), 'xla' "
+            "or 'pallas'")
+    if sort_backend is None:
+        # auto: compiled sort route only where a real lowering exists; on
+        # CPU the argsort dual needs no kernel import at all
+        sort_backend = ("pallas" if jax.default_backend() in ("tpu", "gpu")
+                        else "xla")
+    if sort_backend == "pallas":
+        # deferred import: kernels.chunksort imports this module for EMPTY
+        from ..kernels.chunksort.ops import sort_with_perm
+
+        ks, perm = sort_with_perm(keys, backend="pallas")
+    else:
+        ks, perm = stable_sort_with_perm(keys)
     seg, first = segment_ids(ks)
     # gather-form unique compaction: each segment's first element, compacted
     # to the front — bit-identical to ``scatter_unique(ks, seg, ...)`` (same

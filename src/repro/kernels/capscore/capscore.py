@@ -27,28 +27,78 @@ from jax.experimental.pallas import tpu as pltpu
 
 # salts must match core.samplers
 from ...core.samplers import SALT_ELEM, SALT_KEYBASE
+from .tiling import TileConfig, tile_config
 
+# legacy aliases: the TPU/interpret-flavor tile shapes now live in the
+# tiling registry; these remain for importers that pin the default shapes
 BLOCK_ROWS = 8
 LANES = 128
+AGG_BN = 256
+AGG_WINDOW = AGG_BN + 8
 
 # env override for the interpret-mode default (CI / debugging): "1"/"true"
-# forces interpret even on TPU, "0"/"false" forces the compiled Mosaic path
+# forces interpret even on a compiled backend, "0"/"false" forces the
+# compiled Mosaic/Triton path
 _INTERPRET_ENV = "REPRO_CAPSCORE_INTERPRET"
 
 
 def default_interpret() -> bool:
     """Pallas interpret-mode default, derived from the detected backend.
 
-    False on a real TPU (the kernel compiles through Mosaic and actually
-    runs fused), True everywhere else (interpret mode is the only way the
-    TPU kernel executes on CPU/GPU — correctness checking, not speed).
-    ``REPRO_CAPSCORE_INTERPRET=0/1`` overrides either way; the value is read
-    at trace time, so set it before the first capscore call.
+    False on a real TPU or GPU (the kernels compile through Mosaic resp.
+    Triton and actually run fused), True everywhere else (interpret mode is
+    the only way the kernels execute on CPU — correctness checking, not
+    speed).  ``REPRO_CAPSCORE_INTERPRET=0/1`` overrides either way; the value
+    is read at trace time, so set it before the first capscore call.
     """
     env = os.environ.get(_INTERPRET_ENV)
     if env is not None and env.strip():  # empty string == unset
         return env.strip().lower() not in ("0", "false", "no", "off")
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+def _compiler_params(cfg: TileConfig, interpret: bool):
+    """Backend compiler params for a compiled run; None in interpret mode.
+
+    TPU: 'arbitrary' grid semantics keep Mosaic's cross-step pipeline legal
+    for the carry-accumulating aggregate kernel while still double-buffering
+    the streamed element blocks.  GPU: Triton's num_stages is the software
+    pipeline depth for the same streamed blocks.
+    """
+    if interpret or not cfg.compiled:
+        return None
+    if cfg.backend == "tpu":
+        return pltpu.TPUCompilerParams(dimension_semantics=("arbitrary",))
+    from jax.experimental.pallas import triton as plgpu
+    return plgpu.TritonCompilerParams(num_stages=cfg.num_stages)
+
+
+def _grid_call(kernel, *, cfg, interpret, grid, in_specs, out_specs,
+               out_shape, n_scalars):
+    """Build the pallas_call for one entry point under a TileConfig.
+
+    Two grid styles, one kernel body: with ``cfg.scalar_prefetch`` the
+    scalars ride Mosaic's SMEM prefetch (``PrefetchScalarGridSpec``);
+    without it they arrive as a plain leading operand whose block covers the
+    whole scalar vector (the Triton route — index maps use ``(i, *_)`` so
+    both arities work).  Either way the kernel sees ``(scalar_ref, *refs)``.
+    """
+    kw = {}
+    params = _compiler_params(cfg, interpret)
+    if params is not None:
+        kw["compiler_params"] = params
+    if cfg.scalar_prefetch:
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid,
+                in_specs=in_specs, out_specs=out_specs),
+            out_shape=out_shape, interpret=interpret, **kw)
+    scalar_spec = pl.BlockSpec((n_scalars,), lambda i, *_: (0,))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[scalar_spec] + list(in_specs), out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret, **kw)
 
 import numpy as np
 
@@ -112,25 +162,32 @@ def _capscore_kernel(scalar_ref, keys_ref, eids_ref, w_ref, score_ref, delta_ref
     entry_ref[...] = entry
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "cfg"))
+def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool | None = None,
+             cfg: TileConfig | None = None):
     """Fused scoring over a stream chunk.
 
     Args:
-      keys, eids: int32 [N] with N % 1024 == 0 (use ops.capscore for padding).
+      keys, eids: int32 [N], N a multiple of the tile (use ops.capscore for
+        padding).
       weights: float32 [N].
       l, tau, salt: scalars (traced ok).
       interpret: None (default) resolves via ``default_interpret()`` —
-        compiled on TPU, interpret elsewhere, env-overridable.
+        compiled on TPU/GPU, interpret elsewhere, env-overridable.
+      cfg: tile config (static); None selects the platform flavor from the
+        tiling registry.
     Returns:
       (score f32[N], delta f32[N], entry int32[N]).
     """
     if interpret is None:
         interpret = default_interpret()
+    if cfg is None:
+        cfg = tile_config("capscore")
+    br, lanes = cfg.block
     n = keys.shape[0]
-    assert n % (BLOCK_ROWS * LANES) == 0, n
-    rows = n // LANES
-    shape2d = (rows, LANES)
+    assert n % (br * lanes) == 0, n
+    rows = n // lanes
+    shape2d = (rows, lanes)
     keys2 = keys.reshape(shape2d)
     eids2 = eids.reshape(shape2d)
     w2 = weights.reshape(shape2d)
@@ -142,24 +199,17 @@ def capscore(keys, eids, weights, l, tau, salt, *, interpret: bool | None = None
         ]
     )
 
-    grid = (rows // BLOCK_ROWS,)
-    # index maps receive (grid_idx, scalar_prefetch_ref)
-    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s: (i, 0))
+    grid = (rows // br,)
+    blk = lambda: pl.BlockSpec((br, lanes), lambda i, *_: (i, 0))
     out_shape = [
         jax.ShapeDtypeStruct(shape2d, jnp.float32),
         jax.ShapeDtypeStruct(shape2d, jnp.float32),
         jax.ShapeDtypeStruct(shape2d, jnp.int32),
     ]
-    score, delta, entry = pl.pallas_call(
-        _capscore_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[blk(), blk(), blk()],
-            out_specs=[blk(), blk(), blk()],
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
+    score, delta, entry = _grid_call(
+        _capscore_kernel, cfg=cfg, interpret=interpret, grid=grid,
+        in_specs=[blk(), blk(), blk()], out_specs=[blk(), blk(), blk()],
+        out_shape=out_shape, n_scalars=3,
     )(scalars, keys2, eids2, w2)
     return score.reshape(n), delta.reshape(n), entry.reshape(n)
 
@@ -216,27 +266,32 @@ def _make_capscore_multi_kernel(n_l: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("n_l", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_l", "interpret", "cfg"))
 def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   cfg: TileConfig | None = None):
     """Fused multi-l scoring over a stream chunk.
 
     Args:
-      keys, eids: int32 [N] with N % 1024 == 0 (use ops.capscore_multi).
+      keys, eids: int32 [N], N a multiple of the tile (use ops.capscore_multi).
       weights: float32 [N].
       ls, taus: float32 [n_l] per-lane cap parameter / current threshold.
       salt: uint32 scalar shared by all lanes.
       interpret: None (default) resolves via ``default_interpret()``.
+      cfg: tile config (static); None selects the platform flavor.
     Returns:
       (score f32[n_l, N], delta f32[n_l, N], entry int32[n_l, N],
        kb f32[n_l, N]) — lane j scored under (ls[j], taus[j]).
     """
     if interpret is None:
         interpret = default_interpret()
+    if cfg is None:
+        cfg = tile_config("capscore_multi")
+    br, lanes = cfg.block
     n = keys.shape[0]
-    assert n % (BLOCK_ROWS * LANES) == 0, n
-    rows = n // LANES
-    shape2d = (rows, LANES)
+    assert n % (br * lanes) == 0, n
+    rows = n // lanes
+    shape2d = (rows, lanes)
     keys2 = keys.reshape(shape2d)
     eids2 = eids.reshape(shape2d)
     w2 = weights.reshape(shape2d)
@@ -248,26 +303,21 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
         ]
     )
 
-    grid = (rows // BLOCK_ROWS,)
-    in_blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i, s: (i, 0))
-    out_blk = lambda: pl.BlockSpec((n_l, BLOCK_ROWS, LANES), lambda i, s: (0, i, 0))
-    shape3d = (n_l, rows, LANES)
+    grid = (rows // br,)
+    in_blk = lambda: pl.BlockSpec((br, lanes), lambda i, *_: (i, 0))
+    out_blk = lambda: pl.BlockSpec((n_l, br, lanes), lambda i, *_: (0, i, 0))
+    shape3d = (n_l, rows, lanes)
     out_shape = [
         jax.ShapeDtypeStruct(shape3d, jnp.float32),
         jax.ShapeDtypeStruct(shape3d, jnp.float32),
         jax.ShapeDtypeStruct(shape3d, jnp.int32),
         jax.ShapeDtypeStruct(shape3d, jnp.float32),
     ]
-    score, delta, entry, kb = pl.pallas_call(
-        _make_capscore_multi_kernel(n_l),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[in_blk(), in_blk(), in_blk()],
-            out_specs=[out_blk(), out_blk(), out_blk(), out_blk()],
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
+    score, delta, entry, kb = _grid_call(
+        _make_capscore_multi_kernel(n_l), cfg=cfg, interpret=interpret,
+        grid=grid, in_specs=[in_blk(), in_blk(), in_blk()],
+        out_specs=[out_blk(), out_blk(), out_blk(), out_blk()],
+        out_shape=out_shape, n_scalars=2 * n_l + 1,
     )(scalars, keys2, eids2, w2)
     return (score.reshape(n_l, n), delta.reshape(n_l, n),
             entry.reshape(n_l, n), kb.reshape(n_l, n))
@@ -277,29 +327,28 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, n_l: int,
 # Fused score + segment-reduce: the [n_l, N] intermediates never leave VMEM
 # ---------------------------------------------------------------------------
 
-# elements per grid step of the fused-aggregate kernel; the block-local
-# one-hot (AGG_WINDOW x AGG_BN) and the masked reductions over it are the
-# per-block working set (~0.5 MB at 256), the embedding_bag segment-sum idiom
-AGG_BN = 256
-# output row window per block: AGG_BN segments + sublane alignment slack (the
-# dynamic row start is rounded down to a multiple of 8 so the store stays
-# tile-aligned; a block of AGG_BN sorted elements spans < AGG_BN segments)
-AGG_WINDOW = AGG_BN + 8
+# block/window sizes for the fused-aggregate kernel come from the tiling
+# registry: the block-local one-hot (window x bn) and the masked reductions
+# over it are the per-block working set (~0.5 MB at bn=256), the
+# embedding_bag segment-sum idiom; the output row window is bn segments +
+# ``align`` slack rows (the dynamic row start is rounded down to a multiple
+# of ``align`` so the store stays tile-aligned; a block of bn sorted
+# elements spans < bn segments)
 
 _EMPTY_KEY = np.int32(2**31 - 1)  # == core.segments.EMPTY (int32 max)
 _NO_ENTRY = np.int32(2**30)       # > any element index: "no entry event"
 
 
-def _make_capscore_agg_kernel(n_l: int):
+def _make_capscore_agg_kernel(n_l: int, bn: int, window: int, align: int):
     """Kernel closure for the fused multi-lane score + per-key aggregate.
 
     Consumes the chunk in KEY-SORTED order (the pre-gathered ``ChunkOrder``
-    view): per grid step, one block of ``AGG_BN`` elements is scored for all
+    view): per grid step, one block of ``bn`` elements is scored for all
     ``n_l`` lanes entirely in VMEM, then segment-reduced into the per-key
     output columns through a block-local one-hot — sums ride the MXU
     (``onehot @ vals``, the embedding_bag idiom), mins/maxes ride the VPU as
     masked reductions.  Because ``seg`` is sorted, a block's segments span a
-    contiguous id range, so each block touches one ``AGG_WINDOW``-row slice
+    contiguous id range, so each block touches one ``window``-row slice
     of the (fully VMEM-resident) outputs; the slice is read-modify-written,
     which is the **cross-block carry**: the boundary segment shared with the
     previous block combines via +/min/max, and the entered-before flag
@@ -353,12 +402,12 @@ def _make_capscore_agg_kernel(n_l: int):
 
         # block-local one-hot over the (sublane-aligned) segment window
         s0 = seg_ref[0, 0]
-        s0a = (s0 // 8) * 8
-        local = seg - s0a                          # (1, BN) in [0, AGG_WINDOW)
-        oh = (jax.lax.broadcasted_iota(jnp.int32, (AGG_WINDOW, AGG_BN), 0)
+        s0a = (s0 // align) * align
+        local = seg - s0a                          # (1, BN) in [0, window)
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (window, bn), 0)
               == local)                            # (W, BN) bool
         ohf = oh.astype(jnp.float32)
-        rows = pl.ds(s0a, AGG_WINDOW)
+        rows = pl.ds(s0a, window)
 
         seg_sum = lambda vals: jax.lax.dot_general(  # (1, BN) -> (W, 1)
             ohf, vals, (((1,), (1,)), ((), ())),
@@ -369,8 +418,8 @@ def _make_capscore_agg_kernel(n_l: int):
         bw = seg_sum(w_live)                       # (W, 1) block weight/segment
         wt_ref[rows, :] += bw
 
-        idx = step * AGG_BN + jax.lax.broadcasted_iota(
-            jnp.int32, (1, AGG_BN), 1)
+        idx = step * bn + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bn), 1)
 
         for j in range(n_l):
             l = jax.lax.bitcast_convert_type(scalar_ref[j], jnp.float32)
@@ -413,30 +462,38 @@ def _make_capscore_agg_kernel(n_l: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("n_l", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_l", "interpret", "cfg"))
 def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, n_l: int,
-                 interpret: bool | None = None):
-    """Fused multi-l scoring + per-key chunk aggregation (Pallas TPU).
+                 interpret: bool | None = None,
+                 cfg: TileConfig | None = None):
+    """Fused multi-l scoring + per-key chunk aggregation (Pallas).
 
     Args:
       ks, eids: int32 [C] in KEY-SORTED order (the ChunkOrder pre-gathered
-        view), C % AGG_BN == 0 (use ops.capscore_agg for padding); ``ks``
-        ascending with EMPTY last.
+        view), C a multiple of the block size ``cfg.block[1]`` (use
+        ops.capscore_agg for padding); ``ks`` ascending with EMPTY last.
       ws: float32 [C] weights, same order.
       seg: int32 [C] sorted segment ids of ``ks`` (0..n_seg-1).
       ls, taus: float32 [n_l] per-lane cap parameter / current threshold.
       salt: uint32 scalar shared by all lanes.
+      cfg: tile config (static); None selects the platform flavor.  The
+        element stream is double-buffered across grid steps (Mosaic grid
+        pipeline / Triton num_stages) while the output columns stay resident.
     Returns:
-      (w_total f32 [C + AGG_WINDOW, 1],
+      (w_total f32 [C + window, 1],
        entered i32 / contrib f32 / kb_min f32 / min_score f32, each
-       [C + AGG_WINDOW, n_l]) — segment-id-indexed columns; rows past the
+       [C + window, n_l]) — segment-id-indexed columns; rows past the
       real segment count hold the reduction identities (the wrapper slices
-      and transposes).
+      and transposes).  ``window = cfg.block[1] + cfg.align``.
     """
     if interpret is None:
         interpret = default_interpret()
+    if cfg is None:
+        cfg = tile_config("capscore_agg")
+    bn = cfg.block[-1]
+    window = bn + cfg.align
     C = ks.shape[0]
-    assert C % AGG_BN == 0, C
+    assert C % bn == 0, C
     scalars = jnp.concatenate(
         [
             jax.lax.bitcast_convert_type(jnp.asarray(ls, jnp.float32), jnp.int32).reshape(n_l),
@@ -445,9 +502,9 @@ def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, n_l: int,
         ]
     )
     view = lambda a: a.reshape(1, C)
-    rows_out = C + AGG_WINDOW
-    in_blk = lambda: pl.BlockSpec((1, AGG_BN), lambda i, s: (0, i))
-    out_blk = lambda cols: pl.BlockSpec((rows_out, cols), lambda i, s: (0, 0))
+    rows_out = C + window
+    in_blk = lambda: pl.BlockSpec((1, bn), lambda i, *_: (0, i))
+    out_blk = lambda cols: pl.BlockSpec((rows_out, cols), lambda i, *_: (0, 0))
     out_shape = [
         jax.ShapeDtypeStruct((rows_out, 1), jnp.float32),
         jax.ShapeDtypeStruct((rows_out, n_l), jnp.int32),
@@ -455,15 +512,11 @@ def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, n_l: int,
         jax.ShapeDtypeStruct((rows_out, n_l), jnp.float32),
         jax.ShapeDtypeStruct((rows_out, n_l), jnp.float32),
     ]
-    return pl.pallas_call(
-        _make_capscore_agg_kernel(n_l),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(C // AGG_BN,),
-            in_specs=[in_blk(), in_blk(), in_blk(), in_blk()],
-            out_specs=[out_blk(1), out_blk(n_l), out_blk(n_l), out_blk(n_l),
-                       out_blk(n_l)],
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
+    return _grid_call(
+        _make_capscore_agg_kernel(n_l, bn, window, cfg.align), cfg=cfg,
+        interpret=interpret, grid=(C // bn,),
+        in_specs=[in_blk(), in_blk(), in_blk(), in_blk()],
+        out_specs=[out_blk(1), out_blk(n_l), out_blk(n_l), out_blk(n_l),
+                   out_blk(n_l)],
+        out_shape=out_shape, n_scalars=2 * n_l + 1,
     )(scalars, view(ks), view(eids), view(ws), view(seg))

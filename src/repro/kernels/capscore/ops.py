@@ -17,26 +17,8 @@ from .capscore import (
     default_interpret,
 )
 from .ref import capscore_agg_ref, capscore_multi_ref, capscore_ref
-
-_TILE = BLOCK_ROWS * LANES
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _resolve_backend(backend: str | None) -> str:
-    """Validate + default the kernel dispatch.  Raising on unknown strings
-    matters now that the knob is user-facing (StatsConfig.ingest_backend /
-    SamplerSpec.backend): a typo like 'XLA' must not silently select the
-    interpret-mode Pallas path."""
-    if backend is None:
-        return "pallas" if _on_tpu() else "xla"
-    if backend not in ("xla", "pallas"):
-        raise ValueError(
-            f"unknown capscore backend {backend!r}: use None (auto), 'xla' "
-            "or 'pallas'")
-    return backend
+from .tiling import resolve_backend as _resolve_backend
+from .tiling import tile_config
 
 
 def _pad_tile(tile, *cols):
@@ -66,11 +48,12 @@ def capscore(keys, eids, weights, l, tau, salt, *, backend: str | None = None):
     backend = _resolve_backend(backend)
     if backend == "xla":
         return capscore_ref(keys, eids, weights, l, tau, salt)
+    cfg = tile_config("capscore")
     n = keys.shape[0]
     keys, eids, weights, pad = _pad_tile(
-        _TILE, (keys, 0), (eids, 0), (weights, 1.0))
+        cfg.elements, (keys, 0), (eids, 0), (weights, 1.0))
     s, d, e = _kernel(keys, eids, weights, l, tau, salt,
-                      interpret=default_interpret())
+                      interpret=default_interpret(), cfg=cfg)
     if pad:
         s, d, e = s[:n], d[:n], e[:n]
     return s, d, e
@@ -85,12 +68,14 @@ def capscore_multi(keys, eids, weights, ls, taus, salt, *, backend: str | None =
     backend = _resolve_backend(backend)
     if backend == "xla":
         return capscore_multi_ref(keys, eids, weights, ls, taus, salt)
+    cfg = tile_config("capscore_multi")
     n = keys.shape[0]
     n_l = ls.shape[0] if hasattr(ls, "shape") else len(ls)
     keys, eids, weights, pad = _pad_tile(
-        _TILE, (keys, 0), (eids, 0), (weights, 1.0))
+        cfg.elements, (keys, 0), (eids, 0), (weights, 1.0))
     s, d, e, kb = _kernel_multi(keys, eids, weights, ls, taus, salt,
-                                n_l=int(n_l), interpret=default_interpret())
+                                n_l=int(n_l), interpret=default_interpret(),
+                                cfg=cfg)
     if pad:
         s, d, e, kb = s[:, :n], d[:, :n], e[:, :n], kb[:, :n]
     return s, d, e, kb
@@ -113,16 +98,18 @@ def capscore_agg(ks, eids, ws, seg, ls, taus, salt, *, backend: str | None = Non
     backend = _resolve_backend(backend)
     if backend == "xla":
         return capscore_agg_ref(ks, eids, ws, seg, ls, taus, salt)
+    cfg = tile_config("capscore_agg")
     n = ks.shape[0]
     n_l = ls.shape[0] if hasattr(ls, "shape") else len(ls)
     # padding: EMPTY keys are masked to the reduction identities inside the
     # kernel, and segment id ``n`` (one past the last real segment) parks
     # them on output rows the slice below drops
     ks, eids, ws, seg, pad = _pad_tile(
-        AGG_BN, (ks, int(EMPTY)), (eids, 0), (ws, 1.0), (seg, n))
+        cfg.elements, (ks, int(EMPTY)), (eids, 0), (ws, 1.0), (seg, n))
     wt, ent, ctr, kbm, msc = _kernel_agg(ks, eids, ws, seg, ls, taus, salt,
                                          n_l=int(n_l),
-                                         interpret=default_interpret())
+                                         interpret=default_interpret(),
+                                         cfg=cfg)
     lane_cols = lambda a: a[:n].T  # [rows, n_l] -> [n_l, C]
     return (wt[:n, 0], lane_cols(ent) > 0, lane_cols(ctr), lane_cols(kbm),
             lane_cols(msc))

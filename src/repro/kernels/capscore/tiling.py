@@ -1,0 +1,167 @@
+"""Backend-aware tile/block registry for the chunk-step Pallas kernels.
+
+One ``TileConfig`` per (kernel entry point, backend flavor) pair replaces the
+hardcoded ``(8, 128)`` / ``(1, 256)`` block shapes that previously lived in
+``capscore.py``: the Mosaic TPU flavor keeps the f32-native ``(8, 128)``
+element tile and the sublane-aligned aggregate window, the Triton GPU flavor
+trades sublane structure for wide 1-D blocks with a deeper software pipeline
+(``num_stages``), and the interpret flavor mirrors the TPU shapes so CPU
+correctness runs exercise the exact block decomposition the compiled path
+uses.
+
+The config is hashable (frozen dataclass of scalars/tuples) so the kernels
+take it as a static jit argument — each distinct tile config is a distinct
+compile, which is exactly what the reprolint retrace budgets meter
+("compile exactly once per tile config").
+
+This module must stay import-light (jax + stdlib only): ``core/segments.py``
+and the chunksort package pull ``resolve_backend``/``tile_config`` from here,
+and ``capscore.py`` builds its grids from it, so any heavier import would
+cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+#: flavors a TileConfig can target.  'interpret' covers every platform
+#: without a compiled Pallas route (CPU today); the shapes still matter
+#: there because tests pin the block decomposition bit-for-bit.
+FLAVORS = ("tpu", "gpu", "interpret")
+
+
+def detect_flavor() -> str:
+    """Map the active jax platform onto a tile-registry flavor."""
+    plat = jax.default_backend()
+    return plat if plat in ("tpu", "gpu") else "interpret"
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Validate + default the kernel dispatch route ('xla' | 'pallas').
+
+    ``None`` (auto) selects the compiled Pallas route on accelerators with a
+    real lowering (Mosaic on TPU, Triton on GPU) and the XLA reference route
+    everywhere else.  Raising on unknown strings matters now that the knob is
+    user-facing (StatsConfig.ingest_backend / SamplerSpec.backend): a typo
+    like 'XLA' must not silently select the interpret-mode Pallas path.
+    """
+    if backend is None:
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"unknown kernel backend {backend!r}: use None (auto), 'xla' "
+            "or 'pallas'")
+    return backend
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Per-backend block/tile parameters for one Pallas entry point.
+
+    block:   element block shape per grid step — (rows, lanes) for the
+             element-stream kernels, (1, bn) for the sorted-aggregate kernel,
+             (b,) for the chunksort block kernel.
+    align:   sublane alignment of dynamic output-row windows (the aggregate
+             kernel rounds its window start down to a multiple of this; the
+             window gets ``align`` slack rows).
+    num_stages: software-pipeline depth for the streamed element blocks —
+             2 is classic double buffering (block i+1 DMAs while block i
+             computes; Mosaic's grid pipeline and Triton's num_stages both
+             consume this).
+    scalar_prefetch: True routes scalars through Mosaic's SMEM prefetch
+             (``PrefetchScalarGridSpec``); False passes them as a plain
+             leading operand (the Triton path has no SMEM prefetch).
+    """
+
+    kernel: str
+    backend: str
+    block: tuple[int, ...]
+    align: int = 8
+    num_stages: int = 2
+    scalar_prefetch: bool = True
+
+    def __post_init__(self):
+        assert self.backend in FLAVORS, self.backend
+
+    @property
+    def elements(self) -> int:
+        """Elements consumed per grid step (the padding quantum)."""
+        return math.prod(self.block)
+
+    @property
+    def compiled(self) -> bool:
+        """Whether this flavor has a real (non-interpret) lowering."""
+        return self.backend in ("tpu", "gpu")
+
+    def describe(self) -> dict:
+        """JSON-safe stamp for BENCH_ingest schema v4 records."""
+        return {
+            "block": list(self.block),
+            "align": self.align,
+            "num_stages": self.num_stages,
+            "scalar_prefetch": self.scalar_prefetch,
+            "flavor": self.backend,
+        }
+
+
+_REGISTRY: dict[tuple[str, str], TileConfig] = {}
+
+
+def register(cfg: TileConfig) -> TileConfig:
+    _REGISTRY[(cfg.kernel, cfg.backend)] = cfg
+    return cfg
+
+
+def tile_config(kernel: str, flavor: str | None = None) -> TileConfig:
+    """Look up the tile config for ``kernel`` on ``flavor`` (default: the
+    detected platform flavor)."""
+    f = flavor or detect_flavor()
+    if f not in FLAVORS:
+        f = "interpret"
+    try:
+        return _REGISTRY[(kernel, f)]
+    except KeyError:
+        raise ValueError(f"no tile config registered for {kernel!r} on {f!r}; "
+                         f"known: {sorted(_REGISTRY)}") from None
+
+
+def registry() -> dict[tuple[str, str], TileConfig]:
+    """Read-only view of the full (kernel, flavor) -> TileConfig table."""
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# The backend matrix.  TPU shapes are the f32-native tiles the kernels were
+# built around; interpret mirrors TPU so CPU test runs pin the same block
+# decomposition; GPU trades the (8, 128) sublane structure for 1024-wide
+# 1-D-ish blocks and a 3-deep Triton pipeline (heuristic — untuned until a
+# GPU runner lands, but the plumbing is live, not dead code).
+# --------------------------------------------------------------------------
+
+# elementwise scoring stream, viewed (rows, 128)
+register(TileConfig("capscore", "tpu", (8, 128)))
+register(TileConfig("capscore", "gpu", (8, 128), num_stages=3,
+                    scalar_prefetch=False))
+register(TileConfig("capscore", "interpret", (8, 128)))
+
+register(TileConfig("capscore_multi", "tpu", (8, 128)))
+register(TileConfig("capscore_multi", "gpu", (8, 128), num_stages=3,
+                    scalar_prefetch=False))
+register(TileConfig("capscore_multi", "interpret", (8, 128)))
+
+# fused score + sorted segment-reduce: (1, bn) element blocks, output row
+# window bn + align.  GPU uses a narrower block: the (window x bn) one-hot
+# is register/SMEM-resident per CTA and 264x256 f32 overflows it.
+register(TileConfig("capscore_agg", "tpu", (1, 256)))
+register(TileConfig("capscore_agg", "gpu", (1, 128), num_stages=3,
+                    scalar_prefetch=False))
+register(TileConfig("capscore_agg", "interpret", (1, 256)))
+
+# chunk-order sort: block-local bitonic networks of this many (key, idx)
+# pairs, then cross-block two-run merges.  No scalars -> no prefetch style.
+register(TileConfig("chunksort", "tpu", (256,), scalar_prefetch=False))
+register(TileConfig("chunksort", "gpu", (512,), num_stages=3,
+                    scalar_prefetch=False))
+register(TileConfig("chunksort", "interpret", (256,), scalar_prefetch=False))

@@ -1,0 +1,3 @@
+"""Chunk-order sort kernel: block-local bitonic + cross-block run merge."""
+from .ops import sort_with_perm  # noqa: F401
+from .ref import sort_with_perm_ref  # noqa: F401

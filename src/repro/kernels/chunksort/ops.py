@@ -1,0 +1,44 @@
+"""Public op: padding + backend dispatch for the chunk-order sort kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.segments import EMPTY, stable_sort_with_perm
+from ..capscore.capscore import default_interpret
+from ..capscore.tiling import resolve_backend as _resolve_backend
+from ..capscore.tiling import tile_config
+from .chunksort import sort_pairs
+
+
+def sort_with_perm(keys, *, backend: str | None = None):
+    """Stable ascending key sort of an int32 chunk: ``(ks, perm)``.
+
+    Bit-identical to the registered dual ``segments.stable_sort_with_perm``
+    (``perm = argsort(keys, stable=True); ks = keys[perm]``) on every route.
+    backend: 'pallas' runs the block-local bitonic + cross-block two-run
+    merge kernels; 'xla' (and None on backends without a compiled sort
+    lowering) falls back to the argsort dual.
+
+    Padding: the kernel wants a power-of-two multiple of the tile block, so
+    the tail is filled with (EMPTY, idx >= n) pairs.  EMPTY is the maximal
+    int32 and the pad indices exceed every real index, so pads sort strictly
+    after all real entries — including real EMPTY keys, which win their ties
+    by index — and the [:n] slice is exact, not approximate.
+    """
+    backend = _resolve_backend(backend)
+    if backend == "xla":
+        return stable_sort_with_perm(keys)
+    # normalize host arrays up front: a numpy chunk and a jnp chunk of the
+    # same aval must hit the same sort_pairs cache entry (retrace budget = 1)
+    keys = jnp.asarray(keys)
+    n = keys.shape[0]
+    cfg = tile_config("chunksort")
+    P = max(cfg.block[0], 1 << max(0, n - 1).bit_length()) if n else cfg.block[0]
+    pad = P - n
+    kp = (jnp.concatenate([keys, jnp.full((pad,), EMPTY, keys.dtype)])
+          if pad else keys)
+    idx = jnp.arange(P, dtype=jnp.int32)
+    ks, perm = sort_pairs(kp, idx, cfg=cfg, interpret=default_interpret())
+    if pad:
+        ks, perm = ks[:n], perm[:n]
+    return ks, perm

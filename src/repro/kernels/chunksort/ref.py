@@ -1,0 +1,13 @@
+"""Reference chunk sort: the bit-identity oracle for the Pallas route.
+
+Delegates to the registered sort dual in ``core.segments`` — the Pallas
+kernel's contract is bit-identity against exactly that function, so the
+reference IS the registry entry, not a private reimplementation.
+"""
+from __future__ import annotations
+
+from ...core.segments import stable_sort_with_perm
+
+
+def sort_with_perm_ref(keys):
+    return stable_sort_with_perm(keys)

@@ -1,0 +1,143 @@
+"""Chunksort kernel contract: the Pallas block-local bitonic + cross-block
+two-run merge sort is BIT-IDENTICAL to the stable-argsort dual
+(``segments.stable_sort_with_perm``) — not approximately, by construction:
+the kernel orders (key, index) pairs lexicographically, and on distinct
+pairs that order *is* the stable sort order.
+
+All tests run in interpret mode (CPU CI); the properties pinned here are
+exactly what a compiled Mosaic/Triton run must preserve.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import incremental as I
+from repro.core.segments import EMPTY, chunk_order, stable_sort_with_perm
+from repro.kernels.chunksort import sort_with_perm, sort_with_perm_ref
+from repro.kernels.chunksort.chunksort import sort_pairs
+from repro.kernels.capscore.tiling import tile_config
+
+
+def _assert_pairs_equal(a, b):
+    assert (np.asarray(a[0]) == np.asarray(b[0])).all()
+    assert (np.asarray(a[1]) == np.asarray(b[1])).all()
+
+
+@pytest.mark.parametrize("n", [1, 5, 64, 256, 257, 777, 1024, 2048])
+def test_sort_bit_identical_across_sizes(n):
+    """Pallas sort == stable argsort, power-of-two and ragged sizes alike
+    (ragged sizes exercise the EMPTY padding + exact [:n] slice)."""
+    rng = np.random.default_rng(n)
+    keys = jnp.asarray(rng.integers(0, max(2, n // 3), n), jnp.int32)
+    _assert_pairs_equal(sort_with_perm(keys, backend="pallas"),
+                        stable_sort_with_perm(keys))
+
+
+@pytest.mark.parametrize("n_distinct", [1, 2, 7])
+def test_sort_tie_pressure(n_distinct):
+    """Duplicate-heavy chunks: stability (= index order within equal keys)
+    must survive the bitonic network, where it is carried by the idx lane of
+    the lexicographic pairs, not by any property of the network itself."""
+    rng = np.random.default_rng(17)
+    n = 1000
+    keys = jnp.asarray(rng.integers(0, n_distinct, n), jnp.int32)
+    got_ks, got_perm = sort_with_perm(keys, backend="pallas")
+    ref_ks, ref_perm = stable_sort_with_perm(keys)
+    assert (np.asarray(got_perm) == np.asarray(ref_perm)).all()
+    assert (np.asarray(got_ks) == np.asarray(ref_ks)).all()
+
+
+def test_sort_empty_padding_cases():
+    """Real EMPTY keys sort to the end but BEFORE the kernel's pad entries
+    (pads have idx >= n, losing every tie), so the [:n] slice is exact."""
+    rng = np.random.default_rng(5)
+    # partially padded: ragged size, ~30% real EMPTYs sprinkled through
+    n = 700
+    keys = rng.integers(0, 50, n).astype(np.int32)
+    keys[rng.random(n) < 0.3] = int(EMPTY)
+    k = jnp.asarray(keys)
+    got = sort_with_perm(k, backend="pallas")
+    ref = stable_sort_with_perm(k)
+    _assert_pairs_equal(got, ref)
+    assert int(np.asarray(got[1]).max()) < n  # no pad index leaks out
+
+    # all-EMPTY chunk (the padding-chunk shape the samplers feed at flush)
+    k = jnp.full((513,), EMPTY, jnp.int32)
+    _assert_pairs_equal(sort_with_perm(k, backend="pallas"),
+                        stable_sort_with_perm(k))
+
+
+def test_sort_gpu_flavor_tile_bit_identical():
+    """The GPU tile config (different block size -> different network +
+    merge depth) produces the same bits as the default flavor."""
+    rng = np.random.default_rng(23)
+    keys = jnp.asarray(rng.integers(0, 97, 2048), jnp.int32)
+    idx = jnp.arange(2048, dtype=jnp.int32)
+    a = sort_pairs(keys, idx, cfg=tile_config("chunksort", "interpret"),
+                   interpret=True)
+    b = sort_pairs(keys, idx, cfg=tile_config("chunksort", "gpu"),
+                   interpret=True)
+    _assert_pairs_equal(a, b)
+    _assert_pairs_equal(a, stable_sort_with_perm(keys))
+
+
+def test_ref_is_the_registered_dual():
+    keys = jnp.asarray([3, 1, 2, 1], jnp.int32)
+    _assert_pairs_equal(sort_with_perm_ref(keys), stable_sort_with_perm(keys))
+    # xla route of the op == the dual too
+    _assert_pairs_equal(sort_with_perm(keys, backend="xla"),
+                        stable_sort_with_perm(keys))
+
+
+@pytest.mark.parametrize("n", [256, 1000])
+def test_chunk_order_routes_bit_identical(n):
+    """Every field of ChunkOrder (ks/perm/seg/ukeys + pre-gathered eids/ws)
+    is bitwise equal between the pallas and xla sort routes."""
+    rng = np.random.default_rng(n)
+    keys = jnp.asarray(rng.integers(0, 60, n), jnp.int32)
+    eids = jnp.asarray(rng.integers(0, 1 << 30, n), jnp.int32)
+    ws = jnp.asarray(rng.random(n), jnp.float32) + 0.1
+    a = chunk_order(keys, eids, ws, sort_backend="pallas")
+    b = chunk_order(keys, eids, ws, sort_backend="xla")
+    c = chunk_order(keys, eids, ws)  # auto == xla on CPU
+    for fa, fb, fc in zip(a, b, c):
+        assert (np.asarray(fa) == np.asarray(fb)).all()
+        assert (np.asarray(fb) == np.asarray(fc)).all()
+
+
+def test_chunk_order_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="sort backend"):
+        chunk_order(jnp.zeros((4,), jnp.int32), sort_backend="triton")
+
+
+def test_update_multi_downstream_unchanged():
+    """Swapping only the chunk sort to the Pallas kernel leaves the whole
+    multi-lane update — tables, taus, bottom-(k+1) summaries — bitwise
+    unchanged, and the update_multi(reference=True) oracle still matches:
+    the sort is pure routing, invisible to the sampler's semantics."""
+    rng = np.random.default_rng(41)
+    keys = rng.integers(0, 300, 4096).astype(np.int32)
+    ws = rng.random(4096).astype(np.float32) + 0.1
+    ls = [1.0, 8.0, 64.0]
+    mk_spec = dict(k=128, chunk=1024, salt=3)
+
+    s_def, spec_def = I.init_multi_state(ls, **mk_spec)
+    s_pal, spec_pal = I.init_multi_state(ls, **mk_spec, backend="xla",
+                                         sort_backend="pallas")
+    out_def = I.update_multi(s_def, keys, ws, spec_def)
+    out_pal = I.update_multi(s_pal, keys, ws, spec_pal)
+    for a, b in zip(jax.tree.leaves(out_def), jax.tree.leaves(out_pal)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+    # the reference oracle is untouched by the routing knobs: finalized
+    # per-lane samples/thresholds agree (the established fused-vs-reference
+    # contract — raw table slot layouts may differ between the pipelines)
+    s_ref, spec_ref = I.init_multi_state(ls, **mk_spec)
+    out_ref = I.update_multi(s_ref, keys, ws, spec_ref, reference=True)
+    rn = I.finalize_multi(out_pal, spec_pal, ls=ls)
+    rr = I.finalize_multi(out_ref, spec_ref, ls=ls)
+    for l in ls:
+        np.testing.assert_array_equal(rn[l].keys, rr[l].keys)
+        np.testing.assert_array_equal(rn[l].counts, rr[l].counts)
+        assert rn[l].tau == rr[l].tau

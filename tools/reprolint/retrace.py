@@ -124,10 +124,29 @@ def _audit_query() -> dict[str, int]:
     return {"query._dispatch": _cache_size(Q._dispatch)}
 
 
+def _audit_chunksort() -> dict[str, int]:
+    """Pallas chunk-order sort: one compile per tile config / padded shape.
+
+    Two ragged sizes that pad to the same power-of-two P plus a repeat call
+    must share ONE executable — the sort is keyed only on (cfg, interpret, P),
+    so a per-call recompile here is a static-arg cache-key regression.  The
+    ingest workloads never touch this path on CPU (auto dispatch routes the
+    chunk sort to XLA), so the count below is exactly this workload's.
+    """
+    import numpy as np
+
+    from repro.kernels.chunksort import chunksort, ops
+
+    for n in (200, 256, 256):  # 200 and 256 both pad to P = 256
+        ops.sort_with_perm(_keys(n).astype(np.int32), backend="pallas")
+    return {"chunksort.sort_pairs": _cache_size(chunksort.sort_pairs)}
+
+
 WORKLOADS: dict[str, Callable[[], dict[str, int]]] = {
     "ingest": _audit_ingest,
     "serve": _audit_serve,
     "query": _audit_query,
+    "chunksort": _audit_chunksort,
 }
 
 
