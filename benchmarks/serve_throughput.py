@@ -22,10 +22,19 @@ the jitted steady state is what gets measured).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke] [--json PATH]
 
-``--json`` emits BENCH_serve.json (schema_version 2, stamped with backend +
+``--json`` emits BENCH_serve.json (schema_version 3, stamped with backend +
 interpret mode + the reprolint version/retrace budgets the timings were
 taken under).  ``--smoke`` is the CI gate: FAILS unless stacked serving
 measures >= 1.5x the oracle at 64 tenants and the probes are bit-identical.
+
+Schema v3 adds the ``recovery`` section: time-to-recover one killed shard
+of the fault-tolerant ingestion tier (stats/shardtier.py) as a function of
+checkpoint cadence.  Recovery = checkpoint restore + WAL-tail replay, so
+the cadence trades steady-state checkpoint cost against replay length at
+recovery time; each cadence leg reports the recovery wall time, how many
+WAL batches it replayed, and whether the recovered shard's answers are
+bit-identical to the pre-kill state (they must be — the smoke gate
+enforces it).
 
 Regime note: the stacked win comes from amortizing per-dispatch overhead
 (1 vmapped tick vs T observes; 1 coalesced query dispatch vs T engines), so
@@ -53,7 +62,7 @@ from repro.stats.service import (
 
 from .sampler_throughput import reprolint_stamp
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 # within sqrt(2) of the default (1, 8, 64) lane grid — no grid warnings
 CAPS = (1.0, 8.0, 10.0, 64.0)
 
@@ -187,6 +196,73 @@ def run(T=64, rounds=16, chunk=512, queries_per_round=64, k=512,
     }
 
 
+def run_recovery(cadences=(1, 4, 16), n_shards=2, n_batches=47, batch=2048,
+                 k=4096, ls=(1.0, 8.0), chunk=1024, verbose=True):
+    """Time-to-recover one killed shard vs checkpoint cadence.
+
+    For each ``checkpoint_every`` cadence: build a tier, ingest the same
+    deterministic stream, hard-kill shard 0, and time ``recover_shard``
+    (checkpoint restore + WAL-tail replay — the dominant recovery cost at
+    large k).  Tighter cadences replay fewer batches and recover faster at
+    the price of more frequent steady-state checkpoint writes; the report
+    quantifies that trade so a deployment can pick its recovery-time SLO.
+    Post-recovery answers must be bit-identical to the pre-kill state.
+
+    ``n_batches`` deliberately leaves a nonzero WAL tail past the last
+    checkpoint for every cadence > 1 (default 47: tails of 3 and 15 at
+    cadences 4 and 16) — killing exactly on a checkpoint boundary would
+    measure restore time only and flatter the loose cadences."""
+    import tempfile
+
+    from repro.stats.query import Query
+    from repro.stats.shardtier import ShardTier, TierConfig
+
+    rng = np.random.default_rng(17)
+    stream = [(rng.zipf(1.3, size=batch) % 50_000).astype(np.int64)
+              for _ in range(n_batches)]
+    probes = [Query(freqfns.distinct()), Query(freqfns.cap(8.0))]
+
+    legs = {}
+    for every in cadences:
+        with tempfile.TemporaryDirectory() as d:
+            tier = ShardTier(
+                StatsConfig(k=k, ls=ls, chunk=chunk),
+                TierConfig(n_shards=n_shards, checkpoint_every=every,
+                           auto_recover=False),
+                d)
+            t0 = time.perf_counter()
+            for b in stream:
+                tier.ingest(b)
+            ingest_s = time.perf_counter() - t0
+            pre = np.asarray(tier.query_batch(probes).estimates)
+
+            tier.kill_shard(0)
+            t0 = time.perf_counter()
+            tier.recover_shard(0)
+            recover_s = time.perf_counter() - t0
+            w = tier.workers[0]
+            replayed = w.applied_seq - w._last_ckpt_seq
+            post = np.asarray(tier.query_batch(probes).estimates)
+        legs[str(every)] = {
+            "checkpoint_every": every,
+            "ingest_s": ingest_s,
+            "recover_s": recover_s,
+            "replayed_batches": int(replayed),
+            "bit_identical": bool(np.array_equal(pre, post)),
+        }
+        if verbose:
+            leg = legs[str(every)]
+            print(f"cadence {every:3d}: recover {recover_s*1e3:9.1f} ms "
+                  f"({leg['replayed_batches']} WAL batches replayed, "
+                  f"ingest {ingest_s:.2f}s, bit-identical "
+                  f"{leg['bit_identical']})")
+    return {
+        "config": {"n_shards": n_shards, "n_batches": n_batches,
+                   "batch": batch, "k": k, "ls": list(ls), "chunk": chunk},
+        "cadences": legs,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -200,8 +276,15 @@ def main():
     if args.smoke:
         res = run(T=args.tenants or 64, rounds=8, chunk=256,
                   queries_per_round=24, k=128, reps=3)
+        print("\n[recovery] shard time-to-recover vs checkpoint cadence "
+              "(smoke-sized)")
+        recovery = run_recovery(cadences=(1, 4, 16), n_batches=19,
+                                batch=512, k=512, chunk=256)
     else:
         res = run(T=args.tenants or 64)
+        print("\n[recovery] shard time-to-recover vs checkpoint cadence "
+              "(k=4096)")
+        recovery = run_recovery()
 
     record = {
         "bench": "serve_throughput",
@@ -209,6 +292,7 @@ def main():
         "backend": jax.default_backend(),
         "capscore_interpret": bool(default_interpret()),
         "reprolint": reprolint_stamp(),
+        "recovery": recovery,
         **res,
     }
     with open(args.json, "w") as f:
@@ -224,6 +308,10 @@ def main():
             failed.append(f"stacked serving measured "
                           f"{res['speedup_vs_oracle']:.2f}x the per-tenant "
                           f"loop (gate: >= 1.5x)")
+        for every, leg in recovery["cadences"].items():
+            if not leg["bit_identical"]:
+                failed.append(f"recovery at cadence {every} changed the "
+                              "shard's answers (bit-identity violated)")
         if failed:
             print("PERF GATE FAILED: " + "; ".join(failed), file=sys.stderr)
             sys.exit(1)

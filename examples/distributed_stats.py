@@ -5,48 +5,152 @@ answers every cap_T of a query grid from ONE launch — chunks are scored once
 through the fused multi-l capscore kernel and all lanes reuse the hashes.
 
     PYTHONPATH=src python examples/distributed_stats.py
+
+``--chaos SEED`` instead replays a seeded fault schedule against the
+fault-tolerant sharded ingestion tier (stats/shardtier.py): crashes,
+stalls, slow calls, and lost replies fire at scheduled call sites while
+the tier ingests the same stream as a fault-free oracle; the run GATES on
+the recovered tier's exact answers being bit-identical to the oracle's
+(exit 1 on any divergence).  This is the CI chaos leg — a failing seed's
+schedule JSON is printed so it can be committed verbatim as a regression.
+
+    PYTHONPATH=src python examples/distributed_stats.py --chaos 11
 """
+import argparse
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
 
-from repro.core import continuous as C  # noqa: E402
-from repro.core import distributed as DD  # noqa: E402
-from repro.core import freqfns as F  # noqa: E402
-from repro.core.segments import EMPTY  # noqa: E402
+def run_mesh_demo():
+    import jax
+    import numpy as np
 
-EMPTY = int(EMPTY)
+    from repro.core import continuous as C
+    from repro.core import distributed as DD
+    from repro.core import freqfns as F
+    from repro.core.segments import EMPTY
 
-try:  # AxisType landed after jax 0.4; default axis types are equivalent
-    from jax.sharding import AxisType
+    EMPTY_ = int(EMPTY)
+    try:  # AxisType landed after jax 0.4; default axis types are equivalent
+        from jax.sharding import AxisType
 
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(AxisType.Auto,))
-except ImportError:
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-rng = np.random.default_rng(0)
-n = len(jax.devices()) * 65536
-keys = (rng.zipf(1.3, size=n) % 100_000).astype(np.int32)
-weights = np.ones(n, np.float32)
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+                             axis_types=(AxisType.Auto,))
+    except ImportError:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    rng = np.random.default_rng(0)
+    n = len(jax.devices()) * 65536
+    keys = (rng.zipf(1.3, size=n) % 100_000).astype(np.int32)
+    weights = np.ones(n, np.float32)
 
-k = 256
-ls = (1.0, 8.0, 64.0)
-fn = DD.make_distributed_two_pass_multi(mesh, ls=ls, salt=3, k=k,
-                                        chunk=4096, merge="tree")
-mkeys, mseeds, mw = (np.asarray(a)[0] for a in fn(keys, weights))
+    k = 256
+    ls = (1.0, 8.0, 64.0)
+    fn = DD.make_distributed_two_pass_multi(mesh, ls=ls, salt=3, k=k,
+                                            chunk=4096, merge="tree")
+    mkeys, mseeds, mw = (np.asarray(a)[0] for a in fn(keys, weights))
 
-ukeys, cnts = np.unique(keys, return_counts=True)
-for j, (l, T) in enumerate(zip(ls, (1.0, 8.0, 64.0))):
-    valid = mkeys[j] != EMPTY
-    order = np.argsort(mseeds[j][valid])
-    tau = mseeds[j][valid][order[k]] if valid.sum() > k else np.inf
-    sample_w = mw[j][valid][order[:k]]
-    est = float(np.sum(np.minimum(sample_w, T) / C.inclusion_prob(sample_w, tau, l)))
-    truth = F.exact_statistic(F.cap(T), cnts)
-    print(f"cap_{T:<4g} (lane l={l:<4g}) distributed estimate {est:12.0f}  "
-          f"truth {truth:12.0f}  err {abs(est-truth)/truth:6.2%}")
-print(f"[example] {len(jax.devices())} devices, {n} elements, k={k}, "
-      f"|ls|={len(ls)} lanes in one launch, state per device = O(k * |ls|)")
+    ukeys, cnts = np.unique(keys, return_counts=True)
+    for j, (l, T) in enumerate(zip(ls, (1.0, 8.0, 64.0))):
+        valid = mkeys[j] != EMPTY_
+        order = np.argsort(mseeds[j][valid])
+        tau = mseeds[j][valid][order[k]] if valid.sum() > k else np.inf
+        sample_w = mw[j][valid][order[:k]]
+        est = float(np.sum(np.minimum(sample_w, T)
+                           / C.inclusion_prob(sample_w, tau, l)))
+        truth = F.exact_statistic(F.cap(T), cnts)
+        print(f"cap_{T:<4g} (lane l={l:<4g}) distributed estimate "
+              f"{est:12.0f}  truth {truth:12.0f}  "
+              f"err {abs(est-truth)/truth:6.2%}")
+    print(f"[example] {len(jax.devices())} devices, {n} elements, k={k}, "
+          f"|ls|={len(ls)} lanes in one launch, state per device = "
+          f"O(k * |ls|)")
+
+
+def run_chaos_replay(seed, n_shards=3, n_batches=10, batch=300):
+    """Seeded chaos replay over the sharded tier, gated on bit-identity.
+
+    Deterministic end to end: the stream comes from the library's
+    counter-based hashing, the fault schedule is a pure function of the
+    seed, and backoff runs on the injector's virtual clock — a failing
+    seed replays identically anywhere.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import freqfns, hashing
+    from repro.launch.faults import FaultInjector, FaultSchedule
+    from repro.stats.query import Query
+    from repro.stats.service import StatsConfig
+    from repro.stats.shardtier import ExactUnavailable, ShardTier, TierConfig
+
+    cfg = StatsConfig(k=128, ls=(1.0, 8.0), chunk=64)
+    tier_cfg = TierConfig(n_shards=n_shards, checkpoint_every=4,
+                          retain_wal=True, auto_recover=True)
+    schedule = FaultSchedule.generate(seed, n_shards=n_shards, n_events=12)
+    queries = [Query(freqfns.distinct()), Query(freqfns.cap(8.0))]
+
+    eids = np.arange(n_batches * batch, dtype=np.int64)
+    keys = ((hashing.hash_combine_np(eids, np.int64(seed)) % np.uint32(500))
+            .astype(np.int64) + 1).reshape(n_batches, batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        oracle = ShardTier(cfg, TierConfig(**vars(tier_cfg)), d + "/oracle")
+        injector = FaultInjector(schedule)
+        tier = ShardTier(cfg, TierConfig(**vars(tier_cfg)), d + "/tier",
+                         faults=injector)
+        for b in keys:
+            oracle.ingest(b)
+            tier.ingest(b)
+
+        # drain the (finite) schedule with health rounds, then demand exact
+        got = None
+        for _ in range(20):
+            try:
+                got = tier.query_batch(queries, mode="exact")
+                break
+            except ExactUnavailable:
+                for _ in range(10):
+                    if all(st == "up" for st in tier.check_health().values()):
+                        break
+        if got is None:
+            print(f"[chaos] seed {seed}: tier never reached exact mode; "
+                  f"membership={tier.membership()}", file=sys.stderr)
+            print(schedule.to_json(), file=sys.stderr)
+            return 1
+        want = oracle.query_batch(queries, mode="exact")
+        if not np.array_equal(got.estimates, want.estimates):
+            print(f"[chaos] seed {seed}: BIT-IDENTITY VIOLATED — recovered "
+                  f"tier answers {got.estimates} vs fault-free oracle "
+                  f"{want.estimates}.  Regression schedule:",
+                  file=sys.stderr)
+            print(schedule.to_json(), file=sys.stderr)
+            return 1
+        n_down = sum(1 for _, _, ev, _ in tier.events if ev == "down")
+        print(f"[chaos] seed {seed}: {len(injector.fired)} faults fired "
+              f"({n_down} shard-down episodes) across {n_shards} shards / "
+              f"{n_batches * batch} elements; exact answers bit-identical "
+              f"to the fault-free oracle: {got.estimates}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
+                    nargs="+",
+                    help="replay seeded fault schedule(s) against the "
+                         "sharded tier; exits 1 unless the recovered exact "
+                         "answers are bit-identical to a fault-free oracle")
+    args = ap.parse_args()
+    if args.chaos is not None:
+        rc = 0
+        for seed in args.chaos:
+            rc |= run_chaos_replay(seed)
+        sys.exit(rc)
+    run_mesh_demo()
+
+
+if __name__ == "__main__":
+    main()

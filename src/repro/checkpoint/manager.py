@@ -12,6 +12,17 @@ PartitionSpecs; `restore` re-places them under whatever mesh is active now —
 a job restarted on a different device count reshards transparently (ZeRO
 state included).  Failure mid-write never corrupts the latest checkpoint:
 readers only see committed directories; `latest_step` skips `.tmp`.
+
+Durability contract: the atomic rename only orders the commit w.r.t. other
+*readers*; it does NOT order it w.r.t. the disk.  On a host crash (power
+cut) right after ``os.rename``, a filesystem that reorders data and
+directory writes can surface a committed directory whose ``arrays.npz`` is
+empty or torn.  ``save`` therefore fsyncs every file AND the ``.tmp``
+directory before the rename, and the parent directory after it (the rename
+itself becomes durable) — the standard write / fsync(file) / rename /
+fsync(dir) discipline.  ``fsync_file`` / ``fsync_dir`` are public because
+the shard-tier WAL (stats/shardtier.py) commits its log segments with the
+same sequence.
 """
 from __future__ import annotations
 
@@ -24,13 +35,31 @@ import jax
 import numpy as np
 
 
+def fsync_file(path: str | Path) -> None:
+    """Flush one file's data+metadata to stable storage."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(path: str | Path) -> None:
+    """Flush a directory's entries (creations/renames inside it) to disk."""
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree.flatten(tree)
     return flat, treedef
 
 
 def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None,
-         keep_last: int = 3) -> Path:
+         keep_last: int = 3, fsync: bool = True) -> Path:
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
@@ -52,10 +81,18 @@ def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None,
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if extra is not None:
         (tmp / "extra.json").write_text(json.dumps(extra))
-    os.sync if False else None
+    if fsync:
+        # every byte of the checkpoint must be on stable storage BEFORE the
+        # rename makes it visible — otherwise a host crash right after the
+        # rename can commit an empty/torn checkpoint (module docstring).
+        for p in sorted(tmp.iterdir()):
+            fsync_file(p)
+        fsync_dir(tmp)
     if final.exists():
         shutil.rmtree(final)
-    tmp.rename(final)  # atomic commit
+    tmp.rename(final)  # atomic commit (readers never see partial state)
+    if fsync:
+        fsync_dir(ckpt_dir)  # make the rename itself durable
 
     # retention
     steps = sorted(p for p in ckpt_dir.iterdir() if p.is_dir() and not p.name.endswith(".tmp"))

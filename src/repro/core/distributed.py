@@ -253,6 +253,55 @@ def merge_fixed_k_multi(table_a, table_b, ls, salt, *, k):
     )(table_a, table_b, ls)
 
 
+def merge_fixed_k_multi_states(tables, ls, salt, *, k, fold="left"):
+    """Fold any subset of stacked multi-l states into one.
+
+    The partial-merge surface of the sharded ingestion tier
+    (stats.shardtier): the coordinator folds the *surviving* shards'
+    states for degraded-mode queries — with key-partitioned shards every
+    subset fold is itself an unbiased sketch of the covered key space.
+    A single-element sequence folds to itself (no merge dispatch).
+
+    ``fold="left"`` (default) is bit-compatible with a chain of pairwise
+    merges — the fixed-k merge heuristic is order-sensitive, so the fold
+    shape IS the answer's identity (MultiSampler.absorb_many relies on
+    this to stay bit-equal to repeated ``absorb``); ``fold="tree"`` halves
+    the critical path for genuinely parallel (mesh) folds at the cost of
+    that compatibility."""
+    tables = list(tables)
+    if not tables:
+        raise ValueError("no states to merge")
+    if fold == "left":
+        acc = tables[0]
+        for t in tables[1:]:
+            acc = merge_fixed_k_multi(acc, t, ls, salt, k=k)
+        return acc
+    if fold != "tree":
+        raise ValueError(f"unknown fold {fold!r}")
+    while len(tables) > 1:
+        tables = [
+            merge_fixed_k_multi(tables[i], tables[i + 1], ls, salt, k=k)
+            if i + 1 < len(tables) else tables[i]
+            for i in range(0, len(tables), 2)
+        ]
+    return tables[0]
+
+
+def merge_bottomk_multi_states(summaries, *, cap):
+    """Fold stacked per-lane bottom-cap summaries ``[(keys, seeds), ...]``
+    into one pair — the exact-mode half of the tier's partial merge.
+    Min-merge is associative and commutative, so (unlike the fixed-k fold
+    above) the fold shape cannot change a bit of the result; the left fold
+    keeps the dispatch sequence aligned with the table fold."""
+    summaries = list(summaries)
+    if not summaries:
+        raise ValueError("no summaries to merge")
+    ka, sa = summaries[0]
+    for kb, sb in summaries[1:]:
+        ka, sa = merge_bottomk_multi(ka, sa, kb, sb, cap=cap)
+    return ka, sa
+
+
 # ---------------------------------------------------------------------------
 # Distributed 2-pass sampling (shard_map bodies)
 # ---------------------------------------------------------------------------

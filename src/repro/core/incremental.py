@@ -838,25 +838,40 @@ class MultiSampler:
         never re-scored under the absorbing host's ids, which would draw
         fresh randomness for already-scored elements and bias the summaries.
         """
+        self.absorb_many([other], k=k, merge_summaries=merge_summaries)
+
+    def absorb_many(self, others, *, k, merge_summaries: bool) -> None:
+        """Fold any number of other hosts' samplers into this one at once —
+        bit-identical to calling ``absorb`` on each in sequence (the fixed-k
+        fold is a left fold; see distributed.merge_fixed_k_multi_states).
+        This is the partial-merge surface the shard-tier coordinator uses to
+        fold a subset of surviving shards in one shot."""
         from . import distributed as DZ
 
-        mine, theirs = self.flushed_state(), other.flushed_state()
-        table = DZ.merge_fixed_k_multi(mine.table, theirs.table, mine.l,
-                                       mine.salt, k=k)
+        others = list(others)
+        if not others:
+            return
+        states = [self.flushed_state()] + [o.flushed_state() for o in others]
+        mine = states[0]
+        table = DZ.merge_fixed_k_multi_states(
+            [s.table for s in states], mine.l, mine.salt, k=k)
         if merge_summaries:
-            bk_keys, bk_seeds = DZ.merge_bottomk_multi(
-                mine.bk_keys, mine.bk_seeds, theirs.bk_keys, theirs.bk_seeds,
+            bk_keys, bk_seeds = DZ.merge_bottomk_multi_states(
+                [(s.bk_keys, s.bk_seeds) for s in states],
                 cap=mine.bk_keys.shape[1])
         else:
             bk_keys, bk_seeds = mine.bk_keys, mine.bk_seeds
+        n_seen = mine.n_seen
+        for s in states[1:]:
+            n_seen = n_seen + s.n_seen
         self.state = SamplerState(
             table=table,
-            n_seen=mine.n_seen + theirs.n_seen,
+            n_seen=n_seen,
             l=mine.l, salt=mine.salt,
             bk_keys=bk_keys, bk_seeds=bk_seeds,
         )
         # remainders are inside the merged state now
-        self._n_real += other._n_real
+        self._n_real += sum(o._n_real for o in others)
         self._rem = _RemainderBuffer(self.spec.chunk)
 
     def finalize(self) -> dict[float, SampleResult]:

@@ -49,6 +49,33 @@ class ServeConfig:
     # answers, longer uninterrupted overlap runs)
     refresh_every: int = 1
     max_ticks_per_step: int = 1       # stacked ingest dispatches per step
+    # backpressure: per-tenant admission queue depth (ingest and query
+    # queues separately).  ``submit_*`` past the limit raises QueueFull —
+    # a RETRIABLE rejection — instead of letting one unthrottled client
+    # grow the backlog without bound.  None = unbounded (legacy behavior).
+    max_queue_depth: int | None = None
+    # result expiry: a completed QueryRecord never ``pop_result``-ed within
+    # this many subsequent steps is evicted (an abandoned client must not
+    # leak the result buffer).  None = records live until popped.
+    result_ttl_steps: int | None = None
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the tenant's queue is at ``max_queue_depth``.
+
+    Retriable by contract (``retriable = True``): the client should back
+    off and resubmit — nothing was enqueued, and the server sheds load
+    instead of buffering it."""
+
+    retriable = True
+
+    def __init__(self, plane: str, tenant: int, depth: int):
+        super().__init__(
+            f"{plane} queue for tenant {tenant} is full ({depth} deep) — "
+            "retry after the scheduler drains")
+        self.plane = plane
+        self.tenant = tenant
+        self.depth = depth
 
 
 @dataclasses.dataclass
@@ -63,6 +90,7 @@ class QueryRecord:
     ci_high: float
     lane: float
     latency_s: float
+    done_step: int = 0   # scheduler step that completed it (TTL accounting)
 
 
 def _round_robin(queues: dict[int, deque], start: int, n_tenants: int,
@@ -118,19 +146,24 @@ class StatsScheduler:
         # counters (monotone, for throughput reporting)
         self.n_elements_ingested = 0
         self.n_queries_answered = 0
+        self.n_results_expired = 0
         self.n_steps = 0
 
     # -- submission --------------------------------------------------------
 
     def submit_ingest(self, tenant: int, keys, weights=None) -> None:
-        """Queue a stream slice for one tenant (admitted at a later step)."""
+        """Queue a stream slice for one tenant (admitted at a later step).
+        Raises QueueFull (retriable) at ``ServeConfig.max_queue_depth``."""
         self._check_tenant(tenant)
+        self._check_depth("ingest", self._ingest_q, tenant)
         self._ingest_q[tenant].append((np.asarray(keys), weights))
 
     def submit_query(self, tenant: int, fn: freqfns.FreqFn, segment=None,
                      l: float | None = None) -> int:
-        """Queue a statistic request; returns the request id to poll."""
+        """Queue a statistic request; returns the request id to poll.
+        Raises QueueFull (retriable) at ``ServeConfig.max_queue_depth``."""
         self._check_tenant(tenant)
+        self._check_depth("query", self._query_q, tenant)
         rid = self._next_id
         self._next_id += 1
         self._query_q[tenant].append(
@@ -141,6 +174,12 @@ class StatsScheduler:
         if not (0 <= tenant < self.service.n_tenants):
             raise ValueError(f"tenant {tenant} out of range "
                              f"[0, {self.service.n_tenants})")
+
+    def _check_depth(self, plane: str, queues: dict[int, deque],
+                     tenant: int) -> None:
+        depth = self.config.max_queue_depth
+        if depth is not None and len(queues[tenant]) >= depth:
+            raise QueueFull(plane, tenant, depth)
 
     # -- results -----------------------------------------------------------
 
@@ -173,6 +212,15 @@ class StatsScheduler:
         cfg = self.config
         self.n_steps += 1
         T = self.service.n_tenants
+
+        # 0) expire abandoned results: records not popped within the TTL
+        #    window are evicted so a vanished client cannot leak the buffer.
+        if cfg.result_ttl_steps is not None:
+            expired = [rid for rid, rec in self._results.items()
+                       if self.n_steps - rec.done_step >= cfg.result_ttl_steps]
+            for rid in expired:
+                del self._results[rid]
+            self.n_results_expired += len(expired)
 
         # 1) admit ingest fairly into the bank's staging queues (host-side
         #    numpy appends — no device work yet).
@@ -225,7 +273,8 @@ class StatsScheduler:
                     ci_low=float(batch.ci_low[j]),
                     ci_high=float(batch.ci_high[j]),
                     lane=float(batch.lanes[j]),
-                    latency_s=now - t_submit)
+                    latency_s=now - t_submit,
+                    done_step=self.n_steps)
                 done.append(rid)
             self.n_queries_answered += len(done)
         return done

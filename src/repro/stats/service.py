@@ -326,37 +326,57 @@ class StreamStatsService:
         key-partitioned shards, ~10% bias for arbitrary element splits;
         exact queries become unavailable.
         """
-        if (tuple(other.config.ls) != tuple(self.config.ls)
-                or other.config.k != self.config.k
-                or other.config.salt != self.config.salt
-                or other.config.chunk != self.config.chunk
-                or other.config.evict_every != self.config.evict_every):
-            # salt especially: kb/seed/tau from different hash functions
-            # would union into a silently biased sketch; evict_every because
-            # the lane-wise table merge requires equal capacities
-            raise ValueError(
-                "merge requires identical (k, ls, chunk, salt, evict_every) configs")
+        self.merge_many([other], mode=mode)
+
+    def merge_many(self, others, mode: str = "exact") -> None:
+        """Absorb ANY number of other hosts' states in one pairwise-tree
+        fold (same validation as ``merge``, applied across the whole group;
+        a single ``other`` is exactly ``merge``).  The shard-tier
+        coordinator uses this to fold the surviving shards of a degraded
+        tier — or all shards of a healthy one — into a scratch service.
+        An empty sequence is a no-op."""
+        others = list(others)
+        if not others:
+            return
+        for other in others:
+            if (tuple(other.config.ls) != tuple(self.config.ls)
+                    or other.config.k != self.config.k
+                    or other.config.salt != self.config.salt
+                    or other.config.chunk != self.config.chunk
+                    or other.config.evict_every != self.config.evict_every):
+                # salt especially: kb/seed/tau from different hash functions
+                # would union into a silently biased sketch; evict_every
+                # because the lane-wise table merge requires equal capacities
+                raise ValueError(
+                    "merge requires identical (k, ls, chunk, salt, evict_every) configs")
         if mode not in ("exact", "approx"):
             raise ValueError(f"unknown merge mode {mode!r}")
         if mode == "exact":
-            if self.config.host_id is None or other.config.host_id is None:
+            if self.config.host_id is None or any(
+                    o.config.host_id is None for o in others):
                 raise ValueError(
                     "exact merge requires a host_id on both services: shared "
                     "element-id namespaces alias randomness across shards")
-            overlap = self._host_ids & other._host_ids
-            if overlap:
-                # not just pairwise: hosts absorbed earlier count too (two
-                # absorbed shards sharing an id namespace are just as biased)
-                raise ValueError(
-                    "exact merge requires distinct host_ids across ALL "
-                    f"absorbed hosts; {sorted(overlap)} appear on both sides")
-            if not (self._exact_ok and other._exact_ok):
+            ids = set(self._host_ids)
+            for other in others:
+                overlap = ids & other._host_ids
+                if overlap:
+                    # not just pairwise: hosts absorbed earlier count too (two
+                    # absorbed shards sharing an id namespace are just as
+                    # biased)
+                    raise ValueError(
+                        "exact merge requires distinct host_ids across ALL "
+                        f"absorbed hosts; {sorted(overlap)} appear on both sides")
+                ids |= other._host_ids
+            if not (self._exact_ok and all(o._exact_ok for o in others)):
                 raise ValueError(
                     "exact merge unavailable: a prior mode='approx' merge "
                     "invalidated the lossless summaries")
-        self._sampler.absorb(other._sampler, k=self.config.k,
-                             merge_summaries=(mode == "exact"))
-        self._host_ids |= other._host_ids
+        self._sampler.absorb_many([o._sampler for o in others],
+                                  k=self.config.k,
+                                  merge_summaries=(mode == "exact"))
+        for other in others:
+            self._host_ids |= other._host_ids
         if mode == "approx":
             self._exact_ok = False
         self._results = None

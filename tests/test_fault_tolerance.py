@@ -103,3 +103,249 @@ def test_elastic_restart_subprocess():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Durability: fsync discipline + crash-interrupted save
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_fsync_ordering(monkeypatch):
+    """The write/fsync(files)/fsync(tmp dir)/rename/fsync(parent) discipline
+    (manager docstring): every byte of the checkpoint reaches stable storage
+    BEFORE the rename makes it visible, and the rename itself is made
+    durable by the parent-directory fsync AFTER."""
+    events = []
+    real_file, real_dir = ckpt.fsync_file, ckpt.fsync_dir
+    with tempfile.TemporaryDirectory() as d:
+        final = Path(d) / "step_00000001"
+
+        def rec_file(path):
+            events.append(("file", Path(path).name, final.exists()))
+            real_file(path)
+
+        def rec_dir(path):
+            events.append(("dir", Path(path).name, final.exists()))
+            real_dir(path)
+
+        monkeypatch.setattr(ckpt, "fsync_file", rec_file)
+        monkeypatch.setattr(ckpt, "fsync_dir", rec_dir)
+        ckpt.save(d, 1, {"a": jnp.arange(4.0)}, extra={"cursor": {"o": 1}})
+
+    files = [e for e in events if e[0] == "file"]
+    dirs = [e for e in events if e[0] == "dir"]
+    # every checkpoint file fsynced, all pre-commit (final not yet visible)
+    assert {n for _, n, _ in files} == {"arrays.npz", "manifest.json",
+                                        "extra.json"}
+    assert all(not committed for _, _, committed in files)
+    # tmp dir fsynced pre-commit; parent dir fsynced post-commit
+    assert len(dirs) == 2
+    assert dirs[0][1].endswith(".tmp") and not dirs[0][2]
+    assert not dirs[1][1].endswith(".tmp") and dirs[1][2]
+
+
+def test_checkpoint_save_without_fsync_skips_syncs(monkeypatch):
+    calls = []
+    monkeypatch.setattr(ckpt, "fsync_file", lambda p: calls.append(p))
+    monkeypatch.setattr(ckpt, "fsync_dir", lambda p: calls.append(p))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"a": jnp.ones(2)}, fsync=False)
+        assert calls == []
+        assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_interrupted_save_keeps_previous(monkeypatch):
+    """A crash mid-save (simulated: fsync raises before the rename) never
+    harms the committed checkpoint: latest_step is unchanged and the old
+    step restores bit-for-bit."""
+    tree1 = {"a": jnp.arange(3.0)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree1)
+
+        def power_cut(path):
+            raise OSError("simulated power cut during fsync")
+
+        monkeypatch.setattr(ckpt, "fsync_file", power_cut)
+        with pytest.raises(OSError, match="power cut"):
+            ckpt.save(d, 2, {"a": jnp.arange(3.0) * 2})
+        monkeypatch.undo()
+        # the half-written step 2 is invisible (.tmp); step 1 is intact
+        assert ckpt.latest_step(d) == 1
+        out = ckpt.restore(d, 1, tree1)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree1["a"]))
+        # and a post-restart save of step 2 commits over the debris
+        ckpt.save(d, 2, {"a": jnp.arange(3.0) * 2})
+        assert ckpt.latest_step(d) == 2
+
+
+# ---------------------------------------------------------------------------
+# Crash mid-handoff: tenant leave/join interrupted between slice and splice
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_handoff_recovers_from_committed_checkpoint():
+    """Kill the mover between ``restore_slice`` (leave) and
+    ``load_tenant_state_dict`` (join): the in-flight blob is memory-only, so
+    nothing is torn — the destination bank is untouched, the source
+    checkpoint still serves the row, and the retried handoff is
+    bit-identical because the slice is a pure read of committed state."""
+    from repro.core import hashing
+    from repro.stats.service import (
+        MultiTenantStats, StatsConfig, StreamStatsService)
+
+    cfg = StatsConfig(k=64, ls=(1.0, 8.0), chunk=64)
+    T = 3
+    eids = np.arange(1200, dtype=np.int64)
+    streams = [
+        ((hashing.hash_combine_np(eids, np.int64(t)) % np.uint32(300))
+         .astype(np.int64) + 1)
+        for t in range(T)
+    ]
+    bank = MultiTenantStats(cfg, n_tenants=T)
+    for t in range(T):
+        bank.observe(t, streams[t])
+    bank.drain()
+    want = bank.query_cap(1, 8.0)
+
+    with tempfile.TemporaryDirectory() as d:
+        bank.save_checkpoint(d, step=1)
+        example = StreamStatsService(cfg).state_dict()
+        example.pop("exact_ok")  # bank rows are 1-pass sketch state
+
+        # attempt 1: the mover slices tenant 1 out of the bank checkpoint…
+        blob = ckpt.restore_slice(d, 1, example, index=1)
+        # …then dies BEFORE load_tenant_state_dict ran on the destination.
+        del blob  # in-flight state gone with the process
+
+        # no torn row: the destination bank never saw the handoff
+        dest = MultiTenantStats(cfg, n_tenants=T)
+        assert dest.n_observed(1) == 0
+
+        # attempt 2 (restart): the same committed checkpoint replays the
+        # handoff — the slice is deterministic, the splice lands intact
+        blob_a = ckpt.restore_slice(d, 1, example, index=1)
+        blob_b = ckpt.restore_slice(d, 1, example, index=1)
+        assert set(blob_a) == set(blob_b)
+        for key in blob_a:
+            np.testing.assert_array_equal(np.asarray(blob_a[key]),
+                                          np.asarray(blob_b[key]))
+        dest.load_tenant_state_dict(1, blob_a)
+        assert dest.query_cap(1, 8.0) == want
+        # the source checkpoint is unchanged — a third reader still slices
+        # the identical row (the crash wrote nothing anywhere)
+        again = ckpt.restore_slice(d, 1, example, index=1)
+        for key in blob_a:
+            np.testing.assert_array_equal(np.asarray(again[key]),
+                                          np.asarray(blob_a[key]))
+
+
+# ---------------------------------------------------------------------------
+# Chaos suite: seeded fault schedules against the sharded ingestion tier
+# ---------------------------------------------------------------------------
+
+# Failing seeds get committed verbatim here as regression schedules
+# (FaultSchedule.to_json makes them portable) — see DESIGN.md §13.
+CHAOS_SEEDS = (3, 11, 29)
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_tier_exact_bit_identity_after_recovery(seed):
+    """Drive the sharded tier through a seeded schedule of crashes, stalls,
+    slow calls, and lost replies while ingesting the SAME stream as a
+    fault-free oracle tier.  Invariants:
+
+    * mid-run answers are always available — exact when reachable, else a
+      flagged degraded answer with a coverage stamp;
+    * after the schedule drains and every shard recovers, the exact
+      two-pass answer is bit-identical to the oracle's (crash/recover
+      history leaves zero trace in the state).
+    """
+    import dataclasses
+
+    from repro.core import freqfns, hashing
+    from repro.launch.faults import FaultInjector, FaultSchedule
+    from repro.stats.query import Query
+    from repro.stats.service import StatsConfig
+    from repro.stats.shardtier import ExactUnavailable, ShardTier, TierConfig
+
+    cfg = StatsConfig(k=64, ls=(1.0, 8.0), chunk=32)
+    queries = [Query(freqfns.distinct()), Query(freqfns.cap(8.0))]
+    n_shards = 3
+    schedule = FaultSchedule.generate(seed, n_shards=n_shards, n_events=12)
+    assert schedule.events, "a chaos seed must actually schedule faults"
+    tier_cfg = TierConfig(n_shards=n_shards, checkpoint_every=4,
+                          retain_wal=True, auto_recover=True)
+
+    n_batches, batch = 8, 250
+    eids = np.arange(n_batches * batch, dtype=np.int64)
+    keys = ((hashing.hash_combine_np(eids, np.int64(5)) % np.uint32(400))
+            .astype(np.int64) + 1).reshape(n_batches, batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        oracle = ShardTier(cfg, dataclasses.replace(tier_cfg),
+                           Path(d) / "oracle")
+        tier = ShardTier(cfg, dataclasses.replace(tier_cfg),
+                         Path(d) / "tier", faults=FaultInjector(schedule))
+        for i, b in enumerate(keys):
+            oracle.ingest(b)
+            tier.ingest(b)
+            if i == n_batches // 2:
+                # mid-run leg: auto mode must answer NOW, whatever is down
+                mid = tier.query_batch(queries, mode="auto")
+                assert np.all(np.isfinite(mid.estimates))
+                if mid.degraded:
+                    assert 0.0 < mid.coverage < 1.0
+                    assert mid.staleness_elements > 0
+                    assert mid.mode == "approx"
+                else:
+                    assert mid.coverage == 1.0
+
+        # drain the schedule: events fire once per (site, call_no <= 8), so
+        # a bounded number of health/query rounds exhausts every remaining
+        # event; exact answers require all shards up + caught up
+        got = None
+        for _ in range(20):
+            try:
+                got = tier.query_batch(queries, mode="exact")
+                break
+            except ExactUnavailable:
+                for _ in range(10):
+                    if all(st == "up"
+                           for st in tier.check_health().values()):
+                        break
+        assert got is not None, (
+            f"seed {seed}: exact answer still unavailable after the "
+            f"schedule drained; membership={tier.membership()}")
+        assert got.mode == "exact" and not got.degraded
+        assert got.coverage == 1.0 and got.staleness_elements == 0
+
+        want = oracle.query_batch(queries, mode="exact")
+        np.testing.assert_array_equal(got.estimates, want.estimates)
+        # approx answers converge to full coverage too (all shards up)
+        approx = tier.query_batch(queries, mode="approx")
+        ref = oracle.query_batch(queries, mode="approx")
+        assert not approx.degraded
+        np.testing.assert_array_equal(approx.estimates, ref.estimates)
+
+
+def test_chaos_schedule_regression_roundtrip():
+    """A failing chaos seed commits as a verbatim JSON schedule; replaying
+    the JSON drives the injector through the identical event sequence."""
+    from repro.launch.faults import FaultInjector, FaultSchedule
+
+    schedule = FaultSchedule.generate(CHAOS_SEEDS[0], n_shards=3,
+                                      n_events=12)
+    replayed = FaultSchedule.from_json(schedule.to_json())
+    assert replayed.events == schedule.events
+
+    a, b = FaultInjector(schedule), FaultInjector(replayed)
+    sites = [e.site for e in schedule.events for _ in range(e.call_no)]
+    for inj in (a, b):
+        for s in sites:
+            try:
+                with inj.site(s):
+                    pass
+            except Exception:  # noqa: BLE001 — any injected fault kind
+                pass
+    assert a.fired == b.fired and len(a.fired) == len(schedule.events)

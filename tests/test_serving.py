@@ -331,3 +331,76 @@ def test_stats_server_drains_burst_and_evicts():
         server.submit(rid, freqfns.cap(8.0))
     assert server.step(drain=False) == list(range(30, 38))  # one slice only
     assert len(server.pending) == 22
+
+
+# ---------------------------------------------------------------------------
+# Scheduler backpressure (QueueFull) + result TTL expiry
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_backpressure_queue_full():
+    """Admission past max_queue_depth raises QueueFull — retriable by
+    contract, nothing enqueued — per tenant and per plane."""
+    from repro.stats.scheduler import QueueFull
+
+    cfg = _cfg(chunk=128)
+    mts = MultiTenantStats(cfg, n_tenants=2)
+    sched = StatsScheduler(mts, ServeConfig(max_queue_depth=3))
+    keys = _streams(1, 128, seed=12)[0]
+    for _ in range(3):
+        sched.submit_ingest(0, keys)
+    with pytest.raises(QueueFull) as ei:
+        sched.submit_ingest(0, keys)
+    assert ei.value.retriable and ei.value.plane == "ingest"
+    assert ei.value.tenant == 0 and ei.value.depth == 3
+    assert sched.pending_ingest == 3  # the rejected slice was NOT enqueued
+
+    # the query plane counts depth separately
+    for _ in range(3):
+        sched.submit_query(0, freqfns.cap(8.0))
+    with pytest.raises(QueueFull) as ei:
+        sched.submit_query(0, freqfns.cap(8.0))
+    assert ei.value.retriable and ei.value.plane == "query"
+    assert sched.pending_queries == 3
+
+    # depth is per tenant: tenant 1 is unaffected by tenant 0's backlog
+    sched.submit_ingest(1, keys)
+    sched.submit_query(1, freqfns.cap(8.0))
+
+    # draining frees depth — the client's retry is then admitted
+    sched.step()
+    sched.submit_ingest(0, keys)
+    sched.submit_query(0, freqfns.cap(8.0))
+
+
+def test_scheduler_depth_unbounded_by_default():
+    cfg = _cfg(chunk=128)
+    mts = MultiTenantStats(cfg, n_tenants=1)
+    sched = StatsScheduler(mts)  # max_queue_depth=None: legacy behavior
+    keys = _streams(1, 128, seed=13)[0]
+    for _ in range(100):
+        sched.submit_ingest(0, keys)
+    assert sched.pending_ingest == 100
+
+
+def test_scheduler_result_ttl_expires_abandoned_records():
+    """A completed record never popped within result_ttl_steps is evicted
+    (abandoned clients must not leak the result buffer); records read
+    within the window are unaffected."""
+    cfg = _cfg(chunk=128)
+    mts = MultiTenantStats(cfg, n_tenants=1)
+    sched = StatsScheduler(mts, ServeConfig(result_ttl_steps=2))
+    sched.submit_ingest(0, _streams(1, 256, seed=14)[0])
+    abandoned = sched.submit_query(0, freqfns.cap(8.0))
+    read = sched.submit_query(0, freqfns.cap(8.0))
+    sched.drain()
+    assert sched.buffered_results == 2
+    rec = sched.pop_result(read)  # the live client reads within the TTL
+    assert rec is not None and rec.done_step == sched.n_steps
+
+    sched.step()  # age 1 < ttl: the abandoned record survives
+    assert sched.buffered_results == 1
+    sched.step()  # age 2 >= ttl: evicted at the top of the step
+    assert sched.buffered_results == 0
+    assert sched.n_results_expired == 1
+    assert sched.pop_result(abandoned) is None

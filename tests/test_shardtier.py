@@ -1,0 +1,412 @@
+"""Sharded ingestion tier: routing, WAL, recovery bit-identity, degraded
+queries, bounded retry/backoff, elastic membership (stats/shardtier.py) and
+the deterministic fault harness (launch/faults.py)."""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import freqfns, hashing
+from repro.launch.faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    InjectedLostReply,
+    VirtualClock,
+)
+from repro.stats.query import Query
+from repro.stats.service import StatsConfig, StreamStatsService
+from repro.stats.shardtier import (
+    ExactUnavailable,
+    ShardTier,
+    ShardWAL,
+    ShardWorker,
+    TierConfig,
+    partition_batch,
+    route_keys,
+)
+
+CFG = StatsConfig(k=64, ls=(1.0, 8.0), chunk=32)
+QUERIES = [Query(freqfns.distinct()), Query(freqfns.cap(8.0))]
+
+
+def _stream(n, lo=1, hi=400, stream_id=0):
+    """Deterministic skewed key stream from the library's own hashing."""
+    eids = np.arange(n, dtype=np.int64)
+    h = hashing.hash_combine_np(eids, np.int64(stream_id))
+    return (h % np.uint32(hi - lo)).astype(np.int64) + lo
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def test_route_keys_deterministic_and_stable():
+    keys = _stream(500)
+    a = route_keys(keys, 4)
+    b = route_keys(keys, 4)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 4
+    # every key maps to ONE shard regardless of batch context
+    solo = np.array([int(route_keys(np.array([k]), 4)[0]) for k in keys[:50]])
+    np.testing.assert_array_equal(solo, a[:50])
+
+
+def test_partition_batch_covers_and_preserves_order():
+    keys = _stream(300)
+    w = np.arange(300, dtype=np.float32)
+    parts = partition_batch(keys, w, 3)
+    total = sum(len(pk) for pk, _ in parts)
+    assert total == 300
+    sid = route_keys(keys, 3)
+    for s, (pk, pw) in enumerate(parts):
+        np.testing.assert_array_equal(pk, keys[sid == s])
+        np.testing.assert_array_equal(pw, w[sid == s])  # arrival order kept
+
+
+# ---------------------------------------------------------------------------
+# WAL
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_truncate_and_gap():
+    with tempfile.TemporaryDirectory() as d:
+        wal = ShardWAL(d)
+        for seq in (1, 2, 3, 4):
+            wal.append(seq, np.full(seq, seq, np.int32),
+                       np.full(seq, float(seq), np.float32))
+        assert wal.last_seq() == 4 and wal.covers_from_origin()
+        got = [(s, k.tolist()) for s, k, _ in wal.entries(after=2)]
+        assert got == [(3, [3, 3, 3]), (4, [4, 4, 4, 4])]
+        wal.truncate_through(2)
+        assert wal.seqs() == [3, 4] and not wal.covers_from_origin()
+        # replaying from before the truncation point must fail loudly
+        with pytest.raises(ValueError, match="WAL gap"):
+            list(wal.entries(after=0))
+        # no torn segments: a leftover .tmp is invisible
+        (wal.dir / "wal_00000009.npz.tmp").write_bytes(b"torn")
+        assert wal.seqs() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Fault schedule determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_schedule_deterministic_and_replayable():
+    a = FaultSchedule.generate(7, n_shards=3, n_events=10)
+    b = FaultSchedule.generate(7, n_shards=3, n_events=10)
+    assert a == b
+    c = FaultSchedule.from_json(a.to_json())
+    assert c.events == a.events
+    assert a.events  # dedup may shrink but not to zero at these sizes
+    assert all(e.kind in ("crash", "stall", "slow", "lost_reply")
+               for e in a.events)
+    assert FaultSchedule.generate(8, n_shards=3, n_events=10) != a
+
+
+def test_injector_fires_on_nth_call_and_records():
+    sched = FaultSchedule(events=(
+        FaultEvent("s.op", 2, "lost_reply"),
+        FaultEvent("s.op", 3, "slow", 1.5),
+    ))
+    inj = FaultInjector(sched, VirtualClock())
+    with inj.site("s.op"):
+        pass  # call 1: clean
+    with pytest.raises(InjectedLostReply):
+        with inj.site("s.op"):
+            pass  # call 2: body runs, reply lost
+    t0 = inj.clock.now()
+    with inj.site("s.op"):
+        pass  # call 3: slow
+    assert inj.clock.now() == t0 + 1.5
+    assert [e.call_no for e in inj.fired] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Worker: recovery bit-identity, idempotent apply
+# ---------------------------------------------------------------------------
+
+
+def _feed_worker(worker, batches, start_seq=1):
+    for i, b in enumerate(batches):
+        worker.wal.append(start_seq + i, b, np.ones(len(b), np.float32))
+        worker.apply(start_seq + i, b, np.ones(len(b), np.float32))
+
+
+def _state_equal(sa: dict, sb: dict) -> bool:
+    return (sa.keys() == sb.keys()
+            and all(np.array_equal(np.asarray(sa[k]), np.asarray(sb[k]))
+                    for k in sa))
+
+
+def test_worker_crash_recover_bit_identical():
+    batches = [_stream(60, stream_id=i) for i in range(7)]
+    with tempfile.TemporaryDirectory() as d:
+        ref = ShardWorker(0, CFG, d + "/ref", checkpoint_every=3)
+        _feed_worker(ref, batches)
+
+        w = ShardWorker(0, CFG, d + "/w", checkpoint_every=3)
+        _feed_worker(w, batches[:5])
+        w.crash()
+        with pytest.raises(Exception):
+            w.n_observed  # dead worker refuses service
+        w.recover()  # checkpoint restore + WAL tail replay
+        _feed_worker(w, batches[5:], start_seq=6)
+
+        assert _state_equal(w.service.state_dict(), ref.service.state_dict())
+        # recovery is idempotent: recover() on a LIVE worker is a no-op
+        # state-wise (rebuild from durable state reproduces the same bits)
+        w.recover()
+        assert _state_equal(w.service.state_dict(), ref.service.state_dict())
+
+
+def test_worker_apply_is_idempotent():
+    b = _stream(50)
+    with tempfile.TemporaryDirectory() as d:
+        w = ShardWorker(0, CFG, d, checkpoint_every=0)
+        w.wal.append(1, b, np.ones(len(b), np.float32))
+        w.apply(1, b, np.ones(len(b), np.float32))
+        n = w.n_observed
+        # the retry path after a lost reply: same seq again is an ack no-op
+        w.apply(1, b, np.ones(len(b), np.float32))
+        assert w.n_observed == n
+        with pytest.raises(ValueError, match="gap"):
+            w.apply(5, b, np.ones(len(b), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Tier: ingest equivalence, degraded queries, exact mode
+# ---------------------------------------------------------------------------
+
+
+def _mk_tier(d, **kw):
+    tier_kw = dict(n_shards=3, checkpoint_every=4, retain_wal=True)
+    tier_kw.update(kw)
+    return ShardTier(CFG, TierConfig(**tier_kw), d)
+
+
+def test_tier_healthy_queries_not_degraded():
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d)
+        for i in range(6):
+            tier.ingest(_stream(100, stream_id=i))
+        res = tier.query_batch(QUERIES)
+        assert res.coverage == 1.0 and not res.degraded
+        assert res.mode == "approx" and res.staleness_elements == 0
+        exact = tier.query_batch(QUERIES, mode="exact")
+        assert exact.mode == "exact" and not exact.degraded
+        # auto prefers exact when available
+        auto = tier.query_batch(QUERIES, mode="auto")
+        np.testing.assert_array_equal(auto.estimates, exact.estimates)
+        assert auto.mode == "exact"
+
+
+def test_tier_degraded_flags_and_ht_scaling():
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, auto_recover=False)
+        for i in range(6):
+            tier.ingest(_stream(100, stream_id=i))
+        tier.kill_shard(1)
+        tier.check_health()
+        assert tier.membership()[1] == "down"
+        res = tier.query_batch(QUERIES, mode="auto")
+        live_routed = tier._routed[0] + tier._routed[2]
+        total = sum(tier._routed)
+        assert res.degraded and res.mode == "approx"
+        assert res.coverage == pytest.approx(live_routed / total)
+        assert res.staleness_elements == tier._routed[1]
+        # estimates are the surviving-shard fold scaled by 1/coverage,
+        # with widened (not narrowed) uncertainty
+        raw = tier._merged_approx()[0].query_batch(QUERIES, exact=False)
+        np.testing.assert_allclose(
+            res.estimates, raw.estimates / res.coverage)
+        assert (res.stderr >= raw.stderr).all()
+        # exact mode refuses rather than silently degrade
+        with pytest.raises(ExactUnavailable):
+            tier.query_batch(QUERIES, mode="exact")
+        # recovery restores full coverage
+        assert tier.recover_shard(1)
+        back = tier.query_batch(QUERIES, mode="auto")
+        assert back.coverage == 1.0 and not back.degraded
+
+
+def test_tier_exact_needs_full_wal():
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, retain_wal=False, checkpoint_every=2)
+        for i in range(6):
+            tier.ingest(_stream(100, stream_id=i))
+        with pytest.raises(ExactUnavailable, match="truncated"):
+            tier.query_batch(QUERIES, mode="exact")
+        # auto falls back to the one-pass answer instead
+        res = tier.query_batch(QUERIES, mode="auto")
+        assert res.mode == "approx" and res.coverage == 1.0
+
+
+def test_tier_down_shard_keeps_data_and_catches_up():
+    """Batches routed while a shard is down land in its WAL and are applied
+    at recovery — the tier's answers equal a never-crashed tier's."""
+    batches = [_stream(100, stream_id=i) for i in range(8)]
+    with tempfile.TemporaryDirectory() as d:
+        oracle = _mk_tier(d + "/oracle")
+        tier = _mk_tier(d + "/tier", auto_recover=False)
+        for b in batches[:4]:
+            oracle.ingest(b)
+            tier.ingest(b)
+        tier.kill_shard(2)
+        tier.check_health()
+        for b in batches[4:]:
+            oracle.ingest(b)
+            tier.ingest(b)  # shard 2's share goes to WAL only
+        assert tier.recover_shard(2)
+        got = tier.query_batch(QUERIES, mode="exact")
+        want = oracle.query_batch(QUERIES, mode="exact")
+        np.testing.assert_array_equal(got.estimates, want.estimates)
+
+
+# ---------------------------------------------------------------------------
+# Bounded retry / backoff / failure detection (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_on_virtual_clock():
+    """Two stalls on one apply site: the bounded retry sleeps the exponential
+    backoff on the VIRTUAL clock and the call ultimately succeeds."""
+    sched = FaultSchedule(events=(
+        FaultEvent("shard0.ingest", 1, "stall", 0.2),
+        FaultEvent("shard0.ingest", 2, "stall", 0.2),
+    ))
+    inj = FaultInjector(sched, VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(CFG, TierConfig(n_shards=1, retain_wal=True),
+                         d, faults=inj)
+        keys = _stream(80)
+        tier.ingest(keys)
+        assert tier.membership()[0] == "up"
+        # clock advanced by both stall latencies + both backoff sleeps
+        base, factor = tier.tier.backoff_base_s, tier.tier.backoff_factor
+        assert tier.clock.now() == pytest.approx(
+            0.2 + 0.2 + base + base * factor)
+        assert tier.workers[0].n_observed == len(keys)
+
+
+def test_retry_exhaustion_marks_down_then_recovery_catches_up():
+    stalls = tuple(FaultEvent("shard0.ingest", n, "stall", 0.01)
+                   for n in range(1, 9))
+    inj = FaultInjector(FaultSchedule(events=stalls), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            CFG, TierConfig(n_shards=1, retain_wal=True, auto_recover=False),
+            d, faults=inj)
+        keys = _stream(80)
+        tier.ingest(keys)  # every attempt stalls -> budget exhausted
+        assert tier.membership()[0] == "down"
+        assert any(ev[2] == "down" for ev in tier.events)
+        assert tier.recover_shard(0)  # WAL replay catches the shard up
+        assert tier.workers[0].n_observed == len(keys)
+
+
+def test_heartbeat_miss_limit_declares_down():
+    stalls = tuple(FaultEvent("shard0.heartbeat", n, "stall", 0.01)
+                   for n in range(1, 4))
+    inj = FaultInjector(FaultSchedule(events=stalls), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            CFG, TierConfig(n_shards=1, heartbeat_miss_limit=3,
+                            auto_recover=False), d, faults=inj)
+        tier.ingest(_stream(50))
+        tier.check_health()
+        tier.check_health()
+        assert tier.membership()[0] == "up"  # 2 misses < limit
+        tier.check_health()
+        assert tier.membership()[0] == "down"  # 3rd miss trips the limit
+        tier.check_health()  # clean heartbeat now -> recovered + caught up
+        assert tier.membership()[0] == "up"
+
+
+def test_lost_reply_retry_does_not_double_count():
+    inj = FaultInjector(FaultSchedule(events=(
+        FaultEvent("shard0.ingest", 1, "lost_reply"),)), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        ref = ShardTier(CFG, TierConfig(n_shards=1, retain_wal=True),
+                        d + "/ref")
+        tier = ShardTier(CFG, TierConfig(n_shards=1, retain_wal=True),
+                         d + "/t", faults=inj)
+        keys = _stream(90)
+        ref.ingest(keys)
+        tier.ingest(keys)  # applied, reply lost, retried -> deduped
+        assert tier.workers[0].n_observed == len(keys)
+        got = tier.query_batch(QUERIES, mode="exact")
+        want = ref.query_batch(QUERIES, mode="exact")
+        np.testing.assert_array_equal(got.estimates, want.estimates)
+
+
+# ---------------------------------------------------------------------------
+# merge_many / absorb_many partial-merge surface
+# ---------------------------------------------------------------------------
+
+
+def test_merge_many_matches_sequential_pairwise():
+    """merge_many == the sequential pairwise fold, bit for bit (the fixed-k
+    fold is a left fold by contract), in both modes."""
+    streams = [_stream(150, stream_id=i) for i in range(3)]
+    for mode in ("exact", "approx"):
+        svcs = [StreamStatsService(dataclasses.replace(CFG, host_id=i))
+                for i in range(3)]
+        pair = [StreamStatsService(dataclasses.replace(CFG, host_id=i))
+                for i in range(3)]
+        for i in range(3):
+            svcs[i].observe(streams[i])
+            pair[i].observe(streams[i])
+        many = StreamStatsService(dataclasses.replace(CFG, host_id=9))
+        many.merge_many(svcs, mode=mode)
+        fold = StreamStatsService(dataclasses.replace(CFG, host_id=9))
+        fold.merge(pair[0], mode=mode)
+        fold.merge(pair[1], mode=mode)
+        fold.merge(pair[2], mode=mode)
+        assert _state_equal(many.state_dict(), fold.state_dict())
+        r_many = many.query_batch(QUERIES, exact=False)
+        r_fold = fold.query_batch(QUERIES, exact=False)
+        np.testing.assert_array_equal(r_many.estimates, r_fold.estimates)
+
+
+def test_merge_many_validates_group_host_ids():
+    a = StreamStatsService(dataclasses.replace(CFG, host_id=1))
+    b = StreamStatsService(dataclasses.replace(CFG, host_id=1))
+    dst = StreamStatsService(dataclasses.replace(CFG, host_id=0))
+    a.observe(_stream(40))
+    b.observe(_stream(40, stream_id=1))
+    with pytest.raises(ValueError, match="distinct host_ids"):
+        dst.merge_many([a, b], mode="exact")
+    dst.merge_many([], mode="exact")  # empty group is a no-op
+    assert dst.n_observed == 0
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership
+# ---------------------------------------------------------------------------
+
+
+def test_leave_then_join_bit_identical():
+    batches = [_stream(100, stream_id=i) for i in range(6)]
+    with tempfile.TemporaryDirectory() as d:
+        oracle = _mk_tier(d + "/oracle")
+        tier = _mk_tier(d + "/tier")
+        for b in batches[:3]:
+            oracle.ingest(b)
+            tier.ingest(b)
+        tier.leave_shard(0)
+        assert tier.membership()[0] == "left"
+        with pytest.raises(ValueError):
+            tier.recover_shard(0)  # left slots revive via join only
+        for b in batches[3:]:
+            oracle.ingest(b)
+            tier.ingest(b)
+        assert tier.query_batch(QUERIES).degraded
+        assert tier.join_shard(0)
+        got = tier.query_batch(QUERIES, mode="exact")
+        want = oracle.query_batch(QUERIES, mode="exact")
+        np.testing.assert_array_equal(got.estimates, want.estimates)
+        assert not tier.query_batch(QUERIES).degraded

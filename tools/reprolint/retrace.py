@@ -40,6 +40,14 @@ _EXACTLY_ONCE = (
     "query._dispatch",
 )
 
+# Delta-based entry points that must measure exactly zero regardless of the
+# budget file: shard recovery replays the stream through already-compiled
+# executables, so ``--update-budget`` must never bake in a recompile storm.
+_EXACTLY_ZERO = (
+    "shardtier.steady_new_compiles",
+    "shardtier.recover_replay_new_compiles",
+)
+
 
 def _cache_size(fn) -> int:
     sizer = getattr(fn, "_cache_size", None)
@@ -124,6 +132,57 @@ def _audit_query() -> dict[str, int]:
     return {"query._dispatch": _cache_size(Q._dispatch)}
 
 
+def _audit_shardtier() -> dict[str, int]:
+    """Sharded tier (stats/shardtier.py): DELTA-based compile counts.
+
+    The tier rides the same jit entry points as the single-service plane
+    (the donated chunk updates, the query dispatch), so its budgets are
+    deltas, not absolutes: after a warmup pass, (a) steady-state ingest +
+    query must add ZERO cache entries, and (b) kill + recover of a shard —
+    checkpoint restore plus WAL replay through the ordinary observe path —
+    must also add ZERO.  A nonzero delta means recovery or routing varied a
+    cache key (per-shard shapes, a host scalar in the replay loop) and
+    every crash would pay a recompile storm exactly when latency matters
+    most."""
+    import tempfile
+
+    from repro.core import incremental as inc
+    from repro.stats import query as Q
+    from repro.stats.service import StatsConfig
+    from repro.stats.shardtier import ShardTier, TierConfig
+
+    s = _SMOKE
+    tracked = (inc._update_multi_donated, inc._update_multi_fresh,
+               inc._final_evict_multi, Q._dispatch)
+
+    def snap() -> int:
+        return sum(_cache_size(f) for f in tracked)
+
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            StatsConfig(k=s["k"], ls=(2.0, 8.0), chunk=s["chunk"]),
+            TierConfig(n_shards=2, checkpoint_every=2, retain_wal=True,
+                       auto_recover=False),
+            d)
+        for b in range(s["batches"]):
+            tier.ingest(_keys(s["batch"], b * s["batch"]))
+        tier.query_cap(2.0)
+        warm = snap()
+        tier.ingest(_keys(s["batch"], 99_000))
+        tier.query_cap(2.0)
+        steady_delta = snap() - warm
+
+        pre = snap()
+        tier.kill_shard(0)
+        tier.recover_shard(0)
+        tier.query_cap(2.0)
+        recover_delta = snap() - pre
+    return {
+        "shardtier.steady_new_compiles": steady_delta,
+        "shardtier.recover_replay_new_compiles": recover_delta,
+    }
+
+
 def _audit_chunksort() -> dict[str, int]:
     """Pallas chunk-order sort: one compile per tile config / padded shape.
 
@@ -146,6 +205,7 @@ WORKLOADS: dict[str, Callable[[], dict[str, int]]] = {
     "ingest": _audit_ingest,
     "serve": _audit_serve,
     "query": _audit_query,
+    "shardtier": _audit_shardtier,
     "chunksort": _audit_chunksort,
 }
 
@@ -169,6 +229,13 @@ def main(config: Config, *, update: bool = False, stream=sys.stdout) -> int:
             failures.append(
                 f"{key}: compiled {counts.get(key)}x under the smoke workload "
                 "(steady-state contract is exactly 1 — a cache-key regression)"
+            )
+    for key in _EXACTLY_ZERO:
+        if counts.get(key) != 0:
+            failures.append(
+                f"{key}: {counts.get(key)} new compile(s) under the smoke "
+                "workload (contract is exactly 0 — recovery/steady state "
+                "must reuse existing executables)"
             )
 
     if update:
