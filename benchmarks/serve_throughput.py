@@ -22,7 +22,7 @@ the jitted steady state is what gets measured).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke] [--json PATH]
 
-``--json`` emits BENCH_serve.json (schema_version 3, stamped with backend +
+``--json`` emits BENCH_serve.json (schema_version 4, stamped with backend +
 interpret mode + the reprolint version/retrace budgets the timings were
 taken under).  ``--smoke`` is the CI gate: FAILS unless stacked serving
 measures >= 1.5x the oracle at 64 tenants and the probes are bit-identical.
@@ -35,6 +35,18 @@ recovery time; each cadence leg reports the recovery wall time, how many
 WAL batches it replayed, and whether the recovered shard's answers are
 bit-identical to the pre-kill state (they must be — the smoke gate
 enforces it).
+
+Schema v4 adds the ``merge_cadence`` section (DESIGN.md §14): the
+background exact-merge tier's cadence policy (``merge_every_n_batches``)
+folds shard WALs into a reconciled exact snapshot while approx queries
+keep serving — the curve measures what the cadence trades: per-merge build
+cost and cumulative merge time (pass II replays the WHOLE retained WAL, so
+merges get more expensive as the stream grows) against estimate staleness
+(elements routed since the snapshot watermark, mean/max over the run).
+Each leg pins snapshot-at-watermark answers bit-identical to the exact
+two-pass answers (the snapshot IS an exact answer, just a stale one) and
+reports the end-of-run relative gap between the stale snapshot and a fresh
+exact fold.
 
 Regime note: the stacked win comes from amortizing per-dispatch overhead
 (1 vmapped tick vs T observes; 1 coalesced query dispatch vs T engines), so
@@ -62,7 +74,7 @@ from repro.stats.service import (
 
 from .sampler_throughput import reprolint_stamp
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 # within sqrt(2) of the default (1, 8, 64) lane grid — no grid warnings
 CAPS = (1.0, 8.0, 10.0, 64.0)
 
@@ -263,6 +275,101 @@ def run_recovery(cadences=(1, 4, 16), n_shards=2, n_batches=47, batch=2048,
     }
 
 
+def run_merge_cadence(cadences=(2, 4, 8, 16), n_shards=2, n_batches=35,
+                      batch=1024, k=256, ls=(1.0, 8.0), chunk=512,
+                      verbose=True):
+    """Merge-cadence vs estimate-staleness curve (schema v4).
+
+    For each ``merge_every_n_batches`` cadence: ingest the same
+    deterministic stream through a tier with the background exact-merge
+    enabled, recording per-merge build time (wall — the tier runs on a
+    WallClock injector with an empty schedule) and the element staleness of
+    the serving snapshot after every batch.  Tighter cadences keep
+    snapshot answers fresher but pay pass II more often — and each pass II
+    replays the whole retained WAL, so cumulative merge cost grows
+    superlinearly as the cadence tightens.  Bit-identity at the watermark
+    is pinned per leg: immediately after a refresh the snapshot answers
+    must equal the exact two-pass answers exactly."""
+    import tempfile
+
+    from repro.launch.faults import FaultInjector, WallClock
+    from repro.stats.query import Query
+    from repro.stats.shardtier import ShardTier, TierConfig
+
+    rng = np.random.default_rng(23)
+    stream = [(rng.zipf(1.3, size=batch) % 50_000).astype(np.int64)
+              for _ in range(n_batches)]
+    probes = [Query(freqfns.distinct()), Query(freqfns.cap(8.0))]
+
+    legs = {}
+    for every in cadences:
+        with tempfile.TemporaryDirectory() as d:
+            tier = ShardTier(
+                StatsConfig(k=k, ls=ls, chunk=chunk),
+                TierConfig(n_shards=n_shards, checkpoint_every=8,
+                           retain_wal=True, fsync=False,
+                           merge_every_n_batches=every),
+                d, faults=FaultInjector(clock=WallClock()))
+            merge_s, staleness = [], []
+            watermark_identical = None
+            t0 = time.perf_counter()
+            for b in stream:
+                n_before = tier._n_merges
+                tier.ingest(b)
+                if tier._n_merges > n_before:
+                    merge_s.append(float(tier._snapshot["build_s"]))
+                    if watermark_identical is None:
+                        snap = np.asarray(tier.query_batch(
+                            probes, mode="snapshot").estimates)
+                        exact = np.asarray(tier.query_batch(
+                            probes, mode="exact").estimates)
+                        watermark_identical = bool(
+                            np.array_equal(snap, exact))
+                s = tier.snapshot_staleness()
+                if s is not None:
+                    staleness.append(s)
+            total_s = time.perf_counter() - t0
+            # end-of-run estimate gap: the stale snapshot vs a fresh fold
+            snap_end = np.asarray(tier.query_batch(
+                probes, mode="snapshot").estimates)
+            exact_end = np.asarray(tier.query_batch(
+                probes, mode="exact").estimates)
+            gap = float(np.max(np.abs(snap_end - exact_end)
+                               / np.maximum(np.abs(exact_end), 1e-12)))
+        legs[str(every)] = {
+            "merge_every_n_batches": every,
+            "n_merges": len(merge_s),
+            # the first merge pays the reconcile-path jit compile; the
+            # steady-state mean excludes it (when there is a steady state)
+            "merge_s_first": merge_s[0] if merge_s else None,
+            "merge_s_mean": (float(np.mean(merge_s[1:] or merge_s))
+                             if merge_s else None),
+            "merge_s_total": float(np.sum(merge_s)),
+            "total_s": total_s,
+            "merge_fraction": float(np.sum(merge_s)) / total_s,
+            "staleness_elements_mean": (float(np.mean(staleness))
+                                        if staleness else None),
+            "staleness_elements_max": (int(np.max(staleness))
+                                       if staleness else None),
+            "end_estimate_rel_gap": gap,
+            "bit_identical_at_watermark": watermark_identical,
+        }
+        if verbose:
+            leg = legs[str(every)]
+            print(f"cadence {every:3d}: {leg['n_merges']:2d} merges "
+                  f"({leg['merge_s_total']:6.2f}s total, "
+                  f"{leg['merge_fraction']:5.1%} of run)  staleness "
+                  f"mean {leg['staleness_elements_mean'] or 0:8.0f} "
+                  f"max {leg['staleness_elements_max'] or 0:6d} elems  "
+                  f"end gap {leg['end_estimate_rel_gap']:.3%}  "
+                  f"watermark bit-identical {leg['bit_identical_at_watermark']}")
+    return {
+        "config": {"n_shards": n_shards, "n_batches": n_batches,
+                   "batch": batch, "k": k, "ls": list(ls), "chunk": chunk},
+        "cadences": legs,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -280,11 +387,18 @@ def main():
               "(smoke-sized)")
         recovery = run_recovery(cadences=(1, 4, 16), n_batches=19,
                                 batch=512, k=512, chunk=256)
+        print("\n[merge-cadence] background exact-merge cadence vs "
+              "staleness (smoke-sized)")
+        merge_cadence = run_merge_cadence(cadences=(2, 8), n_batches=19,
+                                          batch=256, k=128, chunk=128)
     else:
         res = run(T=args.tenants or 64)
         print("\n[recovery] shard time-to-recover vs checkpoint cadence "
               "(k=4096)")
         recovery = run_recovery()
+        print("\n[merge-cadence] background exact-merge cadence vs "
+              "staleness")
+        merge_cadence = run_merge_cadence()
 
     record = {
         "bench": "serve_throughput",
@@ -293,6 +407,7 @@ def main():
         "capscore_interpret": bool(default_interpret()),
         "reprolint": reprolint_stamp(),
         "recovery": recovery,
+        "merge_cadence": merge_cadence,
         **res,
     }
     with open(args.json, "w") as f:
@@ -312,6 +427,16 @@ def main():
             if not leg["bit_identical"]:
                 failed.append(f"recovery at cadence {every} changed the "
                               "shard's answers (bit-identity violated)")
+        for every, leg in merge_cadence["cadences"].items():
+            if leg["bit_identical_at_watermark"] is not True:
+                failed.append(f"merge cadence {every}: snapshot answers at "
+                              "the watermark are not bit-identical to the "
+                              "exact two-pass answers")
+            if leg["staleness_elements_max"] is not None and \
+                    leg["staleness_elements_max"] >= int(every) * \
+                    merge_cadence["config"]["batch"]:
+                failed.append(f"merge cadence {every}: staleness exceeded "
+                              "one full cadence period")
         if failed:
             print("PERF GATE FAILED: " + "; ".join(failed), file=sys.stderr)
             sys.exit(1)

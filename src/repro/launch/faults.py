@@ -12,8 +12,13 @@ in a context-managed hook::
         worker.apply(seq, keys, weights)
 
 and the injector fires an event when that site's invocation counter matches
-an event's ``call_no``.  Four fault kinds model the distributed-systems
-failure menagerie on an in-process tier:
+an event's ``call_no``.  The same schedules drive two backends: the
+in-process tier (stats.shardtier) receives faults as exceptions from
+``site()``, and the out-of-process tier (stats.procshard) consumes events
+through ``poll()`` and realizes them against REAL worker subprocesses —
+``crash`` becomes an actual ``SIGKILL``, ``partition`` severs the actual
+socket.  Four fault kinds model the distributed-systems failure menagerie
+(process mode adds a fifth, ``partition``, via ``PROC_KINDS``):
 
 * ``crash``      — the callee dies before doing any work (the worker drops
   its in-memory state; recovery = checkpoint restore + WAL replay);
@@ -56,6 +61,13 @@ SITES = (
 
 KINDS = ("crash", "stall", "slow", "lost_reply")
 
+# Process-mode schedules (stats.procshard) additionally draw ``partition``:
+# the coordinator's connection to a live worker drops — the process keeps
+# running and keeps its state, but every call fails until a reconnect.
+# Kept OUT of KINDS so existing seeds map to the same schedules they always
+# did (generate() indexes kinds by hash % len(kinds)).
+PROC_KINDS = KINDS + ("partition",)
+
 
 class FaultError(RuntimeError):
     """Base of all injected faults; carries the site it fired at."""
@@ -77,6 +89,19 @@ class InjectedLostReply(FaultError):
     """The operation ran but the reply was dropped on the wire."""
 
 
+class InjectedPartition(FaultError):
+    """The network path to a LIVE callee dropped: the operation did not run
+    (process-mode backends sever the real connection; callers must treat it
+    like a stall — retriable — and reconnect)."""
+
+
+class Unreachable(RuntimeError):
+    """A real transport failure (socket timeout, refused connect) to a
+    worker whose process may still be alive.  NOT an injected fault — this
+    is what genuine process-mode flakiness surfaces as.  Callers retry it
+    exactly like a stall; only process death maps to ShardDown."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     """One scheduled fault: fire ``kind`` on the ``call_no``-th invocation
@@ -89,8 +114,9 @@ class FaultEvent:
     param: float = 0.0
 
     def __post_init__(self):
-        if self.kind not in KINDS:
-            raise ValueError(f"unknown fault kind {self.kind!r} (one of {KINDS})")
+        if self.kind not in PROC_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (one of {PROC_KINDS})")
         if self.call_no < 1:
             raise ValueError("call_no is 1-based")
 
@@ -204,19 +230,35 @@ class FaultInjector:
         self.counts[site] = n
         return self._by_key.get((site, n))
 
+    def poll(self, site: str) -> FaultEvent | None:
+        """Advance ``site``'s invocation counter and return the event
+        scheduled for this call (recording it in ``fired``), or None.
+
+        This is the raw hook for backends that must ACT on an event rather
+        than receive it as an exception — the process-mode backend
+        (stats.procshard) turns ``crash`` into a real SIGKILL and
+        ``partition`` into severing a real socket, which no in-process
+        raise can express."""
+        ev = self._next(site)
+        if ev is not None:
+            self.fired.append(ev)
+        return ev
+
     @contextlib.contextmanager
     def site(self, name: str):
         """Wrap one failure-prone operation.  May raise InjectedCrash /
-        InjectedStall *instead of* running the body, advance the clock and
-        run it (slow), or run it and then raise InjectedLostReply."""
-        ev = self._next(name)
+        InjectedStall / InjectedPartition *instead of* running the body,
+        advance the clock and run it (slow), or run it and then raise
+        InjectedLostReply."""
+        ev = self.poll(name)
         if ev is not None:
-            self.fired.append(ev)
             if ev.kind == "crash":
                 raise InjectedCrash(name)
             if ev.kind == "stall":
                 self.clock.advance(ev.param)
                 raise InjectedStall(name, f"stalled {ev.param:g}s")
+            if ev.kind == "partition":
+                raise InjectedPartition(name)
             if ev.kind == "slow":
                 self.clock.advance(ev.param)
         yield

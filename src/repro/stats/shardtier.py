@@ -54,7 +54,11 @@ see DESIGN.md §13 for the fault model and the injection-site registry.
 from __future__ import annotations
 
 import dataclasses
+import io
+import logging
 import os
+import struct
+import zlib
 from pathlib import Path
 
 import numpy as np
@@ -66,11 +70,16 @@ from ..launch.faults import (
     FaultInjector,
     InjectedCrash,
     InjectedLostReply,
+    InjectedPartition,
     InjectedStall,
+    Unreachable,
     VirtualClock,
 )
+
 from .query import BatchResult, Query
 from .service import StatsConfig, StreamStatsService
+
+log = logging.getLogger(__name__)
 
 # routing salt: distinct from every sampling salt so the shard partition is
 # independent of the sample (a key's shard must not correlate with its
@@ -132,18 +141,43 @@ class ExactUnavailable(RuntimeError):
 # ---------------------------------------------------------------------------
 
 
+class WALCorrupt(ValueError):
+    """A WAL segment's bytes fail integrity verification (short file,
+    missing trailer, or CRC mismatch)."""
+
+
+# Segment trailer: written AFTER the payload so a truncated/torn file can
+# never carry a valid trailer — magic + crc32(payload) + payload length.
+_WAL_TRAILER_MAGIC = b"WSG1"
+_WAL_TRAILER = struct.Struct("<4sIQ")
+
+
 class ShardWAL:
     """Per-shard durable log of routed batches, one ``wal_<seq>.npz`` per
     sequence number (1-based, contiguous).  Segments commit with the same
     fsync discipline as checkpoints (checkpoint.manager.fsync_file/_dir):
     write tmp, fsync data, rename, fsync directory — a host crash never
     surfaces a torn segment, and ``entries`` only ever sees committed ones.
+
+    Integrity: every segment carries a CRC32 trailer over its ``.npz``
+    payload (magic + crc + length, written after the payload — a torn tail
+    cannot end in a valid trailer).  Replay verifies each segment; a
+    corrupt segment in the MIDDLE of the log is unrecoverable data loss and
+    raises.  A corrupt TAIL segment — the one case fs reordering or torn
+    disk writes can plausibly produce — is tolerated: ``entries`` repairs
+    it from the in-memory WAL-first buffer (the coordinator appended the
+    batch moments ago and still holds it) or, if this process never wrote
+    it, drops the segment with a logged warning so ``recover()`` completes
+    on the verified prefix instead of crashing.
     """
 
     def __init__(self, dirpath, *, fsync: bool = True):
         self.dir = Path(dirpath)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.fsync = fsync
+        # WAL-first buffer: the most recent append, kept in memory until
+        # superseded — the repair source for a torn tail segment.
+        self._last: tuple[int, np.ndarray, np.ndarray] | None = None
 
     def _path(self, seq: int) -> Path:
         return self.dir / f"wal_{seq:08d}.npz"
@@ -151,16 +185,42 @@ class ShardWAL:
     def append(self, seq: int, keys, weights) -> None:
         if seq < 1:
             raise ValueError("WAL sequence numbers are 1-based")
+        keys = np.asarray(keys, np.int32)
+        weights = np.asarray(weights, np.float32)
         path = self._path(seq)
         tmp = path.with_suffix(".npz.tmp")
-        with open(tmp, "wb") as f:  # explicit handle: np.savez must not
-            np.savez(f, keys=np.asarray(keys, np.int32),  # append ".npz"
-                     weights=np.asarray(weights, np.float32))
+        buf = io.BytesIO()
+        np.savez(buf, keys=keys, weights=weights)
+        payload = buf.getvalue()
+        trailer = _WAL_TRAILER.pack(_WAL_TRAILER_MAGIC,
+                                    zlib.crc32(payload), len(payload))
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.write(trailer)
         if self.fsync:
             ckpt_manager.fsync_file(tmp)
         os.replace(tmp, path)
         if self.fsync:
             ckpt_manager.fsync_dir(self.dir)
+        self._last = (seq, keys, weights)
+
+    def read_segment(self, seq: int) -> tuple[np.ndarray, np.ndarray]:
+        """Read and VERIFY one committed segment; raises WALCorrupt if the
+        bytes fail the trailer/CRC check."""
+        raw = self._path(seq).read_bytes()
+        if len(raw) < _WAL_TRAILER.size:
+            raise WALCorrupt(f"WAL seq {seq}: {len(raw)} bytes, shorter "
+                             "than the integrity trailer")
+        magic, crc, length = _WAL_TRAILER.unpack(raw[-_WAL_TRAILER.size:])
+        payload = raw[:-_WAL_TRAILER.size]
+        if magic != _WAL_TRAILER_MAGIC or length != len(payload):
+            raise WALCorrupt(f"WAL seq {seq}: torn segment (bad trailer; "
+                             f"payload {len(payload)} bytes, trailer "
+                             f"claims {length})")
+        if zlib.crc32(payload) != crc:
+            raise WALCorrupt(f"WAL seq {seq}: CRC32 mismatch")
+        with np.load(io.BytesIO(payload)) as d:
+            return d["keys"], d["weights"]
 
     def seqs(self) -> list[int]:
         return sorted(int(p.name[4:12]) for p in self.dir.glob("wal_*.npz"))
@@ -169,12 +229,50 @@ class ShardWAL:
         s = self.seqs()
         return s[-1] if s else 0
 
+    def check_tail(self) -> int:
+        """Verify the last segment, repairing/dropping a torn tail (see
+        ``entries``).  Returns the last VALID sequence number (0 when
+        empty).  The process-mode supervisor runs this coordinator-side —
+        where the WAL-first buffer lives — before asking a remote worker
+        (whose ShardWAL instance has no buffer) to replay the log."""
+        seqs = self.seqs()
+        if not seqs:
+            return 0
+        tail = seqs[-1]
+        try:
+            self.read_segment(tail)
+            return tail
+        except WALCorrupt as e:
+            if not self._repair_tail(tail, e):
+                return tail - 1
+            return tail
+
+    def _repair_tail(self, seq: int, err: WALCorrupt) -> bool:
+        """Torn tail handling: rewrite from the WAL-first buffer when this
+        process still holds the batch, else drop the segment (logged)."""
+        if self._last is not None and self._last[0] == seq:
+            log.warning("%s: %s — repaired from the WAL-first buffer",
+                        self.dir, err)
+            self.append(seq, self._last[1], self._last[2])
+            return True
+        log.warning("%s: %s — dropped torn tail segment (no WAL-first "
+                    "buffer in this process; replay stops at seq %d)",
+                    self.dir, err, seq - 1)
+        self._path(seq).unlink()
+        if self.fsync:
+            ckpt_manager.fsync_dir(self.dir)
+        return False
+
     def entries(self, after: int = 0):
-        """Yield committed ``(seq, keys, weights)`` with seq > ``after`` in
-        sequence order, verifying contiguity — a gap means the log was
-        truncated past ``after`` and replay from there would drop batches."""
+        """Yield committed, VERIFIED ``(seq, keys, weights)`` with seq >
+        ``after`` in sequence order, verifying contiguity — a gap means the
+        log was truncated past ``after`` and replay from there would drop
+        batches.  A corrupt tail segment is repaired from the WAL-first
+        buffer or dropped (replay ends one batch early, logged); a corrupt
+        interior segment raises WALCorrupt."""
         expect = after
-        for seq in self.seqs():
+        seqs = self.seqs()
+        for seq in seqs:
             if seq <= after:
                 continue
             expect += 1
@@ -182,8 +280,18 @@ class ShardWAL:
                 raise ValueError(
                     f"WAL gap: expected seq {expect}, found {seq} — the log "
                     f"was truncated past the requested replay point {after}")
-            with np.load(self._path(seq)) as d:
-                yield seq, d["keys"], d["weights"]
+            try:
+                keys, weights = self.read_segment(seq)
+            except WALCorrupt as e:
+                if seq != seqs[-1]:
+                    raise WALCorrupt(
+                        f"{e} — segment is INTERIOR (last is {seqs[-1]}): "
+                        "replaying past it would silently drop a batch"
+                    ) from None
+                if not self._repair_tail(seq, e):
+                    return
+                keys, weights = self.read_segment(seq)
+            yield seq, keys, weights
 
     def truncate_through(self, seq: int) -> None:
         """Drop segments <= ``seq`` (their batches are inside a committed
@@ -336,6 +444,18 @@ class ShardWorker:
         self._check_alive()
         return self.service.n_observed
 
+    def runtime_status(self) -> dict:
+        """Coordinator-visible worker facts for the status plane.  NOT an
+        RPC (no injection site): the coordinator reads its own bookkeeping
+        mirror of the worker, so a down shard still reports.  The process-
+        mode supervisor overrides this to add pid/restart facts."""
+        return {
+            "alive": self.alive,
+            "applied_seq": self.applied_seq,
+            "last_checkpoint_seq": self._last_ckpt_seq,
+            "wal_depth": len(self.wal.seqs()),
+        }
+
 
 class _SiteGuard:
     """``with worker._guarded(op):`` — liveness check + injection site +
@@ -398,6 +518,14 @@ class TierConfig:
     auto_recover: bool = True
     route_salt: int = SALT_ROUTE
     fsync: bool = True
+    # Background exact-merge cadence (DESIGN.md §14): every N ingested
+    # batches and/or every S (clock) seconds, fold the shard WALs into a
+    # reconciled exact snapshot (merge_many(mode="exact") + full pass II)
+    # served by query mode="snapshot" — exact as of its watermark, stamped
+    # with element staleness — while approx queries keep serving from the
+    # live sketches.  Requires retain_wal.  None disables the cadence.
+    merge_every_n_batches: int | None = None
+    merge_every_s: float | None = None
 
 
 class ShardTier:
@@ -435,20 +563,33 @@ class ShardTier:
         self._faults = faults if faults is not None else FaultInjector()
         self.clock = self._faults.clock
         n = self.tier.n_shards
-        self.workers = [
-            ShardWorker(s, config, self.root,
-                        checkpoint_every=self.tier.checkpoint_every,
-                        retain_wal=self.tier.retain_wal,
-                        faults=self._faults, fsync=self.tier.fsync)
-            for s in range(n)
-        ]
-        self.status = ["up"] * n          # "up" | "down" | "left"
+        if (self.tier.merge_every_n_batches or
+                self.tier.merge_every_s is not None) and not self.tier.retain_wal:
+            raise ValueError(
+                "the background exact-merge cadence replays full WALs; set "
+                "TierConfig.retain_wal=True with merge_every_*")
+        self.workers = [self._make_worker(s) for s in range(n)]
+        self.slots = ["up"] * n           # "up" | "down" | "left"
         self._next_seq = [1] * n          # next WAL sequence per shard
         self._routed = [0] * n            # elements routed per shard (truth)
         self._miss = [0] * n              # consecutive heartbeat misses
         self._version = 0                 # bumped on any state change
         self._merged_cache: dict = {}     # (mode, shards, version) -> service
         self.events: list[tuple[float, int, str, str]] = []  # observability
+        # background exact-merge snapshot (None until the first refresh)
+        self._snapshot: dict | None = None
+        self._batches_since_merge = 0
+        self._last_merge_t = self.clock.now()
+        self._n_merges = 0
+        self._n_merges_skipped = 0
+
+    def _make_worker(self, s: int):
+        """Worker factory — the ONE point subclasses override to swap the
+        in-process ShardWorker for a real-subprocess client (procshard)."""
+        return ShardWorker(s, self.base_config, self.root,
+                           checkpoint_every=self.tier.checkpoint_every,
+                           retain_wal=self.tier.retain_wal,
+                           faults=self._faults, fsync=self.tier.fsync)
 
     # -- bookkeeping -------------------------------------------------------
 
@@ -460,10 +601,10 @@ class ShardTier:
         self.events.append((self.clock.now(), shard, event, detail))
 
     def membership(self) -> dict[int, str]:
-        return {s: self.status[s] for s in range(self.tier.n_shards)}
+        return {s: self.slots[s] for s in range(self.tier.n_shards)}
 
     def live_shards(self) -> list[int]:
-        return [s for s in range(self.tier.n_shards) if self.status[s] == "up"]
+        return [s for s in range(self.tier.n_shards) if self.slots[s] == "up"]
 
     @property
     def n_observed(self) -> int:
@@ -472,23 +613,35 @@ class ShardTier:
 
     # -- bounded retry -----------------------------------------------------
 
+    # Faults that are worth retrying: the callee may be alive and the
+    # operation idempotent.  Partition (process mode: connection severed)
+    # and Unreachable (real socket timeout) behave exactly like a stall.
+    _RETRIABLE = (InjectedStall, InjectedLostReply, InjectedPartition,
+                  Unreachable)
+
     def _call(self, s: int, desc: str, fn):
         """Run one shard call under bounded retry with exponential backoff
         and a deadline.  Crash -> immediate down (retrying a dead process
-        is pointless); stall/lost-reply -> retry (apply is idempotent, so a
-        lost reply retried is an ack-only no-op); budget exhausted -> down.
-        Returns ``(ok, value)``."""
+        is pointless); stall/lost-reply/partition/unreachable -> retry
+        (apply is idempotent, so a lost reply retried is an ack-only
+        no-op); budget exhausted -> down.  Returns ``(ok, value)``.
+
+        A SUCCESSFUL call resets the shard's heartbeat miss counter: any
+        completed operation proves liveness, so a shard that is slow on
+        heartbeats but still applying batches is never flapped to dead by
+        heartbeat misses alone (the flap regression in
+        tests/test_shardtier.py pins this)."""
         cfg = self.tier
         delay = cfg.backoff_base_s
         deadline = self.clock.now() + cfg.call_deadline_s
         attempt = 0
         while True:
             try:
-                return True, fn()
+                out = fn()
             except ShardDown as e:
                 self._mark_down(s, f"{desc}: {e}")
                 return False, None
-            except (InjectedStall, InjectedLostReply) as e:
+            except self._RETRIABLE as e:
                 attempt += 1
                 if attempt > cfg.max_retries or self.clock.now() + delay > deadline:
                     self._mark_down(
@@ -497,11 +650,14 @@ class ShardTier:
                     return False, None
                 self.clock.sleep(delay)
                 delay *= cfg.backoff_factor
+            else:
+                self._miss[s] = 0
+                return True, out
 
     def _mark_down(self, s: int, reason: str) -> None:
-        if self.status[s] == "down":
+        if self.slots[s] == "down":
             return
-        self.status[s] = "down"
+        self.slots[s] = "down"
         self._miss[s] = 0
         self._bump()
         self._log_event(s, "down", reason)
@@ -522,17 +678,17 @@ class ShardTier:
         ``_mark_down`` is a no-op on an already-down shard, so without the
         retry here a crash-during-recover would wedge the slot forever."""
         for s in range(self.tier.n_shards):
-            if self.status[s] == "left":
+            if self.slots[s] == "left":
                 continue
             try:
                 self.workers[s].heartbeat()
             except ShardDown as e:
-                was_down = self.status[s] == "down"
+                was_down = self.slots[s] == "down"
                 self._mark_down(s, f"heartbeat: {e}")
                 if was_down and self.tier.auto_recover:
                     self.recover_shard(s)
                 continue
-            except (InjectedStall, InjectedLostReply) as e:
+            except self._RETRIABLE as e:
                 self._miss[s] += 1
                 self._log_event(s, "miss",
                                 f"{self._miss[s]}/{self.tier.heartbeat_miss_limit}"
@@ -541,7 +697,7 @@ class ShardTier:
                     self._mark_down(s, "heartbeat miss limit")
                 continue
             self._miss[s] = 0
-            if self.status[s] == "down":
+            if self.slots[s] == "down":
                 self.recover_shard(s)
         return self.membership()
 
@@ -551,7 +707,7 @@ class ShardTier:
         """Restart shard ``s`` from its durable state (checkpoint restore +
         WAL replay).  On success the shard is up AND caught up with every
         batch routed to it, including ones routed while it was down."""
-        if self.status[s] == "left":
+        if self.slots[s] == "left":
             raise ValueError(f"shard {s} left the tier; use join_shard")
         self._bump()
         t0 = self.clock.now()
@@ -559,15 +715,15 @@ class ShardTier:
             applied = self.workers[s].recover()
         except ShardDown:
             self._log_event(s, "recover_failed", "crashed during recovery")
-            self.status[s] = "down"
+            self.slots[s] = "down"
             return False
-        except (InjectedStall, InjectedLostReply) as e:
+        except self._RETRIABLE as e:
             # a lost recovery reply may leave the worker healthy; the next
             # health round's heartbeat brings the slot back
             self._log_event(s, "recover_failed", type(e).__name__)
-            self.status[s] = "down"
+            self.slots[s] = "down"
             return False
-        self.status[s] = "up"
+        self.slots[s] = "up"
         self._miss[s] = 0
         self._log_event(s, "recovered",
                         f"applied through seq {applied} "
@@ -598,12 +754,125 @@ class ShardTier:
             self._next_seq[s] = seq + 1
             self._routed[s] += len(pk)
             routed[s] = len(pk)
-            if self.status[s] != "up":
+            if self.slots[s] != "up":
                 continue  # replayed at recovery
             self._call(s, f"apply seq {seq}",
                        lambda w=self.workers[s], q=seq, a=pk, b=pw:
                        w.apply(q, a, b))
+        self._batches_since_merge += 1
+        self._maybe_refresh_snapshot()
         return routed
+
+    # -- background exact-merge snapshot -----------------------------------
+
+    def _merge_due(self) -> bool:
+        cfg = self.tier
+        if (cfg.merge_every_n_batches
+                and self._batches_since_merge >= cfg.merge_every_n_batches):
+            return True
+        if (cfg.merge_every_s is not None
+                and self.clock.now() - self._last_merge_t >= cfg.merge_every_s):
+            return True
+        return False
+
+    def _maybe_refresh_snapshot(self) -> bool:
+        """Cadence hook (end of every ingest): refresh the exact snapshot
+        when the configured cadence has elapsed.  A refresh that cannot run
+        right now (shard down, WAL truncated) is SKIPPED, not fatal —
+        approx queries keep serving and the cadence retries next batch."""
+        if not self._merge_due():
+            return False
+        return self.refresh_snapshot()
+
+    def refresh_snapshot(self) -> bool:
+        """Fold every shard's WAL into a reconciled exact snapshot NOW.
+
+        The snapshot is a frozen scratch service answering ``mode=
+        "snapshot"`` queries — exact as of its watermark (every element
+        routed before the fold), stamped with how many elements arrived
+        since.  Returns False (and logs a ``merge_skipped`` event) when
+        exact state is unreachable; the live approx path is unaffected."""
+        t0 = self.clock.now()
+        try:
+            scratch = self._merged_exact()
+        except ExactUnavailable as e:
+            self._n_merges_skipped += 1
+            self._log_event(-1, "merge_skipped", str(e))
+            return False
+        self._snapshot = {
+            "service": scratch,
+            "watermark_elements": self.n_observed,
+            "watermark_seqs": tuple(q - 1 for q in self._next_seq),
+            "built_at": self.clock.now(),
+            "build_s": self.clock.now() - t0,
+        }
+        self._n_merges += 1
+        self._batches_since_merge = 0
+        self._last_merge_t = self.clock.now()
+        self._log_event(-1, "merged",
+                        f"exact snapshot at {self.n_observed} elements "
+                        f"in {self._snapshot['build_s']:g}s")
+        return True
+
+    def snapshot_staleness(self) -> int | None:
+        """Elements routed since the current exact snapshot's watermark
+        (None when no snapshot exists yet) — the estimate-staleness the
+        merge cadence trades against merge cost (BENCH_serve.json v4)."""
+        if self._snapshot is None:
+            return None
+        return self.n_observed - self._snapshot["watermark_elements"]
+
+    # -- status plane ------------------------------------------------------
+
+    def status(self, *, events_tail: int = 32) -> dict:
+        """Flexlb-style load/status plane: one JSON-serializable dict the
+        serving layer can poll/scrape without touching any worker RPC —
+        everything here is coordinator bookkeeping plus each worker's
+        ``runtime_status`` mirror, so a wedged shard cannot wedge status.
+
+        Shape::
+
+            {"shards": {i: {state, load, share, heartbeat_misses,
+                            alive, applied_seq, last_checkpoint_seq,
+                            wal_depth, ...proc facts...}},
+             "coverage": float,       # routed-element fraction on up shards
+             "n_observed": int, "membership": {...},
+             "snapshot": {...} | None,  # exact-merge tier watermark/cadence
+             "events": [[t, shard, event, detail], ...]}  # most recent
+        """
+        total = sum(self._routed)
+        shards: dict[int, dict] = {}
+        covered = 0
+        for s in range(self.tier.n_shards):
+            st = {
+                "state": self.slots[s],
+                "load": self._routed[s],
+                "share": (self._routed[s] / total) if total else 0.0,
+                "heartbeat_misses": self._miss[s],
+            }
+            st.update(self.workers[s].runtime_status())
+            shards[s] = st
+            if self.slots[s] == "up":
+                covered += self._routed[s]
+        snap = None
+        if self._snapshot is not None:
+            snap = {
+                "watermark_elements": self._snapshot["watermark_elements"],
+                "staleness_elements": self.snapshot_staleness(),
+                "built_at": self._snapshot["built_at"],
+                "build_s": self._snapshot["build_s"],
+            }
+        return {
+            "shards": shards,
+            "coverage": (covered / total) if total else 1.0,
+            "n_observed": total,
+            "membership": self.membership(),
+            "snapshot": snap,
+            "merges": {"done": self._n_merges,
+                       "skipped": self._n_merges_skipped,
+                       "batches_since": self._batches_since_merge},
+            "events": [list(e) for e in self.events[-events_tail:]],
+        }
 
     # -- queries -----------------------------------------------------------
 
@@ -614,7 +883,7 @@ class ShardTier:
         for s in list(self.live_shards()):
             ok, svc = self._call(s, "query view",
                                  lambda w=self.workers[s]: w.service_view())
-            if ok and self.status[s] == "up":
+            if ok and self.slots[s] == "up":
                 views.append((s, svc))
         return views
 
@@ -640,7 +909,7 @@ class ShardTier:
         """Full two-pass: exact merge of every shard's lossless summaries,
         then pass II replays each complete WAL through ``reconcile``."""
         n = self.tier.n_shards
-        not_up = [s for s in range(n) if self.status[s] != "up"]
+        not_up = [s for s in range(n) if self.slots[s] != "up"]
         if not_up:
             raise ExactUnavailable(
                 f"shards {not_up} are not up — pass II cannot reach the "
@@ -704,9 +973,26 @@ class ShardTier:
         Raises ExactUnavailable otherwise.
 
         mode="auto": exact when available, degraded approx fallback.
+
+        mode="snapshot": serve from the background exact-merge snapshot —
+        exact as of its watermark, stamped with ``staleness_elements`` =
+        elements routed since (coverage 1.0, not degraded: the answer is
+        exact over everything it claims to cover).  Raises ExactUnavailable
+        before the first snapshot exists.
         """
-        if mode not in ("approx", "exact", "auto"):
+        if mode not in ("approx", "exact", "auto", "snapshot"):
             raise ValueError(f"unknown tier query mode {mode!r}")
+        if mode == "snapshot":
+            snap = self._snapshot
+            if snap is None:
+                raise ExactUnavailable(
+                    "no exact snapshot yet — set a merge cadence "
+                    "(TierConfig.merge_every_*) or call refresh_snapshot()")
+            res = snap["service"].query_batch(queries, exact=True)
+            return self._stamp(
+                res, coverage=1.0,
+                stale=self.n_observed - snap["watermark_elements"],
+                degraded=False, mode="snapshot")
         if mode in ("exact", "auto"):
             try:
                 scratch = self._merged_exact()
@@ -746,15 +1032,15 @@ class ShardTier:
         The slot's WAL keeps accumulating (its keys still route to it), so
         a later ``join_shard`` catches the replacement up losslessly.
         Returns the slot's durable state directory (the handoff blob)."""
-        if self.status[s] != "up":
-            raise ValueError(f"shard {s} is {self.status[s]}; cannot leave")
+        if self.slots[s] != "up":
+            raise ValueError(f"shard {s} is {self.slots[s]}; cannot leave")
         ok, _ = self._call(s, "leave checkpoint",
                            lambda w=self.workers[s]: w.checkpoint())
         if not ok:
             raise RuntimeError(
                 f"shard {s} failed its final checkpoint; recover it first")
         self.workers[s].crash()  # release in-memory state
-        self.status[s] = "left"
+        self.slots[s] = "left"
         self._bump()
         self._log_event(s, "left", "graceful decommission")
         return self.workers[s].root
@@ -762,16 +1048,12 @@ class ShardTier:
     def join_shard(self, s: int) -> bool:
         """Revive slot ``s`` as a fresh worker (a new process) from the
         slot's durable state: checkpoint restore + WAL tail replay."""
-        if self.status[s] != "left":
-            raise ValueError(f"shard {s} is {self.status[s]}; join revives "
+        if self.slots[s] != "left":
+            raise ValueError(f"shard {s} is {self.slots[s]}; join revives "
                              "decommissioned slots (use recover_shard for "
                              "crashed ones)")
-        self.workers[s] = ShardWorker(
-            s, self.base_config, self.root,
-            checkpoint_every=self.tier.checkpoint_every,
-            retain_wal=self.tier.retain_wal,
-            faults=self._faults, fsync=self.tier.fsync)
-        self.status[s] = "down"  # recover_shard flips to up on success
+        self.workers[s] = self._make_worker(s)
+        self.slots[s] = "down"  # recover_shard flips to up on success
         self._bump()
         self._log_event(s, "joining", "fresh worker over durable slot state")
         return self.recover_shard(s)

@@ -410,3 +410,296 @@ def test_leave_then_join_bit_identical():
         want = oracle.query_batch(QUERIES, mode="exact")
         np.testing.assert_array_equal(got.estimates, want.estimates)
         assert not tier.query_batch(QUERIES).degraded
+
+
+# ---------------------------------------------------------------------------
+# WAL integrity: CRC32 trailers + torn-tail tolerance
+# ---------------------------------------------------------------------------
+
+
+def _truncate_half(path):
+    """Interposition: simulate a torn write by keeping half the bytes."""
+    raw = path.read_bytes()
+    path.write_bytes(raw[:len(raw) // 2])
+
+
+def test_wal_crc_detects_corruption():
+    from repro.stats.shardtier import WALCorrupt
+    with tempfile.TemporaryDirectory() as d:
+        wal = ShardWAL(d)
+        wal.append(1, np.arange(8, dtype=np.int32),
+                   np.ones(8, np.float32))
+        p = wal._path(1)
+        raw = bytearray(p.read_bytes())
+        raw[10] ^= 0xFF  # flip one payload byte: CRC must catch it
+        p.write_bytes(bytes(raw))
+        with pytest.raises(WALCorrupt):
+            wal.read_segment(1)
+
+
+def test_wal_torn_tail_repaired_from_wal_first_buffer():
+    with tempfile.TemporaryDirectory() as d:
+        wal = ShardWAL(d)
+        for seq in (1, 2, 3):
+            wal.append(seq, np.full(4, seq, np.int32),
+                       np.full(4, float(seq), np.float32))
+        _truncate_half(wal._path(3))
+        # same instance still holds batch 3 in the WAL-first buffer:
+        # replay repairs the segment and yields the full log
+        got = list(wal.entries())
+        assert [s for s, _, _ in got] == [1, 2, 3]
+        keys3, _ = wal.read_segment(3)  # rewritten, verifies clean
+        np.testing.assert_array_equal(keys3, np.full(4, 3, np.int32))
+
+
+def test_wal_torn_tail_dropped_without_buffer():
+    with tempfile.TemporaryDirectory() as d:
+        ShardWAL(d).append(1, np.ones(4, np.int32), np.ones(4, np.float32))
+        wal = ShardWAL(d)  # fresh instance: no WAL-first buffer
+        wal.append(2, np.full(4, 2, np.int32), np.full(4, 2.0, np.float32))
+        wal2 = ShardWAL(d)
+        _truncate_half(wal2._path(2))
+        assert wal2.check_tail() == 1  # dropped, replay ends one early
+        assert [s for s, _, _ in wal2.entries()] == [1]
+        assert wal2.seqs() == [1]  # the torn file is gone
+
+
+def test_wal_interior_corruption_raises():
+    from repro.stats.shardtier import WALCorrupt
+    with tempfile.TemporaryDirectory() as d:
+        wal = ShardWAL(d)
+        for seq in (1, 2, 3):
+            wal.append(seq, np.full(4, seq, np.int32),
+                       np.full(4, float(seq), np.float32))
+        _truncate_half(wal._path(2))
+        with pytest.raises(WALCorrupt):  # interior loss is NOT tolerable
+            list(wal.entries())
+
+
+def test_torn_tail_recovery_bit_identity():
+    """The satellite's interposition contract: a half-written tail segment
+    plus a crash must recover bit-identical — the coordinator's WAL-first
+    buffer re-ingests the torn batch."""
+    batches = [_stream(100, stream_id=i) for i in range(5)]
+    with tempfile.TemporaryDirectory() as d:
+        oracle = _mk_tier(d + "/oracle")
+        tier = _mk_tier(d + "/tier")
+        for b in batches:
+            oracle.ingest(b)
+            tier.ingest(b)
+        s = 1
+        wal = tier.workers[s].wal
+        _truncate_half(wal._path(wal.last_seq()))  # torn mid-write
+        tier.kill_shard(s)
+        tier.check_health()  # declares down + auto-recovers through the WAL
+        assert tier.membership()[s] == "up"
+        got = tier.query_batch(QUERIES, mode="exact")
+        want = oracle.query_batch(QUERIES, mode="exact")
+        np.testing.assert_array_equal(got.estimates, want.estimates)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat flap: slow-but-alive shards must not be declared dead
+# ---------------------------------------------------------------------------
+
+
+def test_slow_but_alive_shard_never_flapped_dead():
+    """Regression (PR 10): under sustained heartbeat stalls, a shard that
+    keeps APPLYING successfully proves liveness — any successful call resets
+    the miss counter, so misses never accumulate to the limit across health
+    rounds separated by working ingest."""
+    stalls = tuple(FaultEvent("shard0.heartbeat", n, "stall", 0.01)
+                   for n in range(1, 7))
+    inj = FaultInjector(FaultSchedule(events=stalls), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            CFG, TierConfig(n_shards=1, heartbeat_miss_limit=3,
+                            auto_recover=False), d, faults=inj)
+        for i in range(6):
+            tier.check_health()   # stalled heartbeat: one miss
+            tier.ingest(_stream(50, stream_id=i))  # successful apply: reset
+            assert tier.membership()[0] == "up"
+        assert not any(e[2] == "down" for e in tier.events)
+        # sanity: the schedule really fired all six stalls
+        assert len(inj.fired) == 6
+
+
+def test_slow_heartbeats_reset_miss_counter():
+    """A shard that misses miss_limit-1 beats then answers one (even slowly)
+    starts over from zero misses."""
+    events = (FaultEvent("shard0.heartbeat", 1, "stall", 0.01),
+              FaultEvent("shard0.heartbeat", 2, "stall", 0.01),
+              FaultEvent("shard0.heartbeat", 3, "slow", 0.5),  # succeeds late
+              FaultEvent("shard0.heartbeat", 4, "stall", 0.01),
+              FaultEvent("shard0.heartbeat", 5, "stall", 0.01))
+    inj = FaultInjector(FaultSchedule(events=events), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            CFG, TierConfig(n_shards=1, heartbeat_miss_limit=3,
+                            auto_recover=False), d, faults=inj)
+        tier.ingest(_stream(50))
+        for _ in range(5):
+            tier.check_health()
+        # 2 misses, slow success (reset), 2 misses: never reaches 3
+        assert tier.membership()[0] == "up"
+        assert tier._miss[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# Retry exhaustion: degraded answers, never an exception
+# ---------------------------------------------------------------------------
+
+
+def test_retry_exhaustion_auto_query_degrades_not_raises():
+    # stalls long past the call deadline: the ingest call's retry budget
+    # expires with shard 1 still unreachable -> marked down, and auto-mode
+    # queries must DEGRADE (coverage-stamped, HT-scaled), not raise
+    stalls = tuple(FaultEvent("shard1.ingest", n, "stall", 10.0)
+                   for n in range(1, 6))
+    inj = FaultInjector(FaultSchedule(events=stalls), VirtualClock())
+    with tempfile.TemporaryDirectory() as d:
+        tier = ShardTier(
+            CFG, TierConfig(n_shards=3, retain_wal=True,
+                            auto_recover=False), d, faults=inj)
+        for i in range(4):
+            tier.ingest(_stream(120, stream_id=i))
+        assert tier.membership()[1] == "down"
+        res = tier.query_batch(QUERIES, mode="auto")
+        assert res.degraded and res.mode == "approx"
+        live = sum(tier._routed[s] for s in tier.live_shards())
+        total = sum(tier._routed)
+        assert res.coverage == pytest.approx(live / total)
+        assert res.staleness_elements == total - live
+        assert np.all(np.isfinite(res.estimates))
+
+
+@pytest.mark.parametrize("down_set", [(1,), (0, 2), (1, 2, 3)])
+def test_degraded_coverage_matches_live_shard_set(down_set):
+    """Property: coverage equals the live-shard routed fraction for every
+    down-set, and recovery restores coverage 1."""
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, n_shards=4, auto_recover=False)
+        for i in range(6):
+            tier.ingest(_stream(150, stream_id=i))
+        for s in down_set:
+            tier.kill_shard(s)
+        tier.check_health()
+        res = tier.query_batch(QUERIES, mode="auto")
+        live = [s for s in range(4) if s not in down_set]
+        assert set(tier.live_shards()) == set(live)
+        total = sum(tier._routed)
+        covered = sum(tier._routed[s] for s in live)
+        assert res.degraded and res.coverage == pytest.approx(covered / total)
+        assert res.staleness_elements == total - covered
+        for s in down_set:
+            assert tier.recover_shard(s)
+        assert tier.query_batch(QUERIES, mode="auto").coverage == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Background exact-merge cadence + snapshot queries
+# ---------------------------------------------------------------------------
+
+
+def test_merge_cadence_requires_retain_wal():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="retain_wal"):
+            ShardTier(CFG, TierConfig(n_shards=2, retain_wal=False,
+                                      merge_every_n_batches=4), d)
+
+
+def test_merge_cadence_builds_and_refreshes_snapshot():
+    batches = [_stream(100, stream_id=i) for i in range(4)]
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d + "/t", n_shards=2, merge_every_n_batches=2)
+        with pytest.raises(ExactUnavailable):
+            tier.query_batch(QUERIES, mode="snapshot")  # nothing merged yet
+        tier.ingest(batches[0])
+        assert tier._snapshot is None  # 1 < cadence
+        tier.ingest(batches[1])
+        assert tier._n_merges == 1 and tier.snapshot_staleness() == 0
+        snap0 = tier.query_batch(QUERIES, mode="snapshot")
+        assert snap0.mode == "snapshot" and not snap0.degraded
+        assert snap0.coverage == 1.0 and snap0.staleness_elements == 0
+        # the snapshot IS the exact answer as of its watermark: pin against
+        # an oracle tier that stopped at the watermark
+        oracle = _mk_tier(d + "/o", n_shards=2)
+        oracle.ingest(batches[0])
+        oracle.ingest(batches[1])
+        want = oracle.query_batch(QUERIES, mode="exact")
+        np.testing.assert_array_equal(snap0.estimates, want.estimates)
+        # a batch past the watermark: served stale (stamped), not rebuilt
+        tier.ingest(batches[2])
+        snap1 = tier.query_batch(QUERIES, mode="snapshot")
+        assert snap1.staleness_elements == len(batches[2])
+        np.testing.assert_array_equal(snap1.estimates, snap0.estimates)
+        assert tier.snapshot_staleness() == len(batches[2])
+        # cadence rolls over: next batch refreshes
+        tier.ingest(batches[3])
+        assert tier._n_merges == 2
+        assert tier.query_batch(QUERIES, mode="snapshot").staleness_elements == 0
+
+
+def test_merge_every_s_cadence_on_clock():
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, n_shards=2, merge_every_s=1.0)
+        tier.ingest(_stream(80, stream_id=0))
+        assert tier._n_merges == 0  # no time elapsed on the virtual clock
+        tier.clock.sleep(1.5)
+        tier.ingest(_stream(80, stream_id=1))
+        assert tier._n_merges == 1
+
+
+def test_merge_skipped_while_shard_down_keeps_serving_stale():
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, n_shards=2, merge_every_n_batches=1,
+                        auto_recover=False)
+        tier.ingest(_stream(90, stream_id=0))
+        assert tier._n_merges == 1
+        stale_before = tier.query_batch(QUERIES, mode="snapshot")
+        tier.kill_shard(0)
+        tier.ingest(_stream(90, stream_id=1))  # cadence due, but shard down
+        assert tier._n_merges == 1 and tier._n_merges_skipped >= 1
+        assert any(e[2] == "merge_skipped" for e in tier.events)
+        # the OLD snapshot keeps answering, stamped stale, not degraded
+        res = tier.query_batch(QUERIES, mode="snapshot")
+        assert res.staleness_elements > 0 and not res.degraded
+        np.testing.assert_array_equal(res.estimates, stale_before.estimates)
+        # recovery un-wedges the cadence on the next batch
+        assert tier.recover_shard(0)
+        tier.ingest(_stream(90, stream_id=2))
+        assert tier._n_merges == 2
+
+
+# ---------------------------------------------------------------------------
+# Status plane
+# ---------------------------------------------------------------------------
+
+
+def test_status_plane_accounting_and_serializable():
+    import json as _json
+    with tempfile.TemporaryDirectory() as d:
+        tier = _mk_tier(d, n_shards=3, auto_recover=False)
+        for i in range(5):
+            tier.ingest(_stream(200, stream_id=i))
+        st = tier.status()
+        assert st["n_observed"] == tier.n_observed == 1000
+        assert sum(s["load"] for s in st["shards"].values()) == 1000
+        assert sum(s["share"] for s in st["shards"].values()) == pytest.approx(1.0)
+        assert st["coverage"] == 1.0 and st["snapshot"] is None
+        for s in range(3):
+            w = tier.workers[s]
+            assert st["shards"][s]["applied_seq"] == w.applied_seq
+            assert st["shards"][s]["wal_depth"] == len(w.wal.seqs())
+            assert st["shards"][s]["last_checkpoint_seq"] == w._last_ckpt_seq
+        _json.dumps(st)  # the plane is a scrape target: JSON all the way
+        # a down shard shows up in coverage, state, and the events feed
+        tier.kill_shard(2)
+        tier.check_health()
+        st2 = tier.status()
+        assert st2["shards"][2]["state"] == "down"
+        assert not st2["shards"][2]["alive"]
+        assert st2["coverage"] == pytest.approx(
+            (tier._routed[0] + tier._routed[1]) / 1000)
+        assert any(e[2] == "down" for e in st2["events"])
+        _json.dumps(st2)

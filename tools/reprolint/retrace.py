@@ -46,6 +46,8 @@ _EXACTLY_ONCE = (
 _EXACTLY_ZERO = (
     "shardtier.steady_new_compiles",
     "shardtier.recover_replay_new_compiles",
+    "procshard.steady_new_compiles",
+    "procshard.recover_new_compiles",
 )
 
 
@@ -183,6 +185,58 @@ def _audit_shardtier() -> dict[str, int]:
     }
 
 
+def _audit_procshard() -> dict[str, int]:
+    """Out-of-process tier (stats/procshard.py): COORDINATOR-side deltas.
+
+    The worker subprocesses have their own jit caches (audited implicitly —
+    each runs the same ShardWorker the shardtier workload covers); what this
+    workload pins is the coordinator: steady-state routed ingest + merged
+    queries over REAL subprocess workers must add zero cache entries after
+    warmup, and a real SIGKILL + supervised restart + recover RPC —
+    the process-mode recovery path — must also add ZERO coordinator-side.
+    Recovery is wire + filesystem work (WAL tail check, respawn, one RPC,
+    state_dict rebuild); if it starts compiling, every crash pays a
+    coordinator recompile storm on top of the worker's cold start."""
+    import tempfile
+
+    from repro.core import incremental as inc
+    from repro.stats import query as Q
+    from repro.stats.procshard import ProcShardTier, SupervisorConfig
+    from repro.stats.service import StatsConfig
+    from repro.stats.shardtier import TierConfig
+
+    s = _SMOKE
+    tracked = (inc._update_multi_donated, inc._update_multi_fresh,
+               inc._final_evict_multi, Q._dispatch)
+
+    def snap() -> int:
+        return sum(_cache_size(f) for f in tracked)
+
+    with tempfile.TemporaryDirectory() as d:
+        with ProcShardTier(
+                StatsConfig(k=s["k"], ls=(2.0, 8.0), chunk=s["chunk"]),
+                TierConfig(n_shards=2, checkpoint_every=2, retain_wal=True,
+                           fsync=False, auto_recover=False),
+                d, supervisor=SupervisorConfig(restart_backoff_s=0.05)) as tier:
+            for b in range(s["batches"]):
+                tier.ingest(_keys(s["batch"], b * s["batch"]))
+            tier.query_cap(2.0)
+            warm = snap()
+            tier.ingest(_keys(s["batch"], 99_000))
+            tier.query_cap(2.0)
+            steady_delta = snap() - warm
+
+            pre = snap()
+            tier.kill_shard(0)  # real SIGKILL
+            tier.recover_shard(0)  # respawn + recover RPC
+            tier.query_cap(2.0)
+            recover_delta = snap() - pre
+    return {
+        "procshard.steady_new_compiles": steady_delta,
+        "procshard.recover_new_compiles": recover_delta,
+    }
+
+
 def _audit_chunksort() -> dict[str, int]:
     """Pallas chunk-order sort: one compile per tile config / padded shape.
 
@@ -206,6 +260,7 @@ WORKLOADS: dict[str, Callable[[], dict[str, int]]] = {
     "serve": _audit_serve,
     "query": _audit_query,
     "shardtier": _audit_shardtier,
+    "procshard": _audit_procshard,
     "chunksort": _audit_chunksort,
 }
 
